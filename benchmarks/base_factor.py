@@ -1,0 +1,30 @@
+"""Table 3 reproduction (trend): base-factor selection at B=8.
+
+The paper trains ResNet-50/ImageNet; here the CPU-scale LM plays that role:
+for each γ we train with forward+backward quantization at (8, γ) and report
+the final loss. The paper's findings to reproduce: γ=1 diverges (NaN-level),
+mid γ (4-16) works best, γ=32's narrow dynamic range degrades again.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, train_tiny_lm
+from repro.core.lns import LNSFormat
+from repro.core.quantizer import QuantConfig
+
+
+def run(steps: int = 50) -> list[str]:
+    rows = []
+    for gamma in (1, 2, 4, 8, 16, 32):
+        fmt = LNSFormat(bits=8, gamma=gamma)
+        qcfg = QuantConfig(weight=fmt, act=fmt, err=fmt, grad=fmt,
+                           update=fmt.with_bits(16))
+        t0 = time.monotonic()
+        losses = train_tiny_lm(qcfg, steps=steps)
+        us = (time.monotonic() - t0) * 1e6 / steps
+        final = sum(losses[-5:]) / 5
+        rows.append(csv_row(
+            f"table3_gamma_{gamma}", us,
+            f"final_loss={final:.4f} range=(0,{fmt.dynamic_range:.3g})"))
+    return rows

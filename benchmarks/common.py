@@ -1,0 +1,76 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import TINY_LM
+from repro.core.quantizer import QuantConfig
+from repro.optim.madam import MadamConfig
+from repro.training import build_train_step, init_train_state
+from repro.training.data import SyntheticLM
+
+__all__ = ["timed", "train_tiny_lm", "csv_row"]
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6  # us per call
+
+
+def train_tiny_lm(qcfg: QuantConfig, *, optimizer="madam", steps=60,
+                  lr=2.0 ** -6, seed=0, cfg=TINY_LM, batch=16, seq=32,
+                  update_fmt=None) -> List[float]:
+    """Train the CPU-scale LM for a few steps; returns the loss curve.
+
+    ``optimizer``: "madam" (LNS-native) or "sgd_q"/"adamw_q" (Eq.-4
+    quantized-update baselines used by the Fig.-7 comparison).
+    """
+    data = SyntheticLM(cfg, batch=batch, seq=seq, seed=seed)
+    losses = []
+    if optimizer == "madam":
+        mcfg = MadamConfig(lr=lr, update_format=update_fmt) if update_fmt \
+            else MadamConfig(lr=lr)
+        state = init_train_state(jax.random.PRNGKey(seed), cfg, mcfg)
+        step = jax.jit(build_train_step(cfg, qcfg, mcfg))
+        for i, b in zip(range(steps), data):
+            state, m = step(state, jax.tree.map(jnp.asarray, b))
+            losses.append(float(m["loss"]))
+        return losses
+
+    # fp-weight baselines with the Eq.-4 quantized-update wrapper
+    from repro.core.quantizer import quantize_grads
+    from repro.models import init_params, lm_loss
+    from repro.optim import adamw, quantized_update, sgd
+    opt = {"sgd": sgd(lr=0.3, weight_decay=0.0),
+           "adamw": adamw(lr=3e-3)}[optimizer.split("_")[0]]
+    if optimizer.endswith("_q"):
+        opt = quantized_update(opt, update_fmt)
+    init, update = opt
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    st = init(params)
+
+    @jax.jit
+    def step(params, st, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg, qcfg, remat=False))(params)
+        grads = quantize_grads(grads, qcfg)
+        params, st = update(grads, st, params)
+        return params, st, loss
+
+    for i, b in zip(range(steps), data):
+        params, st, loss = step(params, st, jax.tree.map(jnp.asarray, b))
+        losses.append(float(loss))
+    return losses
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

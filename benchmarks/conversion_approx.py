@@ -1,0 +1,54 @@
+"""Table 10 reproduction: conversion-approximation LUT sweep.
+
+Two halves:
+  * accuracy — approximation-aware training of the CPU-scale LM with the
+    hybrid Mitchell/LUT decode simulated inside every forward GEMM
+    (LUT = 1/2/4/8); claim: negligible accuracy loss at any LUT size.
+  * energy — the per-op cost of each setting from the calibrated datapath
+    model (the paper's measured 12.29..19.02 fJ/op row).
+Also benchmarks the bit-exact Pallas kernel at each LUT size.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timed, train_tiny_lm
+from repro.core.energy import DATAPATH_FJ_PER_OP
+from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
+from repro.core.quantizer import QuantConfig
+from repro.kernels.lns_matmul import lns_matmul_pallas
+
+
+def run(steps: int = 40) -> list[str]:
+    rows = []
+    for lut in (1, 2, 4, 8):
+        qcfg = QuantConfig.lns_madam(approx_lut=lut)
+        t0 = time.monotonic()
+        losses = train_tiny_lm(qcfg, steps=steps, batch=8, seq=16)
+        us = (time.monotonic() - t0) * 1e6 / steps
+        fj = DATAPATH_FJ_PER_OP[f"lns8_lut{lut}"]
+        rows.append(csv_row(
+            f"table10_lut{lut}", us,
+            f"final_loss={sum(losses[-5:]) / 5:.4f} energy_fj_per_op={fj}"))
+
+    # kernel-level: bit-exact datapath at each LUT size (interpret mode)
+    fmt = LNSFormat(bits=8, gamma=8)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (128, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (64, 128))
+    sa, sb = compute_scale(a), compute_scale(b)
+    pa = lns_pack(*lns_encode(a, fmt, sa), fmt)
+    pb = lns_pack(*lns_encode(b, fmt, sb), fmt)
+    exact = jnp.dot(a, b)
+    for lut in (1, 2, 4, 8):
+        out = lns_matmul_pallas(pa, pb, fmt, lut_entries=lut, block_k=16)
+        val = out.astype(jnp.float32) * sa * sb / (1 << 16)
+        err = float(jnp.max(jnp.abs(val - exact)) / jnp.max(jnp.abs(exact)))
+        us = timed(lambda: lns_matmul_pallas(pa, pb, fmt, lut_entries=lut,
+                                             block_k=16), iters=2)
+        rows.append(csv_row(f"table10_kernel_lut{lut}", us,
+                            f"rel_err_vs_fp32={err:.4f}"))
+    return rows

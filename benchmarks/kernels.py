@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks (interpret mode): wall time is NOT TPU-meaningful
+on CPU; the derived columns report the *structural* numbers that matter —
+bytes moved per element (the LNS bandwidth win) and accuracy vs fp32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timed
+from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
+from repro.kernels import lns_qmatmul, madam_step, quantize_pack
+
+FMT = LNSFormat(bits=8, gamma=8)
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    M = K = N = 256
+    a = jax.random.normal(key, (M, K))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (K, N))
+    sa, sb = compute_scale(a), compute_scale(b)
+    pa = lns_pack(*lns_encode(a, FMT, sa), FMT)
+    pb = lns_pack(*lns_encode(b, FMT, sb), FMT)
+
+    out = lns_qmatmul(pa, pb, FMT, sa, sb)
+    exact = jnp.dot(a, b)
+    rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))
+    us = timed(lambda: lns_qmatmul(pa, pb, FMT, sa, sb), iters=2)
+    hbm_ratio = (pa.size + pb.size) / ((a.size + b.size) * 2)  # vs bf16
+    rows.append(csv_row("qmatmul_256", us,
+                        f"rel_err={rel:.4f} operand_bytes_vs_bf16={hbm_ratio:.2f}"))
+
+    x = jax.random.normal(key, (512, 512))
+    us = timed(lambda: quantize_pack(x, FMT, scale_axis=0), iters=2)
+    rows.append(csv_row("quantize_pack_512", us, "bytes_out_per_elem=1"))
+
+    code = jnp.zeros((512, 512), jnp.int16)
+    sign = jnp.ones((512, 512), jnp.int8)
+    g = jax.random.normal(key, (512, 512))
+    v = jnp.ones((512, 512))
+    ufmt = LNSFormat(bits=16, gamma=2048)
+    us = timed(lambda: madam_step(code, sign, g, v, jnp.asarray(1), ufmt,
+                                  lr=2.0 ** -7), iters=2)
+    rows.append(csv_row("madam_step_512", us,
+                        "hbm_per_param_bytes=3r+8rw (code+sign+g+v)"))
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Fast subset by default; pass
+``--full`` for the longer training sweeps used in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer training sweeps (EXPERIMENTS.md numbers)")
+    ap.add_argument("--only", default=None, help="comma-list of modules")
+    args = ap.parse_args()
+
+    from benchmarks import (base_factor, bitwidth_sweep, conversion_approx,
+                            energy, format_comparison, kernels, quant_error,
+                            update_precision)
+
+    steps = 60 if args.full else 25
+    suites = {
+        "quant_error": lambda: quant_error.run(trials=24 if args.full else 8),
+        "base_factor": lambda: base_factor.run(steps=steps),
+        "format_comparison": lambda: format_comparison.run(steps=steps),
+        "update_precision": lambda: update_precision.run(steps=steps),
+        "bitwidth_sweep": lambda: bitwidth_sweep.run(steps=steps),
+        "conversion_approx": lambda: conversion_approx.run(
+            steps=30 if args.full else 10),
+        "energy": energy.run,
+        "kernels": kernels.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},NaN,SUITE FAILED", flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Tables 5 + Fig. 7 reproduction (trend): weight-update precision.
+
+Table 5: LNS-Madam at 16-bit vs 32-bit Q_U — degradation should be small.
+Fig. 7: Madam vs SGD/AdamW under the Eq.-4 logarithmic quantized weight
+update as Q_U shrinks 16 -> 10 bits — Madam must degrade most gracefully.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, train_tiny_lm
+from repro.core.lns import LNSFormat
+from repro.core.quantizer import QuantConfig
+
+
+def run(steps: int = 50) -> list[str]:
+    rows = []
+    base = QuantConfig.lns_madam()
+
+    # ---- Table 5: Q_U bitwidth for LNS-Madam
+    for bits in (32, 16):
+        fmt = LNSFormat(bits=8, gamma=8).with_bits(bits)
+        t0 = time.monotonic()
+        losses = train_tiny_lm(base, steps=steps, update_fmt=fmt)
+        us = (time.monotonic() - t0) * 1e6 / steps
+        rows.append(csv_row(f"table5_lns_madam_u{bits}", us,
+                            f"final_loss={sum(losses[-5:]) / 5:.4f}"))
+
+    # ---- Fig. 7: optimizers under quantized weight update, 16 -> 10 bit
+    for bits in (16, 12, 10):
+        fmt = LNSFormat(bits=8, gamma=8).with_bits(bits)
+        for opt in ("madam", "sgd_q", "adamw_q"):
+            t0 = time.monotonic()
+            losses = train_tiny_lm(base, optimizer=opt, steps=steps,
+                                   update_fmt=fmt)
+            us = (time.monotonic() - t0) * 1e6 / steps
+            rows.append(csv_row(
+                f"fig7_{opt}_u{bits}", us,
+                f"final_loss={sum(losses[-5:]) / 5:.4f}"))
+    return rows

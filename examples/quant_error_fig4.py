@@ -1,0 +1,44 @@
+"""Reproduce Fig. 4: weight-update quantization error, GD vs multiplicative.
+
+Prints the r_t tables over the learning-rate and base-factor sweeps and the
+theoretical bounds of Theorems 1/2 + Lemma 1 next to the measurements.
+
+  PYTHONPATH=src python examples/quant_error_fig4.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import error_analysis as ea
+
+key = jax.random.PRNGKey(0)
+d = 2048
+w = jnp.exp2(jax.random.normal(key, (d,)) * 2.0)  # magnitudes over decades
+g2 = jnp.full((d,), 0.003 ** 2)
+
+print(f"{'setting':<16s} {'gd':>10s} {'mul':>10s} {'signmul':>10s} "
+      f"{'madam':>10s}   bounds(gd/mul/sign)")
+for label, eta, gamma in [
+    ("eta=2^-8", 2.0 ** -8, 2.0 ** 10),
+    ("eta=2^-6", 2.0 ** -6, 2.0 ** 10),
+    ("eta=2^-4", 2.0 ** -4, 2.0 ** 10),
+    ("gamma=2^6", 2.0 ** -6, 2.0 ** 6),
+    ("gamma=2^10", 2.0 ** -6, 2.0 ** 10),
+    ("gamma=2^14", 2.0 ** -6, 2.0 ** 14),
+]:
+    acc = {k: 0.0 for k in ("gd", "mul", "signmul", "madam")}
+    trials = 16
+    for t in range(trials):
+        g = jax.random.normal(jax.random.fold_in(key, t), (d,)) * 0.003
+        out = ea.measure_all(jax.random.fold_in(key, 777 + t), w, g, eta,
+                             gamma, g2)
+        for k in acc:
+            acc[k] += float(out[k]) / trials
+    g = jax.random.normal(jax.random.fold_in(key, 0), (d,)) * 0.003
+    b = ea.theoretical_bounds(w, g, eta, gamma)
+    print(f"{label:<16s} {acc['gd']:10.3e} {acc['mul']:10.3e} "
+          f"{acc['signmul']:10.3e} {acc['madam']:10.3e}   "
+          f"{float(b['gd']):.2e}/{float(b['mul']):.2e}/{float(b['signmul']):.2e}")
+
+print("\nPaper's claim (Fig. 4): multiplicative updates give orders-of-"
+      "magnitude lower r_t than GD, and r_t shrinks with smaller eta / "
+      "larger gamma.")

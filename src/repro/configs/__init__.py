@@ -1,0 +1,124 @@
+"""Architecture registry + input-shape sets + dry-run input specs.
+
+``get_config(arch)`` / ``get_smoke_config(arch)`` / ``get_rules(arch)``
+resolve the ten assigned architectures; ``SHAPES`` holds the four assigned
+input-shape sets; ``input_specs(cfg, shape)`` builds the ShapeDtypeStruct
+stand-ins the dry-run lowers against (weak-type-correct, shardable, no
+device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "get_smoke_config", "get_rules",
+           "input_specs", "cells", "runs_shape"]
+
+# arch id -> module name
+ARCHS: Dict[str, str] = {
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "granite-8b": "granite_8b",
+    "smollm-135m": "smollm_135m",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "zamba2-7b": "zamba2_7b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; one of {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ArchConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ArchConfig:
+    return _module(arch).SMOKE
+
+
+def get_rules(arch: str) -> Dict:
+    return dict(getattr(_module(arch), "RULES", {}))
+
+
+def runs_shape(cfg: ArchConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if shape == "long_500k":
+        return cfg.is_subquadratic
+    return True
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; skipped long_500k cells optional."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if runs_shape(cfg, shape) or include_skipped:
+                out.append((arch, shape))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: str | ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the step function's batch argument.
+
+    train:   tokens+labels over the full sequence
+    prefill: tokens over the full sequence
+    decode:  one new token (the KV cache of ``seq_len`` is built separately
+             by ``launch.dryrun``; ``seq_len`` here sizes that cache)
+    """
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+
+    tok_shape = (B, S)
+    if cfg.num_codebooks:
+        tok_shape = (B, S, cfg.num_codebooks)
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if spec.kind == "decode":
+        dec_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1)
+        out["tokens"] = jax.ShapeDtypeStruct(dec_shape, i32)
+        return out
+
+    if cfg.num_patches:  # phi3v: patches + text fill the sequence budget
+        s_text = S - cfg.num_patches
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+        out["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        if spec.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return out
+
+    out["tokens"] = jax.ShapeDtypeStruct(tok_shape, i32)
+    if spec.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(tok_shape, i32)
+    return out

@@ -1,0 +1,40 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table config).
+
+[arXiv: Kimi K2] 61L d_model=7168 64H (GQA kv=8, head_dim=128)
+expert d_ff=2048 vocab=163840, 384 routed experts top-8 + 1 shared,
+first layer dense. ~1.03T total / ~32B active parameters.
+
+Scale notes (DESIGN.md §8): expert tensors shard over experts->model AND
+d_ff->data (FSDP) so packed 16-bit LNS codes come to ~8 GB/chip on the
+single-pod mesh; the second moment is Adafactor-factored (beyond-paper
+scaling feature, see optim.madam factored mode).
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,             # dense-layer / shared-expert width (assignment)
+    vocab_size=163840,
+    num_experts=384,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    num_dense_layers=1,
+    moe_dispatch="sort",
+    rope_theta=5e4,
+)
+
+SMOKE = ArchConfig(
+    name="kimi-smoke", family="moe", num_layers=3, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=96, vocab_size=512,
+    num_experts=8, experts_per_token=2, num_shared_experts=1, moe_d_ff=96,
+    num_dense_layers=1, moe_dispatch="sort", dtype="float32",
+)
+
+RULES = {"moe_ff": "data"}  # FSDP the expert d_ff axis

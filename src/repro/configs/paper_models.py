@@ -1,0 +1,26 @@
+"""Paper-benchmark model shapes (not part of the assigned pool).
+
+``bert_base`` / ``bert_large`` shaped configs back the paper's Table-4/8
+energy+accuracy rows (MAC counts / CPU-scale trend runs); ``tiny_lm`` is the
+few-M-parameter LM used by the accuracy-trend benchmarks (Tables 4-6,
+Fig. 7) that actually *trains* on CPU in this container.
+"""
+from repro.models.common import ArchConfig
+
+BERT_BASE = ArchConfig(
+    name="bert_base", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=30522,
+    mlp_gated=False, act_fn="gelu",
+)
+
+BERT_LARGE = ArchConfig(
+    name="bert_large", family="dense", num_layers=24, d_model=1024,
+    num_heads=16, num_kv_heads=16, head_dim=64, d_ff=4096, vocab_size=30522,
+    mlp_gated=False, act_fn="gelu",
+)
+
+TINY_LM = ArchConfig(
+    name="tiny_lm", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512,
+    tie_embeddings=True, dtype="float32",
+)

@@ -1,0 +1,29 @@
+"""qwen2.5-32b — GQA with QKV bias.
+
+[hf:Qwen/Qwen2.5-*] 64L d_model=5120 40H (GQA kv=8, head_dim=128)
+d_ff=27648 vocab=152064. 40 heads don't divide a 16-way model axis, so
+attention runs sequence-parallel (DESIGN.md §4).
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2.5-smoke", family="dense", num_layers=3, d_model=64,
+    num_heads=5, num_kv_heads=1, head_dim=16, d_ff=160, vocab_size=512,
+    qkv_bias=True, rope_theta=1e6, dtype="float32",
+)
+
+RULES = {}

@@ -1,0 +1,36 @@
+"""smollm-135m — small llama-architecture model.
+
+[hf:HuggingFaceTB/SmolLM-135M] 30L d_model=576 9H (GQA kv=3, head_dim=64)
+d_ff=1536 vocab=49152, tied embeddings. 9 heads -> sequence-parallel
+attention on a 16-way model axis.
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m",
+    family="dense",
+    num_layers=30,
+    d_model=576,
+    num_heads=9,
+    num_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="smollm-smoke", family="dense", num_layers=3, d_model=48,
+    num_heads=3, num_kv_heads=1, head_dim=16, d_ff=128, vocab_size=512,
+    tie_embeddings=True, dtype="float32",
+)
+
+# §Perf-adopted config: a 135M model has no business being 16-way tensor
+# parallel — pure data parallelism over the whole mesh drops the collective
+# term 132x and lifts the roofline fraction 3.4x (see EXPERIMENTS.md §Perf).
+RULES = {
+    "batch": ("pod", "data", "model"),
+    "mlp": None, "heads": None, "qkv_out": None, "vocab": None,
+    "act_ff": None, "act_heads": None, "seq_shard": None,
+}

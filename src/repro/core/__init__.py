@@ -1,0 +1,16 @@
+"""LNS-Madam core: the paper's contribution as composable JAX modules."""
+from repro.core.lns import LNSFormat, compute_scale, lns_decode, lns_encode, lns_quantize
+from repro.core.quantizer import QuantConfig, backward_quantize, qeinsum, quantize_grads, ste_quantize
+
+__all__ = [
+    "LNSFormat",
+    "QuantConfig",
+    "compute_scale",
+    "lns_encode",
+    "lns_decode",
+    "lns_quantize",
+    "qeinsum",
+    "ste_quantize",
+    "backward_quantize",
+    "quantize_grads",
+]

@@ -1,0 +1,231 @@
+"""LNS <-> integer (linear) conversion — paper §2.2, §2.3, Appendix B.
+
+The expensive step of an LNS dot product is converting the product exponent
+``2**(p/γ)`` to linear form for accumulation. The paper decomposes
+
+    2**(p/γ) = 2**q · 2**(r/γ),   q = p >> b,  r = p & (γ-1),  γ = 2**b
+
+so the conversion is a shift (quotient) plus a γ-entry lookup (remainder),
+optionally shrunk further by the *hybrid* Mitchell approximation (App. B):
+
+    2**(r/γ) = 2**(r_M/γ) · 2**(r_L/γ) ≈ 2**(r_M/γ) · (1 + r_L/γ)
+
+with the remainder split into ``b_m`` MSBs (LUT of 2**b_m entries) and
+``b_l = b - b_m`` LSBs (Mitchell). ``lut_entries = 2**b_m``; ``lut_entries ==
+γ`` recovers the exact conversion and ``lut_entries == 1`` is pure Mitchell.
+
+These functions use the *positive-exponent* convention of the hardware
+(value = 2**(+p/γ)); the storage format in :mod:`repro.core.lns` negates
+exponents, so call sites offset by the maximum code (offset-binary), exactly
+like the RTL datapath.
+
+Both float and bit-exact integer fixed-point flavours are provided; the
+Pallas kernels mirror the integer flavour.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "remainder_lut",
+    "remainder_lut_int",
+    "remainder_lut_neg",
+    "remainder_lut_neg_int",
+    "remainder_lut_neg_shifted_int",
+    "exp2_exact",
+    "exp2_hybrid",
+    "exp2_exact_fixed",
+    "exp2_hybrid_fixed",
+    "exp2_neg_exact_fixed",
+    "exp2_neg_hybrid_fixed",
+    "approx_decode_factor",
+]
+
+
+def _check(gamma: int, lut_entries: int | None = None) -> int:
+    if gamma < 1 or gamma & (gamma - 1):
+        raise ValueError(f"gamma must be a power of two, got {gamma}")
+    b = int(gamma).bit_length() - 1
+    if lut_entries is not None:
+        if lut_entries < 1 or lut_entries & (lut_entries - 1) or lut_entries > gamma:
+            raise ValueError(
+                f"lut_entries must be a power of two in [1, gamma], got {lut_entries}"
+            )
+    return b
+
+
+def remainder_lut(gamma: int, lut_entries: int | None = None) -> np.ndarray:
+    """The γ (or 2**b_m) remainder constants ``2**(i·step/γ)``.
+
+    With ``lut_entries == gamma`` these are the paper's §2.2 constants
+    ``2**(i/γ), i in [0, γ)``; with fewer entries they cover the remainder
+    MSBs (step = γ / lut_entries).
+    """
+    b = _check(gamma, lut_entries)
+    n = gamma if lut_entries is None else lut_entries
+    step = gamma // n
+    return np.exp2(np.arange(n) * step / gamma).astype(np.float32)
+
+
+def remainder_lut_int(gamma: int, frac_bits: int, lut_entries: int | None = None) -> np.ndarray:
+    """Fixed-point LUT: ``round(2**(i·step/γ) · 2**frac_bits)`` (int32)."""
+    return np.round(remainder_lut(gamma, lut_entries) * (1 << frac_bits)).astype(np.int32)
+
+
+def exp2_exact(p: jax.Array, gamma: int) -> jax.Array:
+    """Exact conversion 2**(p/γ) via quotient shift + remainder LUT (float).
+
+    ``p`` is a non-negative integer exponent array.
+    """
+    b = _check(gamma)
+    p = p.astype(jnp.int32)
+    q = p >> b
+    r = p & (gamma - 1)
+    lut = jnp.asarray(remainder_lut(gamma))
+    return jnp.exp2(q.astype(jnp.float32)) * lut[r]
+
+
+def exp2_hybrid(p: jax.Array, gamma: int, lut_entries: int) -> jax.Array:
+    """Hybrid Mitchell/LUT conversion (paper Eq. 16), float flavour.
+
+    2**(p/γ) ≈ 2**q · LUT[r_M] · (1 + r_L/γ).
+    """
+    b = _check(gamma, lut_entries)
+    p = p.astype(jnp.int32)
+    q = p >> b
+    r = p & (gamma - 1)
+    b_l = b - (int(lut_entries).bit_length() - 1)
+    r_m = r >> b_l
+    r_l = r & ((1 << b_l) - 1)
+    lut = jnp.asarray(remainder_lut(gamma, lut_entries))
+    mitchell = 1.0 + r_l.astype(jnp.float32) / gamma
+    return jnp.exp2(q.astype(jnp.float32)) * lut[r_m] * mitchell
+
+
+def exp2_exact_fixed(p: jax.Array, gamma: int, frac_bits: int = 16) -> jax.Array:
+    """Bit-exact integer datapath: ``(LUT_int[r] << q)`` (int32).
+
+    Mirrors the Fig. 6 shift-then-LUT-multiply order used by the Pallas
+    kernel. Result is the linear value in ``frac_bits`` fixed point; callers
+    must keep ``q + frac_bits + log2(max LUT) < 31``.
+    """
+    b = _check(gamma)
+    p = p.astype(jnp.int32)
+    q = p >> b
+    r = p & (gamma - 1)
+    lut = jnp.asarray(remainder_lut_int(gamma, frac_bits))
+    return jax.lax.shift_left(lut[r], q)
+
+
+def exp2_hybrid_fixed(p: jax.Array, gamma: int, lut_entries: int, frac_bits: int = 16) -> jax.Array:
+    """Bit-exact hybrid datapath (App. B): shift + small LUT + Mitchell add.
+
+    2**(p/γ)·2**F ≈ ((LUT_int[r_M]·(γ + r_L)) >> b) << q — the Mitchell term
+    (1 + r_L/γ) is an integer multiply-add followed by the base-factor shift.
+    """
+    b = _check(gamma, lut_entries)
+    p = p.astype(jnp.int32)
+    q = p >> b
+    r = p & (gamma - 1)
+    b_l = b - (int(lut_entries).bit_length() - 1)
+    r_m = r >> b_l
+    r_l = r & ((1 << b_l) - 1)
+    lut = jnp.asarray(remainder_lut_int(gamma, frac_bits, lut_entries))
+    v = lut[r_m] * (gamma + r_l)  # frac_bits + b fixed point
+    v = jax.lax.shift_right_logical(v, b)
+    return jax.lax.shift_left(v, q)
+
+
+def remainder_lut_neg(gamma: int, lut_entries: int | None = None) -> np.ndarray:
+    """Negative-convention constants ``2**(-i·step/γ)`` in (0.5, 1].
+
+    The storage format keeps negated exponents (value = s·2**(-e/γ)), so the
+    datapath kernels use these constants with a *right* shift by the
+    quotient — the offset-binary mirror of the RTL's left shift.
+    """
+    b = _check(gamma, lut_entries)
+    n = gamma if lut_entries is None else lut_entries
+    step = gamma // n
+    return np.exp2(-np.arange(n) * step / gamma).astype(np.float32)
+
+
+def remainder_lut_neg_int(gamma: int, frac_bits: int, lut_entries: int | None = None) -> np.ndarray:
+    """Fixed-point negative LUT: ``round(2**(-i·step/γ) · 2**frac_bits)``."""
+    return np.round(remainder_lut_neg(gamma, lut_entries) * (1 << frac_bits)).astype(np.int32)
+
+
+def exp2_neg_exact_fixed(m: jax.Array, gamma: int, frac_bits: int = 16) -> jax.Array:
+    """Bit-exact negative-exponent datapath: ``LUTneg_int[r] >> q`` (int32).
+
+    ``m`` is the non-negative *negated* product exponent (value 2**(-m/γ)).
+    The result is the linear value in ``frac_bits`` fixed point; quotients
+    beyond ``frac_bits`` underflow to 0 exactly like a fixed-point RTL
+    datapath drops sub-LSB products.
+    """
+    b = _check(gamma)
+    m = m.astype(jnp.int32)
+    q = jnp.minimum(m >> b, 31)
+    r = m & (gamma - 1)
+    lut = jnp.asarray(remainder_lut_neg_int(gamma, frac_bits))
+    return jax.lax.shift_right_logical(lut[r], q)
+
+
+def remainder_lut_neg_shifted_int(gamma: int, frac_bits: int,
+                                  lut_entries: int) -> np.ndarray:
+    """Offset LUT for the negative-convention hybrid: entry i holds
+    ``round(2**(-(i+1)·step/γ) · 2**frac_bits)`` — one LSB-interval beyond
+    the plain negative LUT, so Mitchell applies to a *positive* fraction."""
+    b = _check(gamma, lut_entries)
+    step = gamma // lut_entries
+    return np.round(
+        np.exp2(-(np.arange(lut_entries) + 1.0) * step / gamma)
+        * (1 << frac_bits)).astype(np.int32)
+
+
+def exp2_neg_hybrid_fixed(m: jax.Array, gamma: int, lut_entries: int, frac_bits: int = 16) -> jax.Array:
+    """Bit-exact hybrid (App. B) in the negative convention.
+
+    Mitchell's ``2**t ≈ 1+t`` only holds for t in [0,1), so the negated LSB
+    remainder is rewritten through its complement:
+
+        2**(-r_L/γ) = 2**(-2^b_l/γ) · 2**((2^b_l - r_L)/γ)
+                    ≈ 2**(-2^b_l/γ) · (1 + (2^b_l - r_L)/γ)
+
+    The constant folds into a one-interval-shifted LUT; the datapath is an
+    integer multiply-add, base-factor shift, then the quotient right-shift —
+    the exact mirror of the RTL's positive-convention datapath, same <=6.2%
+    worst-case Mitchell error.
+    """
+    b = _check(gamma, lut_entries)
+    m = m.astype(jnp.int32)
+    q = jnp.minimum(m >> b, 31)
+    r = m & (gamma - 1)
+    b_l = b - (int(lut_entries).bit_length() - 1)
+    r_m = r >> b_l
+    r_l = r & ((1 << b_l) - 1)
+    lut = jnp.asarray(remainder_lut_neg_shifted_int(gamma, frac_bits, lut_entries))
+    v = lut[r_m] * (gamma + (1 << b_l) - r_l)  # frac_bits + b fixed point
+    v = jax.lax.shift_right_logical(v, b)
+    return jax.lax.shift_right_logical(v, q)
+
+
+def approx_decode_factor(r: jax.Array, gamma: int, lut_entries: int) -> jax.Array:
+    """Multiplicative error factor of the hybrid conversion per remainder bin.
+
+    Returns ``approx(2**(r/γ)) / 2**(r/γ)`` for remainder ``r`` — used by the
+    approximation-aware-training simulation, which groups dot-product terms
+    by remainder bin and applies the bin's error factor (App. §.4).
+    """
+    b = _check(gamma, lut_entries)
+    r = r.astype(jnp.int32)
+    b_l = b - (int(lut_entries).bit_length() - 1)
+    r_m = r >> b_l
+    r_l = r & ((1 << b_l) - 1)
+    lut = jnp.asarray(remainder_lut(gamma, lut_entries))
+    approx = lut[r_m] * (1.0 + r_l.astype(jnp.float32) / gamma)
+    exact = jnp.exp2(r.astype(jnp.float32) / gamma)
+    return approx / exact

@@ -1,0 +1,89 @@
+"""Analytical energy model — paper §6.2 (Tables 8, 10; Figs. 2, 8, 9, 10).
+
+No RTL flow exists in this container, so the paper's energy results are
+reproduced through an analytical model calibrated to its published numbers:
+
+* **Per-op datapath energy** (fJ per MAC-equivalent op) comes from Table 10's
+  measured LNS row (12.29 / 14.71 / 17.24 / 19.02 fJ/op for LUT = 1/2/4/8)
+  and the §6.2 PE-level ratios (LNS : FP8 : FP16 : FP32 = 1 : 2.2 : 4.6 : 11).
+* **A single system-overhead factor κ** (buffers, accumulation collector,
+  PPU — the non-datapath slices of Fig. 8) is calibrated once against the
+  Table-8 ResNet-50 row. With κ = 4.23 the model reproduces all eight
+  Table-8 cells within ~20% (see ``benchmarks/energy.py`` which prints the
+  side-by-side table).
+
+Per-iteration energy = κ · 3 · MACs_fwd · e_op(format): one forward plus two
+backward GEMM passes (Table 2's three computation passes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+__all__ = [
+    "DATAPATH_FJ_PER_OP",
+    "SYSTEM_OVERHEAD",
+    "per_iteration_energy_mj",
+    "paper_table8",
+    "gpt_scaling",
+]
+
+# fJ per MAC-equivalent op, calibrated as documented above.
+_LNS_EXACT = 19.02  # Table 10, LUT=8 (exact conversion for γ=8)
+DATAPATH_FJ_PER_OP: Dict[str, float] = {
+    "lns8_lut1": 12.29,          # Table 10
+    "lns8_lut2": 14.71,
+    "lns8_lut4": 17.24,
+    "lns8_lut8": _LNS_EXACT,
+    "lns8": _LNS_EXACT,
+    "fp8": _LNS_EXACT * 2.2,     # §6.2 PE ratios
+    "fp16": _LNS_EXACT * 4.6,
+    "fp32": _LNS_EXACT * 11.0,
+}
+
+SYSTEM_OVERHEAD = 4.23  # κ, calibrated on Table 8 ResNet-50 / LNS = 0.99 mJ
+
+# fwd-pass GEMM MACs for the paper's models (per iteration, paper settings).
+PAPER_MODEL_MACS: Dict[str, float] = {
+    "resnet18": 1.82e9,    # 224x224 ImageNet single image
+    "resnet50": 4.09e9,
+    "bert_base": 3.61e10,  # seq 384: 86.1e6 GEMM params ·384 + attn 2.7e9
+    "bert_large": 1.24e11, # seq 384: 303e6 ·384 + attn 7.2e9
+}
+
+PAPER_TABLE8_MJ = {  # the paper's measured numbers, for the benchmark diff
+    "resnet18": {"lns8": 0.54, "fp8": 1.22, "fp16": 2.50, "fp32": 5.99},
+    "resnet50": {"lns8": 0.99, "fp8": 2.25, "fp16": 4.59, "fp32": 11.03},
+    "bert_base": {"lns8": 7.99, "fp8": 18.23, "fp16": 37.21, "fp32": 89.35},
+    "bert_large": {"lns8": 27.85, "fp8": 63.58, "fp16": 129.74, "fp32": 311.58},
+}
+
+
+def per_iteration_energy_mj(macs_fwd: float, fmt: str = "lns8") -> float:
+    """Energy (mJ) for one train iteration: fwd + bwd(input) + bwd(weight)."""
+    if fmt not in DATAPATH_FJ_PER_OP:
+        raise KeyError(f"unknown format {fmt!r}; one of {sorted(DATAPATH_FJ_PER_OP)}")
+    return SYSTEM_OVERHEAD * 3.0 * macs_fwd * DATAPATH_FJ_PER_OP[fmt] * 1e-15 * 1e3
+
+
+def paper_table8() -> Dict[str, Dict[str, float]]:
+    """Model predictions laid out like Table 8 (mJ per iteration)."""
+    return {
+        model: {fmt: per_iteration_energy_mj(macs, fmt) for fmt in ("lns8", "fp8", "fp16", "fp32")}
+        for model, macs in PAPER_MODEL_MACS.items()
+    }
+
+
+def gpt_scaling(tokens_per_iter: float = 2048.0) -> Dict[str, Dict[str, float]]:
+    """Fig. 10: per-iteration energy for GPT models 1B → 1T parameters.
+
+    fwd MACs ≈ N params per token (2N flops); per-iteration uses
+    ``tokens_per_iter`` tokens (batch 1 × seq 2048 by default, stated
+    assumption — the paper does not publish its batch).
+    """
+    sizes = {"gpt-1b": 1e9, "gpt-13b": 13e9, "gpt-175b": 175e9, "gpt-530b": 530e9, "gpt-1t": 1e12}
+    return {
+        name: {fmt: per_iteration_energy_mj(n * tokens_per_iter, fmt)
+               for fmt in ("lns8", "fp8", "fp16", "fp32")}
+        for name, n in sizes.items()
+    }

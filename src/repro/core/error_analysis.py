@@ -1,0 +1,114 @@
+"""Weight-update quantization-error analysis — paper §4.2, Fig. 4, App. A.
+
+Implements the simplified quantizer of Eq. 11 (no scale, no clamp,
+stochastic rounding) and the four learning rules (GD, MUL, signMUL, Madam),
+measuring  r_t = || log2|W_q| − log2|W_new| ||²  together with the
+theoretical bounds of Theorems 1/2 and Lemma 1. Used by
+``benchmarks/quant_error.py`` (Fig. 4) and ``tests/test_theory.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "simplified_qlog",
+    "update_gd",
+    "update_mul",
+    "update_signmul",
+    "update_madam",
+    "quant_error",
+    "theoretical_bounds",
+    "snap_to_grid",
+    "measure_all",
+]
+
+
+def simplified_qlog(key: jax.Array, x: jax.Array, gamma: float) -> jax.Array:
+    """Eq. 11: Q(x) = sign(x)·2**(SR(γ·log2|x|)/γ) — no scale, no clamp."""
+    mag = jnp.maximum(jnp.abs(x), jnp.finfo(jnp.float32).tiny)
+    e = gamma * jnp.log2(mag)
+    floor = jnp.floor(e)
+    p = jax.random.uniform(key, e.shape, dtype=e.dtype)
+    e_sr = floor + (p <= (e - floor)).astype(e.dtype)
+    return jnp.sign(x) * jnp.exp2(e_sr / gamma)
+
+
+def update_gd(w, g, eta):
+    """U_GD = W − η∇W."""
+    return w - eta * g
+
+
+def update_mul(w, g, eta):
+    """U_MUL (Eq. 6): sign(W) ⊙ 2**(W̃ − η ∇W ⊙ sign(W))."""
+    wt = jnp.log2(jnp.maximum(jnp.abs(w), jnp.finfo(jnp.float32).tiny))
+    return jnp.sign(w) * jnp.exp2(wt - eta * g * jnp.sign(w))
+
+
+def update_signmul(w, g, eta):
+    """U_signMUL (Lemma 1): only the sign of the gradient."""
+    wt = jnp.log2(jnp.maximum(jnp.abs(w), jnp.finfo(jnp.float32).tiny))
+    return jnp.sign(w) * jnp.exp2(wt - eta * jnp.sign(g) * jnp.sign(w))
+
+
+def update_madam(w, g, g2, eta, beta=0.999):
+    """Madam (Eq. 9) with second-moment normalization. Returns (w', g2')."""
+    g2 = (1.0 - beta) * g * g + beta * g2
+    gstar = g * jax.lax.rsqrt(g2 + 1e-30)
+    wt = jnp.log2(jnp.maximum(jnp.abs(w), jnp.finfo(jnp.float32).tiny))
+    return jnp.sign(w) * jnp.exp2(wt - eta * gstar * jnp.sign(w)), g2
+
+
+def quant_error(w_new: jax.Array, w_q: jax.Array) -> jax.Array:
+    """r_t = ||log2|W_q| − log2|W_new|||² (the paper's §4.2 objective)."""
+    tiny = jnp.finfo(jnp.float32).tiny
+    d = jnp.log2(jnp.maximum(jnp.abs(w_q), tiny)) - jnp.log2(jnp.maximum(jnp.abs(w_new), tiny))
+    return jnp.sum(d * d)
+
+
+def theoretical_bounds(w, g, eta, gamma) -> Dict[str, jax.Array]:
+    """Upper bounds of Theorems 1/2 and Lemma 1 for the given state."""
+    d = w.size
+    sqrt_d = jnp.sqrt(jnp.asarray(d, jnp.float32))
+    tiny = jnp.finfo(jnp.float32).tiny
+    gd_inner = jnp.maximum(jnp.abs(w - eta * g), tiny)
+    return {
+        "gd": sqrt_d / gamma * jnp.linalg.norm(jnp.log2(gd_inner).ravel()),
+        "mul": sqrt_d * eta / gamma * jnp.linalg.norm(g.ravel()),
+        "signmul": d * eta / gamma,
+    }
+
+
+def snap_to_grid(w: jax.Array, gamma: float) -> jax.Array:
+    """Round weights onto the γ log-grid (deterministic)."""
+    mag = jnp.maximum(jnp.abs(w), jnp.finfo(jnp.float32).tiny)
+    return jnp.sign(w) * jnp.exp2(jnp.round(gamma * jnp.log2(mag)) / gamma)
+
+
+def measure_all(key: jax.Array, w: jax.Array, g: jax.Array, eta: float,
+                gamma: float, g2: jax.Array | None = None) -> Dict[str, jax.Array]:
+    """One Fig.-4 measurement: r_t for each rule under Eq.-11 quantization.
+
+    ``w`` is first snapped onto the LNS grid — in real quantized training
+    the current weights *are* grid points. That is what separates the
+    rules: multiplicative updates move integer exponents by a small known
+    fraction (error ∝ η‖∇‖/γ, Thm. 2) while GD's ``W − η∇`` lands at a
+    generic point whose log has a uniform fractional part (error grows with
+    ‖log₂|W−η∇|‖, Thm. 1).
+    """
+    w = snap_to_grid(w, gamma)
+    if g2 is None:
+        g2 = jnp.ones_like(w)
+    keys = jax.random.split(key, 4)
+    out = {}
+    for name, w_new in (
+        ("gd", update_gd(w, g, eta)),
+        ("mul", update_mul(w, g, eta)),
+        ("signmul", update_signmul(w, g, eta)),
+        ("madam", update_madam(w, g, g2, eta)[0]),
+    ):
+        k = keys[("gd", "mul", "signmul", "madam").index(name)]
+        out[name] = quant_error(w_new, simplified_qlog(k, w_new, gamma))
+    return out

@@ -1,0 +1,223 @@
+"""Multi-base logarithmic number system (LNS) — paper §2.
+
+A value is represented as ``sign * s * 2**(-e/gamma)`` where
+
+* ``e`` is an unsigned integer exponent code in ``[0, 2**(bits-1) - 1]``,
+* ``gamma = 2**b`` is the *base factor* (the paper's multi-base knob),
+* ``s`` is a power-of-two scale shared by a group of numbers (per tensor or
+  per channel), chosen to match the group's absmax (paper §3).
+
+The paper writes the representation as ``2**(x~/gamma)`` with dynamic range
+``(0, (2**(B-1)-1)/gamma)``; because every value is pre-scaled so that
+``|x|/s <= 1``, the stored integer is the magnitude of a *negative* exponent.
+We store exactly that magnitude (e == 0 is the largest representable value,
+``e == e_max`` the smallest).
+
+Everything here is pure jnp and shape-polymorphic; the Pallas kernels in
+``repro.kernels`` implement the same semantics and are tested against these
+functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "LNSFormat",
+    "pow2_scale",
+    "compute_scale",
+    "lns_encode",
+    "lns_decode",
+    "lns_quantize",
+    "lns_pack",
+    "lns_unpack",
+    "quantization_gap",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LNSFormat:
+    """A multi-base LNS format (paper §2.1).
+
+    Attributes:
+      bits: total bitwidth B (1 sign bit + (B-1) exponent bits).
+      gamma: base factor, must be a power of two. The representable
+        magnitudes relative to the scale are ``2**(-e/gamma)`` for integer
+        ``e in [0, 2**(bits-1)-1]``.
+      stochastic: use stochastic rounding for the exponent (theory mode /
+        Q_U option). Deterministic round-to-nearest otherwise (deployed path).
+      flush_zero: decode the largest exponent code to exactly 0. Off by
+        default (the hardware datapath has no zero flag).
+    """
+
+    bits: int = 8
+    gamma: int = 8
+    stochastic: bool = False
+    flush_zero: bool = False
+
+    def __post_init__(self):
+        if self.bits < 2 or self.bits > 32:
+            raise ValueError(f"bits must be in [2,32], got {self.bits}")
+        if self.gamma < 1 or (self.gamma & (self.gamma - 1)) != 0:
+            raise ValueError(f"gamma must be a power of two, got {self.gamma}")
+
+    @property
+    def exponent_bits(self) -> int:
+        return self.bits - 1
+
+    @property
+    def max_code(self) -> int:
+        """Largest exponent code 2**(B-1) - 1 (paper's clamp ceiling)."""
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def dynamic_range(self) -> float:
+        """The paper's (0, (2**(B-1)-1)/gamma) exponent range width."""
+        return self.max_code / self.gamma
+
+    @property
+    def code_dtype(self):
+        return jnp.int8 if self.bits <= 8 else (jnp.int16 if self.bits <= 16 else jnp.int32)
+
+    def with_bits(self, bits: int, keep_range: bool = True) -> "LNSFormat":
+        """Derive a format at a different bitwidth.
+
+        With ``keep_range`` the base factor scales as gamma' = gamma *
+        2**(bits-B) so the dynamic range (0, max_code/gamma) is preserved —
+        this is exactly the paper's §6.1.1 prescription for widening Q_U.
+        """
+        gamma = self.gamma * (1 << max(bits - self.bits, 0)) if keep_range else self.gamma
+        if keep_range and bits < self.bits:
+            gamma = max(1, self.gamma >> (self.bits - bits))
+        return dataclasses.replace(self, bits=bits, gamma=gamma)
+
+
+def pow2_scale(absmax: jax.Array) -> jax.Array:
+    """Snap a positive scale to the next power of two (>= absmax).
+
+    Power-of-two scales keep Q_log a pure shift in the exponent domain and
+    match the hardware's scale-by-shift post-processing unit.
+    """
+    absmax = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny)
+    return jnp.exp2(jnp.ceil(jnp.log2(absmax.astype(jnp.float32))))
+
+
+def compute_scale(x: jax.Array, axis=None) -> jax.Array:
+    """Absmax scale, per tensor (axis=None) or per channel, snapped to 2**k.
+
+    ``axis`` is the channel axis (or tuple of axes) that KEEPS resolution
+    (the reduction runs over all other axes), matching the paper's
+    per-channel / per-feature scaling. The result broadcasts against ``x``.
+    """
+    xf = jnp.abs(x.astype(jnp.float32))
+    if axis is None:
+        amax = jnp.max(xf)
+    else:
+        keep = {a % x.ndim for a in ((axis,) if isinstance(axis, int) else axis)}
+        reduce_axes = tuple(i for i in range(x.ndim) if i not in keep)
+        amax = jnp.max(xf, axis=reduce_axes, keepdims=True)
+    return pow2_scale(amax)
+
+
+def _round(x: jax.Array, stochastic: bool, key: Optional[jax.Array]) -> jax.Array:
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        floor = jnp.floor(x)
+        p = jax.random.uniform(key, x.shape, dtype=x.dtype)
+        return floor + (p <= (x - floor)).astype(x.dtype)
+    # round-to-nearest, ties away from zero (cheap in HW; jnp.round is
+    # ties-to-even — the tie set has measure ~0 for log2 outputs, but we fix
+    # the convention so kernels and oracle agree bit-exactly).
+    return jnp.floor(x + 0.5)
+
+
+def lns_encode(
+    x: jax.Array,
+    fmt: LNSFormat,
+    scale: jax.Array,
+    key: Optional[jax.Array] = None,
+):
+    """Encode real values into (sign, exponent-code) LNS pairs.
+
+    Returns ``(sign, code)`` with ``sign in {-1, +1}`` (int8) and
+    ``code = clamp(round(-log2(|x|/s) * gamma), 0, max_code)`` stored in the
+    narrowest integer dtype that fits.
+    """
+    xf = x.astype(jnp.float32)
+    sign = jnp.where(xf < 0, -1, 1).astype(jnp.int8)
+    mag = jnp.abs(xf) / scale
+    # |x| == 0 -> log2 = -inf -> e = +inf -> clamps to max_code (smallest
+    # representable magnitude), reproducing the zero-flag-free hardware.
+    e = -jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)) * fmt.gamma
+    e = _round(e, fmt.stochastic, key)
+    e = jnp.clip(e, 0, fmt.max_code)
+    return sign, e.astype(fmt.code_dtype)
+
+
+def lns_decode(
+    sign: jax.Array,
+    code: jax.Array,
+    fmt: LNSFormat,
+    scale: jax.Array,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Decode (sign, code) LNS pairs back to real values."""
+    mag = jnp.exp2(-code.astype(jnp.float32) / fmt.gamma)
+    if fmt.flush_zero:
+        mag = jnp.where(code == fmt.max_code, 0.0, mag)
+    return (sign.astype(jnp.float32) * mag * scale).astype(dtype)
+
+
+def lns_quantize(
+    x: jax.Array,
+    fmt: LNSFormat,
+    scale_axis: Optional[int] = None,
+    scale: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The paper's Q_log (Eq. 3): fake-quantize ``x`` onto the LNS grid.
+
+    Encode + decode in one call; the returned array has ``x.dtype`` and lies
+    exactly on the representable grid ``{±s·2^(-e/γ)}``.
+    """
+    if scale is None:
+        scale = compute_scale(x, axis=scale_axis)
+    sign, code = lns_encode(x, fmt, scale, key=key)
+    return lns_decode(sign, code, fmt, scale, dtype=x.dtype)
+
+
+def lns_pack(sign: jax.Array, code: jax.Array, fmt: LNSFormat) -> jax.Array:
+    """Pack (sign, code) into the hardware wire format: one unsigned word of
+    ``fmt.bits`` bits, MSB = sign, low ``bits-1`` bits = exponent code.
+
+    This is the storage dtype the TPU path reads from HBM — B=8 LNS weights
+    are exactly 1 byte/element (the 2x bandwidth win vs bf16).
+    """
+    dt = jnp.uint8 if fmt.bits <= 8 else (jnp.uint16 if fmt.bits <= 16 else jnp.uint32)
+    neg = (sign.astype(jnp.int32) < 0).astype(jnp.uint32)
+    word = (neg << (fmt.bits - 1)) | code.astype(jnp.uint32)
+    return word.astype(dt)
+
+
+def lns_unpack(packed: jax.Array, fmt: LNSFormat):
+    """Unpack wire words into (sign in {-1,+1} int8, code)."""
+    w = packed.astype(jnp.uint32)
+    sign_bit = (w >> (fmt.bits - 1)) & 1
+    code = w & jnp.uint32(fmt.max_code)
+    sign = (1 - 2 * sign_bit.astype(jnp.int32)).astype(jnp.int8)
+    return sign, code.astype(fmt.code_dtype)
+
+
+def quantization_gap(x: jax.Array, fmt: LNSFormat) -> jax.Array:
+    """Distance to the next representable value above |x| (diagnostic).
+
+    Grows as ``|x|·(2^(1/γ)-1)`` — the exponential gap growth that breaks GD
+    (paper Fig. 1).
+    """
+    return jnp.abs(x) * (2.0 ** (1.0 / fmt.gamma) - 1.0)

@@ -1,0 +1,77 @@
+"""Approximation-aware quantized GEMMs (paper App. B / §.4, Table 10).
+
+Simulates the *hybrid conversion approximation* inside a dot product: every
+product term ``2**(p/γ)`` is decoded with the Mitchell/LUT approximation
+before accumulation. Since the approximation's multiplicative error depends
+only on the product-exponent remainder ``r = p mod γ``, the dot product is
+decomposed into γ exact GEMMs bucketed by the weight-code remainder, with the
+activation operand pre-multiplied by the bin's error factor:
+
+    y = Σ_j einsum( x·δ((p_x + j) mod γ), w·[p_w mod γ == j] )
+
+This is a *bit-faithful* simulation of the approximate datapath at γ× the
+GEMM cost — used by the Table-10 benchmark and approximation-aware training;
+the production path uses exact accumulation (fp32 MXU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conversion
+from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_decode
+
+__all__ = ["approx_qeinsum", "approx_product_values"]
+
+
+def _positive_codes(code, fmt: LNSFormat):
+    """Bottom-anchored positive codes, the hardware's storage convention.
+
+    value = s · 2**(-e/γ) = (s·2**(-max_code/γ)) · 2**((max_code-e)/γ).
+    """
+    return fmt.max_code - code.astype(jnp.int32)
+
+
+def approx_product_values(ex, ew, fmt: LNSFormat, lut_entries: int):
+    """Decode a product of two positive codes with the hybrid approximation.
+
+    Returns the approximate linear value of ``2**((ex+ew)/γ)`` — reference
+    path used by tests (elementwise, no bucketing).
+    """
+    p = ex.astype(jnp.int32) + ew.astype(jnp.int32)
+    return conversion.exp2_hybrid(p, fmt.gamma, lut_entries)
+
+
+def approx_qeinsum(eq: str, x: jax.Array, w: jax.Array, cfg) -> jax.Array:
+    """Quantized einsum with approximate LNS accumulation (forward) and an
+    exact-fake-quant STE backward (approximation-aware training, App. §.4).
+    """
+    fmt: LNSFormat = cfg.weight
+    afmt: LNSFormat = cfg.act or fmt
+    lut = cfg.approx_lut
+    gamma = fmt.gamma
+
+    sx_scale = compute_scale(x, axis=cfg.act_scale_axis)
+    sw_scale = compute_scale(w, axis=cfg.weight_scale_axis)
+    sx, ex = lns_encode(x, afmt, sx_scale)
+    sw, ew = lns_encode(w, fmt, sw_scale)
+
+    xq = lns_decode(sx, ex, afmt, sx_scale, dtype=jnp.float32)
+    wq = lns_decode(sw, ew, fmt, sw_scale, dtype=jnp.float32)
+
+    # positive (bottom-anchored) codes; product remainder r=(px+pw) mod γ.
+    px = _positive_codes(ex, afmt)
+    pw = _positive_codes(ew, fmt)
+    rw = pw % gamma
+
+    y_approx = jnp.zeros(())
+    for j in range(gamma):
+        delta = conversion.approx_decode_factor((px + j) % gamma, gamma, lut)
+        term = jnp.einsum(eq, xq * delta, jnp.where(rw == j, wq, 0.0))
+        y_approx = y_approx + term
+
+    # STE: the backward pass sees the exact fake-quantized GEMM (the
+    # approximators are deterministic nonlinearities learned through).
+    y_exact = jnp.einsum(eq, xq, wq)
+    y = y_exact + jax.lax.stop_gradient(y_approx - y_exact)
+    return y.astype(x.dtype)

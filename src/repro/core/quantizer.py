@@ -1,0 +1,180 @@
+"""Quantized forward/backward propagation on LNS — paper §3, Fig. 3.
+
+Quantization-aware training with straight-through estimators:
+
+* ``Q_W`` (weights) and ``Q_A`` (activations) are applied *before* each GEMM
+  in the forward pass, with STE so gradients flow through the rounding.
+* ``Q_E`` (activation gradients) is applied to the cotangent arriving at each
+  GEMM output — this is the tensor the hardware stores in BufferB for both
+  backward passes (Table 2), so one quantizer at the output covers both
+  dL/dX and dL/dW GEMMs.
+* ``Q_G`` (weight gradients) is applied to the final weight gradient in the
+  train step (:func:`quantize_grads`), matching Fig. 3's dataflow.
+
+``qeinsum`` is the single entry point all model layers use; swapping the
+:class:`QuantConfig` switches a model between fp32/bf16, LNS, and FP8
+training without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import LNSFormat, compute_scale, lns_quantize
+from repro.numerics.fp import FPFormat, fp_quantize
+
+__all__ = [
+    "QuantConfig",
+    "ste_quantize",
+    "backward_quantize",
+    "cot_boundary",
+    "qeinsum",
+    "quantize_grads",
+]
+
+Format = Union[LNSFormat, FPFormat]
+
+
+def _apply_format(x: jax.Array, fmt: Format, scale_axis: Optional[int]) -> jax.Array:
+    if isinstance(fmt, LNSFormat):
+        return lns_quantize(x, fmt, scale_axis=scale_axis)
+    return fp_quantize(x, fmt, scale_axis=scale_axis)
+
+
+def ste_quantize(x: jax.Array, fmt: Optional[Format], scale_axis: Optional[int] = None) -> jax.Array:
+    """Forward: quantize onto the format grid. Backward: identity (STE)."""
+    if fmt is None:
+        return x
+    q = _apply_format(x, fmt, scale_axis)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def backward_quantize(x: jax.Array, fmt: Optional[Format],
+                      scale_axis: Optional[int] = None,
+                      cot_dtype: Optional[Any] = None):
+    """Forward: identity. Backward: quantize the cotangent (the paper's Q_E)
+    and store it in ``cot_dtype`` (bf16 in the deployed path — the cotangent
+    is on the 8-bit LNS grid anyway, and f32 containers would double every
+    backward collective/HBM byte; see EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _bq_fwd(x, fmt, scale_axis, cot_dtype):
+    return x, None
+
+
+def _bq_bwd(fmt, scale_axis, cot_dtype, _res, g):
+    if fmt is not None:
+        g = _apply_format(g, fmt, scale_axis)
+    if cot_dtype is not None:
+        g = g.astype(cot_dtype)
+    return (g,)
+
+
+backward_quantize.defvjp(_bq_fwd, _bq_bwd)
+
+
+def cot_boundary(x: jax.Array) -> jax.Array:
+    """Pin the cotangent of ``x`` to ``x.dtype``.
+
+    Every fp32 island (norms, router, softmax/xent, rope) otherwise promotes
+    the residual stream's backward to f32 — doubling every backward HBM and
+    collective byte. Production mixed-precision discipline: bf16 network,
+    f32 islands, cast at the boundary. Forward identity, zero cost.
+    """
+    return backward_quantize(x, None, None, x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Formats + scaling policy for one training run.
+
+    ``None`` for a field disables that quantizer (full-precision path).
+    Scale axes: ``None`` = per-tensor; an int = that axis keeps resolution
+    (per-channel / per-feature, paper §6.1.2).
+    """
+
+    weight: Optional[Format] = None      # Q_W
+    act: Optional[Format] = None         # Q_A
+    err: Optional[Format] = None         # Q_E
+    grad: Optional[Format] = None        # Q_G
+    update: Optional[Format] = None      # Q_U (consumed by the optimizer)
+    weight_scale_axis: Optional[int] = -1
+    act_scale_axis: Optional[int] = None
+    err_scale_axis: Optional[int] = None
+    grad_scale_axis: Optional[int] = None
+    # Hybrid conversion-approximation simulation (paper App. B / Table 10):
+    # number of LUT entries; None = exact accumulation.
+    approx_lut: Optional[int] = None
+
+    @classmethod
+    def lns_madam(cls, bits: int = 8, gamma: int = 8, update_bits: int = 16,
+                  approx_lut: Optional[int] = None) -> "QuantConfig":
+        """The paper's deployed setting: B=8, γ=8 everywhere; Q_U at
+        ``update_bits`` with γ_U widened to keep the (0,15.875) range
+        (§6.1.1)."""
+        fmt = LNSFormat(bits=bits, gamma=gamma)
+        return cls(weight=fmt, act=fmt, err=fmt, grad=fmt,
+                   update=fmt.with_bits(update_bits), approx_lut=approx_lut)
+
+    @classmethod
+    def fp8(cls) -> "QuantConfig":
+        """The paper's FP8 baseline: e4m3 fwd/bwd, 16-bit update via SR."""
+        fmt = FPFormat(exp_bits=4, man_bits=3)
+        return cls(weight=fmt, act=fmt, err=fmt, grad=fmt,
+                   update=FPFormat(exp_bits=5, man_bits=10))
+
+    @classmethod
+    def full_precision(cls) -> "QuantConfig":
+        return cls()
+
+    @property
+    def is_quantized(self) -> bool:
+        return any(f is not None for f in (self.weight, self.act, self.err, self.grad))
+
+
+def qeinsum(eq: str, x: jax.Array, w: jax.Array, cfg: Optional[QuantConfig],
+            w_channel_axis: Optional[int] = -1) -> jax.Array:
+    """Quantized GEMM: ``einsum(eq, Q_A(x), Q_W(w))`` with Q_E on the
+    output cotangent. This is the layer every model projection routes
+    through.
+
+    ``w_channel_axis``: the weight axis that keeps per-channel scale
+    resolution (output features). ``None`` forces per-tensor weight scale.
+    """
+    # NOTE on accumulation dtype: the TPU MXU always accumulates bf16
+    # matmuls in fp32 *inside* the unit (the native analogue of the paper's
+    # 24-bit accumulation collector). Forcing preferred_element_type=f32 at
+    # the HLO level would make every backward cotangent f32 (the vjp of the
+    # f32 dot), doubling backward HBM + collective bytes — so GEMMs emit the
+    # compute dtype and Q_E re-grids the cotangent at each boundary.
+    if cfg is None or not cfg.is_quantized:
+        y = jnp.einsum(eq, x, w)
+        return backward_quantize(y, None, None, x.dtype)
+    if cfg.approx_lut is not None and isinstance(cfg.weight, LNSFormat):
+        from repro.core.quant_training import approx_qeinsum  # cycle-free lazy import
+        y = approx_qeinsum(eq, x, w, cfg)
+    else:
+        xq = ste_quantize(x, cfg.act, cfg.act_scale_axis)
+        w_axis = cfg.weight_scale_axis if w_channel_axis == -1 else w_channel_axis
+        wq = ste_quantize(w, cfg.weight, w_axis)
+        y = jnp.einsum(eq, xq, wq)
+    return backward_quantize(y, cfg.err, cfg.err_scale_axis, x.dtype)
+
+
+def quantize_grads(grads, cfg: Optional[QuantConfig]):
+    """Apply Q_G to a gradient pytree (per-tensor scales).
+
+    Called by the train step after ``jax.grad`` and before the optimizer /
+    data-parallel reduction — quantizing *before* the all-reduce is also what
+    makes the LNS-compressed collective (optim/compression.py) exact.
+    """
+    if cfg is None or cfg.grad is None:
+        return grads
+    return jax.tree.map(
+        lambda g: _apply_format(g, cfg.grad, cfg.grad_scale_axis), grads)

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (LOGICAL_RULES, shard, shard_ctx,
+                                        logical_sharding, current_mesh)
+
+__all__ = ["LOGICAL_RULES", "shard", "shard_ctx", "logical_sharding",
+           "current_mesh"]

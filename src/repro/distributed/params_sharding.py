@@ -1,0 +1,185 @@
+"""Logical axis assignment for parameter / optimizer / cache pytrees.
+
+Maps each leaf (by its tree path) to a tuple of logical axis names, then
+resolves them against the active mesh + rules into NamedShardings. Stacked
+(scanned) period parameters get a leading "stack" axis; LNSWeight leaves
+shard sign/code like the dense weight and the scale with its size-1 axis
+unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import logical_sharding, spec_for
+from repro.optim.madam import LNSWeight, is_lns_weight
+
+__all__ = ["params_logical_axes", "params_shardings", "batch_shardings",
+           "cache_logical_axes", "tree_shardings", "opt_logical_axes"]
+
+# leaf-name (with optional parent context) -> logical axes of the 2D core
+_BY_NAME: Dict[str, Tuple[Optional[str], ...]] = {
+    "tok": ("vocab", "embed"),
+    "head": ("embed", "vocab"),
+    "wq": ("embed", "qkv_out"),
+    "wk": ("embed", "qkv_out"),
+    "wv": ("embed", "qkv_out"),
+    "wo": ("qkv_out", "embed"),
+    "bq": ("qkv_out",),
+    "bk": ("qkv_out",),
+    "bv": ("qkv_out",),
+    "q_down": ("embed", None),
+    "q_up": (None, "qkv_out"),
+    "kv_down": ("embed", None),
+    "kv_up": (None, "qkv_out"),
+    "up": ("embed", "mlp"),
+    "gate": ("embed", "mlp"),
+    "down": ("mlp", "embed"),
+    "router": ("embed", None),
+    "w_up": ("experts", "embed", "moe_ff"),
+    "w_gate": ("experts", "embed", "moe_ff"),
+    "w_down": ("experts", "moe_ff", "embed"),
+    "z_proj": ("embed", "ssm_inner"),
+    "x_proj": ("embed", "ssm_inner"),
+    "b_proj": ("embed", None),
+    "c_proj": ("embed", None),
+    "dt_proj": ("embed", None),
+    "out_proj": ("ssm_inner", "embed"),
+    "conv_wx": (None, "ssm_inner"),
+    "norm": ("ssm_inner",),
+    "wr": ("embed", "ssm_inner"),
+    "wg": ("embed", "ssm_inner"),
+    "ck": ("embed", "mlp"),
+    "cv": ("mlp", "embed"),
+    "cr": ("embed", None),
+    "lora_a": ("embed", "lora"),
+    "lora_b": ("lora", "qkv_out"),
+    "proj": (None, "embed"),        # mtp combiner
+}
+
+# rwkv overrides (wk/wv/wo collide with attention names)
+_RWKV_NAMES = {
+    "wk": ("embed", "ssm_inner"),
+    "wv": ("embed", "ssm_inner"),
+    "wo": ("ssm_inner", "embed"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(f"[{k.idx}]")
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return tuple(out)
+
+
+def _leaf_axes(path_names: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    name = path_names[-1] if path_names else ""
+    in_rwkv = "rwkv" in path_names
+    table = dict(_BY_NAME)
+    if in_rwkv:
+        table.update(_RWKV_NAMES)
+    axes = table.get(name)
+    if axes is None:
+        axes = (None,) * ndim  # norms / scalars / unknown -> replicated
+    # stacked (scanned) leading axis
+    if ndim > len(axes):
+        axes = ("stack",) * (ndim - len(axes)) + tuple(axes)
+    elif ndim < len(axes):
+        axes = tuple(axes[-ndim:]) if ndim else ()
+    return tuple(axes)
+
+
+def params_logical_axes(params) -> Any:
+    """Tree of logical-axes tuples matching ``params`` (LNSWeight-aware)."""
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        if is_lns_weight(leaf):
+            axes = _leaf_axes(names, leaf.code.ndim)
+            scale_axes = tuple(a if leaf.scale.shape[i] != 1 else None
+                               for i, a in enumerate(axes)) \
+                if leaf.scale.ndim == leaf.code.ndim else (None,) * leaf.scale.ndim
+            return LNSWeight(sign=axes, code=axes, scale=scale_axes)
+        return _leaf_axes(names, getattr(leaf, "ndim", 0))
+
+    return jax.tree_util.tree_map_with_path(visit, params,
+                                            is_leaf=is_lns_weight)
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules=None):
+    """Resolve a logical-axes tree into NamedShardings."""
+    def one(axes):
+        return logical_sharding(axes, mesh, rules) or NamedSharding(
+            mesh, spec_for((), mesh, rules))
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(one, axes_tree, is_leaf=is_axes_leaf)
+
+
+def params_shardings(params, mesh: Mesh, rules=None):
+    return tree_shardings(params_logical_axes(params), mesh, rules)
+
+
+def batch_shardings(batch, mesh: Mesh, rules=None):
+    """Batch tensors shard over ("pod","data") on the batch axis."""
+    def one(leaf):
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        return logical_sharding(axes, mesh, rules)
+    return jax.tree.map(one, batch)
+
+
+def opt_logical_axes(params, opt_state):
+    """Axes for a MadamState: g2 mirrors the weight (factored leaves get the
+    row/col marginals of the weight's axes); count replicated."""
+    p_axes = params_logical_axes(params)
+
+    def leaf_axes(axes, g2_leaf):
+        code_axes = axes.code if isinstance(axes, LNSWeight) else axes
+        if isinstance(g2_leaf, dict):  # factored {r, c}
+            return {"r": tuple(code_axes[:-1]),
+                    "c": tuple(code_axes[:-2]) + tuple(code_axes[-1:])}
+        return tuple(code_axes)
+
+    flat_axes, treedef = jax.tree_util.tree_flatten(
+        p_axes, is_leaf=lambda x: isinstance(x, LNSWeight) or (
+            isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                         for a in x)))
+    flat_g2 = treedef.flatten_up_to(opt_state.g2)
+    g2_axes = jax.tree_util.tree_unflatten(
+        treedef, [leaf_axes(a, g) for a, g in zip(flat_axes, flat_g2)])
+    return type(opt_state)(g2=g2_axes, count=())
+
+
+# decode-cache leaves by name
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "ssm": ("batch", "act_heads", None, None),
+    "S": ("batch", "act_heads", None, None),
+    "conv_x": ("batch", None, "ssm_inner"),
+    "conv_b": ("batch", None, None),
+    "conv_c": ("batch", None, None),
+    "shift_tm": ("batch", None),
+    "shift_cm": ("batch", None),
+    "idx": (),
+}
+
+
+def cache_logical_axes(caches) -> Any:
+    def visit(path, leaf):
+        names = _path_names(path)
+        axes = _CACHE_AXES.get(names[-1], (None,) * leaf.ndim)
+        if leaf.ndim > len(axes):
+            axes = ("stack",) * (leaf.ndim - len(axes)) + tuple(axes)
+        return tuple(axes)
+    return jax.tree_util.tree_map_with_path(visit, caches)

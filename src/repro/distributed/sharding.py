@@ -1,0 +1,133 @@
+"""Logical-axis sharding (MaxText-style named rules).
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); a rules table maps logical names to
+mesh axes. The same model lowers on the single-pod ``(data, model)`` mesh,
+the multi-pod ``(pod, data, model)`` mesh, or no mesh at all (rules become
+no-ops) — the per-arch configs only override rule entries, never model code.
+
+GSPMD inserts the collectives implied by constraint changes (all-gather for
+FSDP'd weights entering a layer, all-to-all for resharded activations), so
+these rules are also the lever the §Perf hillclimb turns.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["LOGICAL_RULES", "shard_ctx", "shard", "logical_sharding",
+           "current_mesh", "spec_for"]
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# Default logical->mesh rules. Tuples mean "shard over these axes jointly";
+# axes not present in the active mesh are dropped at resolve time, so the
+# same table serves the single-pod and multi-pod meshes.
+LOGICAL_RULES: Dict[str, AxisVal] = {
+    # activations
+    "batch": ("pod", "data"),
+    "batch_full": ("pod", "data", "model"),  # attention batch reshard for
+                                             # non-divisible head counts
+    "seq": None,                 # seq replicated by default
+    "seq_shard": "model",        # sequence-parallel attention (non-/16 heads)
+    "kv_seq": "model",           # split-KV decode; batch-1 long-context
+                                 # cells override to ("data","model")
+    "embed": None,
+    "act_ff": "model",
+    "act_heads": "model",
+    # weights
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_out": "model",
+    "ff_fsdp": "data",           # FSDP axis for huge (MoE) weight tensors
+    "experts": "model",
+    "moe_ff": None,
+    "lora": None,
+    "ssm_inner": "model",
+    "stack": None,               # scanned-layer axis
+    "replicated": None,
+}
+
+_ctx = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def _current_rules() -> Dict[str, AxisVal]:
+    return getattr(_ctx, "rules", LOGICAL_RULES)
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Optional[Mesh], overrides: Optional[Dict[str, AxisVal]] = None):
+    """Activate a mesh + rule overrides for ``shard`` calls in scope."""
+    prev_mesh = getattr(_ctx, "mesh", None)
+    prev_rules = getattr(_ctx, "rules", LOGICAL_RULES)
+    _ctx.mesh = mesh
+    rules = dict(LOGICAL_RULES)
+    if overrides:
+        rules.update(overrides)
+    _ctx.rules = rules
+    try:
+        yield
+    finally:
+        _ctx.mesh = prev_mesh
+        _ctx.rules = prev_rules
+
+
+def _resolve(name: Optional[str], mesh: Mesh, rules: Dict[str, AxisVal]):
+    if name is None:
+        return None
+    if name not in rules:
+        raise KeyError(f"unknown logical axis {name!r}")
+    val = rules[name]
+    if val is None:
+        return None
+    axes = (val,) if isinstance(val, str) else tuple(val)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(names: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, AxisVal]] = None) -> P:
+    """PartitionSpec for a tuple of logical axis names.
+
+    ``rules`` (if given) are *overrides* merged over the defaults/context.
+    """
+    mesh = mesh or current_mesh()
+    if rules is not None:
+        rules = {**_current_rules(), **rules}
+    else:
+        rules = _current_rules()
+    if mesh is None:
+        return P()
+    return P(*[_resolve(n, mesh, rules) for n in names])
+
+
+def logical_sharding(names: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[Dict[str, AxisVal]] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(names, mesh, rules))
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the logical axes ``names`` (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(names, mesh)))

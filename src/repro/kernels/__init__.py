@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the LNS hot spots (validated in interpret mode).
+
+* ``lns_matmul``   — bit-exact Fig.-6 integer datapath (validation artifact)
+* ``lns_qmatmul``  — fused dequantize->MXU matmul (production path)
+* ``lns_quantize`` — fused Q_log encode + sign/exponent pack
+* ``madam_update`` — fused Algorithm-1 step on integer exponent codes
+
+Each kernel has a pure-jnp oracle in :mod:`repro.kernels.ref` and a jit'd
+wrapper in :mod:`repro.kernels.ops`.
+"""
+from repro.kernels.ops import (default_interpret, lns_matmul, lns_qmatmul,
+                               madam_step, quantize_pack)
+
+__all__ = ["default_interpret", "lns_matmul", "lns_qmatmul", "madam_step",
+           "quantize_pack"]

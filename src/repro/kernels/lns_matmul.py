@@ -1,0 +1,132 @@
+"""Bit-exact LNS dot-product datapath (paper Fig. 6) as a Pallas kernel.
+
+Emulates the Vector MAC Unit: per product, add the integer exponents and XOR
+the signs; split the product exponent into quotient (MSB) / remainder (LSB);
+convert to linear fixed point by a right shift (quotient) and a small-LUT
+multiply (remainder — exact γ-entry LUT, or the App.-B Mitchell hybrid);
+reduce through adder trees; saturate the 24-bit accumulation collector.
+
+Since our storage keeps *negated* exponents (value = s·2**(-e/γ)), the RTL's
+left-shift-by-quotient becomes a right shift — offset-binary equivalent, and
+products below the fixed point's LSB underflow to 0 exactly like hardware.
+The output is an int32 partial-sum tile in Qx.``frac_bits`` fixed point
+(frac_bits=16 ⇒ Q7.16, a 24-bit collector: paper Table 1).
+
+This kernel is the *validation + energy-model* artifact: it proves the
+datapath semantics on TPU-shaped tiles and backs the Table-10 benchmark. The
+production matmul is ``lns_qmatmul`` (dequantize -> MXU). LUT lookups are
+compile-time select-sums (γ ≤ 32 entries), not gathers — MXU/VPU friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import conversion
+from repro.core.lns import LNSFormat
+
+__all__ = ["lns_matmul_pallas"]
+
+_SAT24 = (1 << 23) - 1
+
+
+def _select_lut(idx: jax.Array, lut: np.ndarray) -> jax.Array:
+    """LUT lookup as a select-sum over the (small) static constant table."""
+    out = jnp.zeros(idx.shape, jnp.int32)
+    for j, val in enumerate(lut):
+        out = jnp.where(idx == j, jnp.int32(int(val)), out)
+    return out
+
+
+def _datapath_terms(m, gamma: int, frac_bits: int, lut_entries: int | None):
+    """Linear fixed-point magnitude of 2**(-m/γ) — shift + LUT (+ Mitchell)."""
+    b = int(gamma).bit_length() - 1
+    q = jnp.minimum(m >> b, 31)
+    r = m & (gamma - 1)
+    if lut_entries is None:
+        lut = conversion.remainder_lut_neg_int(gamma, frac_bits)
+        v = _select_lut(r, lut)
+    else:
+        # complement-Mitchell on the LSBs (see conversion.exp2_neg_hybrid_fixed)
+        b_l = b - (int(lut_entries).bit_length() - 1)
+        r_m = r >> b_l
+        r_l = r & ((1 << b_l) - 1)
+        lut = conversion.remainder_lut_neg_shifted_int(gamma, frac_bits,
+                                                       lut_entries)
+        v = _select_lut(r_m, lut) * (gamma + (1 << b_l) - r_l)
+        v = jax.lax.shift_right_logical(v, b)
+    return jax.lax.shift_right_logical(v, q)
+
+
+def _kernel(pa_ref, pb_ref, out_ref, *, bits: int, gamma: int,
+            frac_bits: int, lut_entries: int | None):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    max_code = (1 << (bits - 1)) - 1
+    wa = pa_ref[...].astype(jnp.int32)  # (bm, bk) packed words
+    wb = pb_ref[...].astype(jnp.int32)  # (bk, bn)
+    ca, sa = wa & max_code, 1 - 2 * (wa >> (bits - 1))
+    cb, sb = wb & max_code, 1 - 2 * (wb >> (bits - 1))
+
+    # product exponents / signs over the (bm, bk, bn) outer-product space
+    m = ca[:, :, None] + cb[None, :, :]
+    sgn = sa[:, :, None] * sb[None, :, :]
+    mag = _datapath_terms(m, gamma, frac_bits, lut_entries)
+    block = jnp.sum(sgn * mag, axis=1)  # adder tree over the vector lanes
+
+    # accumulation collector: saturating 24-bit add per K block
+    out_ref[...] = jnp.clip(out_ref[...] + block, -_SAT24, _SAT24)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "frac_bits", "lut_entries", "block_m", "block_n",
+                     "block_k", "interpret"),
+)
+def lns_matmul_pallas(
+    pa: jax.Array,
+    pb: jax.Array,
+    fmt: LNSFormat,
+    *,
+    frac_bits: int = 16,
+    lut_entries: int | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Packed-LNS matmul through the bit-exact integer datapath.
+
+    ``pa (M,K)`` x ``pb (K,N)`` packed words -> int32 (M,N) partial sums in
+    Q·``frac_bits`` fixed point. Real value = out · s_a·s_b / 2**frac_bits.
+    Shapes must tile evenly (callers pad); K saturation order == ``block_k``.
+    """
+    M, K = pa.shape
+    K2, N = pb.shape
+    assert K == K2, (pa.shape, pb.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"shapes ({M},{K})x({K},{N}) must tile by ({block_m},{block_n},{block_k})")
+
+    grid = (M // block_m, N // block_n, K // block_k)
+    kernel = functools.partial(
+        _kernel, bits=fmt.bits, gamma=fmt.gamma, frac_bits=frac_bits,
+        lut_entries=lut_entries)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(pa, pb)

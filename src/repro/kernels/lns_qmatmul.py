@@ -1,0 +1,88 @@
+"""Fused LNS-dequantize -> MXU matmul — the TPU-native production kernel.
+
+The TPU adaptation of the paper's co-design (DESIGN.md §2): LNS is the
+*storage/bandwidth* format. Operands live in HBM as packed 8-bit LNS words
+(2x fewer bytes than bf16, 4x fewer than f32); each VMEM tile is decoded in
+the kernel prologue (sign bit-slice + exp2 of the exponent — cheap VPU work)
+and fed to the MXU in bf16 with f32 accumulation. Memory-bound layers get
+the LNS bandwidth win without giving up MXU throughput.
+
+Per-channel scales stay *outside* the kernel: a row scale of A and a column
+scale of B factor out of the matmul, so the epilogue multiplies the f32
+output tile once — no per-element scale traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lns import LNSFormat
+
+__all__ = ["lns_qmatmul_pallas"]
+
+
+def _decode(w: jax.Array, bits: int, gamma: int, dtype) -> jax.Array:
+    """Unpack + decode a tile of packed LNS words to the compute dtype."""
+    wi = w.astype(jnp.int32)
+    max_code = (1 << (bits - 1)) - 1
+    sign = (1 - 2 * (wi >> (bits - 1))).astype(jnp.float32)
+    mag = jnp.exp2(-(wi & max_code).astype(jnp.float32) / gamma)
+    return (sign * mag).astype(dtype)
+
+
+def _kernel(pa_ref, pb_ref, out_ref, *, bits, gamma, compute_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = _decode(pa_ref[...], bits, gamma, compute_dtype)
+    b = _decode(pb_ref[...], bits, gamma, compute_dtype)
+    out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "compute_dtype", "block_m", "block_n", "block_k",
+                     "interpret"),
+)
+def lns_qmatmul_pallas(
+    pa: jax.Array,
+    pb: jax.Array,
+    fmt: LNSFormat,
+    *,
+    compute_dtype=jnp.bfloat16,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """``pa (M,K)`` x ``pb (K,N)`` packed LNS words -> f32 (M,N) (unscaled).
+
+    Tile sizes default to the MXU-aligned 128; VMEM per step is
+    ``bm·bk + bk·bn`` bytes of codes + the bf16 decodes + the f32 out tile.
+    """
+    M, K = pa.shape
+    K2, N = pb.shape
+    assert K == K2, (pa.shape, pb.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"shapes ({M},{K})x({K},{N}) must tile by ({block_m},{block_n},{block_k})")
+
+    grid = (M // block_m, N // block_n, K // block_k)
+    kernel = functools.partial(
+        _kernel, bits=fmt.bits, gamma=fmt.gamma, compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(pa, pb)

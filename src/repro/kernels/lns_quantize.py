@@ -1,0 +1,67 @@
+"""Fused LNS encode+pack kernel — one pass from f32/bf16 to packed words.
+
+Implements the paper's Q_log (Eq. 3) as the write-side of the TPU datapath:
+``code = clamp(round(-log2(|x|/s)·γ), 0, 2^(B-1)-1)`` packed with the sign
+bit into a single byte. Scales arrive per row tile (per-channel) or
+broadcast (per-tensor) — the absmax reduction runs in a prior pass (the
+hardware's PPU also scales as a post-processing step, §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lns import LNSFormat
+
+__all__ = ["lns_quantize_pallas"]
+
+
+def _kernel(x_ref, s_ref, out_ref, *, bits: int, gamma: int):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)  # (block_r, 1), broadcasts over cols
+    max_code = (1 << (bits - 1)) - 1
+    neg = (x < 0).astype(jnp.uint32)
+    mag = jnp.abs(x) / s
+    e = -jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)) * gamma
+    e = jnp.clip(jnp.floor(e + 0.5), 0, max_code).astype(jnp.uint32)
+    out_ref[...] = ((neg << (bits - 1)) | e).astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "block_r", "block_c", "interpret"))
+def lns_quantize_pallas(
+    x: jax.Array,
+    scale: jax.Array,
+    fmt: LNSFormat,
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Encode ``x (R,C)`` with per-row ``scale (R,1)`` into packed uint8.
+
+    For per-tensor scaling pass ``jnp.full((R,1), s)``. ``fmt.bits`` must be
+    <= 8 (the packed-byte wire format).
+    """
+    assert fmt.bits <= 8, "packed-byte kernel supports bits<=8"
+    R, C = x.shape
+    assert scale.shape == (R, 1), scale.shape
+    assert R % block_r == 0 and C % block_c == 0, (
+        f"({R},{C}) must tile by ({block_r},{block_c})")
+
+    grid = (R // block_r, C // block_c)
+    kernel = functools.partial(_kernel, bits=fmt.bits, gamma=fmt.gamma)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.uint8),
+        interpret=interpret,
+    )(x, scale)

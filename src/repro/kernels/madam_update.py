@@ -1,0 +1,92 @@
+"""Fused LNS-Madam weight update (Algorithm 1) as a Pallas kernel.
+
+One pass over (code, sign, grad, v) producing (code', v'): second-moment
+EMA, bias-corrected normalization, and the integer exponent step
+``code' = clamp(round(code + η·γ_U·g*·sign(W)))`` — all in VMEM, so the
+update path touches each weight exactly once in HBM (read code+grad+v,
+write code+v). No integer->LNS conversion anywhere (paper §4).
+
+The bias-correction factor ``bc = 1 - β^t`` depends on the step count, so it
+arrives as a (1,1) operand rather than a static constant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lns import LNSFormat
+
+__all__ = ["madam_update_pallas"]
+
+
+def _kernel(bc_ref, code_ref, sign_ref, g_ref, v_ref, code_out, v_out, *,
+            lr: float, beta: float, eps: float, gamma: int, max_code: int):
+    bc = bc_ref[0, 0]
+    g = g_ref[...].astype(jnp.float32)
+    v = (1.0 - beta) * g * g + beta * v_ref[...]
+    gstar = g * jax.lax.rsqrt(v / bc + eps)
+    step = (lr * gamma) * gstar * sign_ref[...].astype(jnp.float32)
+    target = code_ref[...].astype(jnp.float32) + step
+    code = jnp.clip(jnp.floor(target + 0.5), 0, max_code)
+    code_out[...] = code.astype(code_out.dtype)
+    v_out[...] = v
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "lr", "beta", "eps", "block_r", "block_c",
+                     "interpret"),
+)
+def madam_update_pallas(
+    code: jax.Array,
+    sign: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    count: jax.Array,
+    fmt: LNSFormat,
+    *,
+    lr: float,
+    beta: float = 0.999,
+    eps: float = 1e-30,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: bool = True,
+):
+    """Fused Madam step on 2-D LNS weights. Returns (new_code, new_v).
+
+    ``count`` is the post-increment step (>= 1) used for bias correction.
+    """
+    R, C = code.shape
+    assert sign.shape == (R, C) and g.shape == (R, C) and v.shape == (R, C)
+    assert R % block_r == 0 and C % block_c == 0, (
+        f"({R},{C}) must tile by ({block_r},{block_c})")
+
+    bc = (1.0 - beta ** count.astype(jnp.float32)).reshape(1, 1)
+    grid = (R // block_r, C // block_c)
+    tile = lambda i, j: (i, j)
+    kernel = functools.partial(
+        _kernel, lr=lr, beta=beta, eps=eps, gamma=fmt.gamma,
+        max_code=fmt.max_code)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), code.dtype),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bc, code, sign, g, v)

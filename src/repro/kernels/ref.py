@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors its kernel's semantics exactly (including block-wise
+accumulator saturation order for the bit-exact datapath) so tests can assert
+bit-for-bit equality in interpret mode across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conversion
+from repro.core.lns import LNSFormat, lns_unpack
+
+__all__ = [
+    "SAT24",
+    "lns_matmul_ref",
+    "lns_qmatmul_ref",
+    "lns_quantize_ref",
+    "madam_update_ref",
+]
+
+SAT24 = (1 << 23) - 1  # 24-bit accumulation collector bound (paper Table 1)
+
+
+def _saturate(x: jax.Array, bound: int = SAT24) -> jax.Array:
+    return jnp.clip(x, -bound, bound)
+
+
+def lns_matmul_ref(
+    pa: jax.Array,
+    pb: jax.Array,
+    fmt: LNSFormat,
+    *,
+    frac_bits: int = 16,
+    lut_entries: int | None = None,
+    block_k: int = 128,
+) -> jax.Array:
+    """Oracle for the bit-exact Fig.-6 datapath kernel.
+
+    ``pa (M,K)``, ``pb (K,N)``: packed LNS words. Output int32 partial sums
+    in Q(23-frac_bits).frac_bits fixed point. The accumulator saturates to
+    24 bits after every ``block_k`` slice, replicating the kernel's
+    accumulation-collector order — tests must use the same ``block_k``.
+    """
+    sa, ca = lns_unpack(pa, fmt)
+    sb, cb = lns_unpack(pb, fmt)
+    m = ca.astype(jnp.int32)[:, :, None] + cb.astype(jnp.int32)[None, :, :]
+    sign = sa.astype(jnp.int32)[:, :, None] * sb.astype(jnp.int32)[None, :, :]
+    if lut_entries is None:
+        mag = conversion.exp2_neg_exact_fixed(m, fmt.gamma, frac_bits)
+    else:
+        mag = conversion.exp2_neg_hybrid_fixed(m, fmt.gamma, lut_entries, frac_bits)
+    terms = sign * mag  # (M, K, N) int32
+
+    K = pa.shape[1]
+    acc = jnp.zeros((pa.shape[0], pb.shape[1]), jnp.int32)
+    for k0 in range(0, K, block_k):
+        acc = _saturate(acc + jnp.sum(terms[:, k0:k0 + block_k, :], axis=1))
+    return acc
+
+
+def lns_qmatmul_ref(
+    pa: jax.Array,
+    pb: jax.Array,
+    fmt: LNSFormat,
+    *,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the fused dequantize->MXU matmul kernel.
+
+    Decodes packed words to ``compute_dtype`` (unscaled: magnitude
+    2**(-code/γ)) and matmuls with f32 accumulation. Per-channel scales are
+    applied by the ops wrapper outside the kernel in both paths.
+    """
+    sa, ca = lns_unpack(pa, fmt)
+    sb, cb = lns_unpack(pb, fmt)
+    a = (sa.astype(jnp.float32) * jnp.exp2(-ca.astype(jnp.float32) / fmt.gamma)).astype(compute_dtype)
+    b = (sb.astype(jnp.float32) * jnp.exp2(-cb.astype(jnp.float32) / fmt.gamma)).astype(compute_dtype)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def lns_quantize_ref(x: jax.Array, scale: jax.Array, fmt: LNSFormat) -> jax.Array:
+    """Oracle for the fused encode+pack kernel.
+
+    ``scale`` broadcasts against ``x`` (per-row (R,1) or scalar (1,1)).
+    Deterministic round-to-nearest (ties away from zero).
+    """
+    xf = x.astype(jnp.float32)
+    neg = (xf < 0).astype(jnp.uint8)
+    mag = jnp.abs(xf) / scale
+    e = -jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)) * fmt.gamma
+    e = jnp.clip(jnp.floor(e + 0.5), 0, fmt.max_code)
+    return ((neg << (fmt.bits - 1)) | e.astype(jnp.uint8)).astype(jnp.uint8)
+
+
+def madam_update_ref(
+    code: jax.Array,
+    sign: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    fmt: LNSFormat,
+    *,
+    lr: float,
+    beta: float,
+    count: int,
+    eps: float = 1e-30,
+):
+    """Oracle for the fused LNS-Madam update kernel (Algorithm 1).
+
+    Returns (new_code, new_v). Matches ``optim.madam.madam_lns`` leaf math.
+    """
+    gf = g.astype(jnp.float32)
+    v = (1.0 - beta) * gf * gf + beta * v
+    bc = 1.0 - beta ** jnp.asarray(count, jnp.float32)
+    gstar = gf * jax.lax.rsqrt(v / bc + eps)
+    step = lr * fmt.gamma * gstar * sign.astype(jnp.float32)
+    target = code.astype(jnp.float32) + step
+    new_code = jnp.clip(jnp.floor(target + 0.5), 0, fmt.max_code).astype(fmt.code_dtype)
+    return new_code, v

@@ -1,0 +1,57 @@
+"""Render dry-run JSONL results as the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun/singlepod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.1f}"
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    # keep the last entry per (arch, shape, mesh)
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def table(rows):
+    out = []
+    out.append("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | "
+               "dominant | useful | roofline | peak GiB/chip | note |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        mem = r.get("memory", {}).get("peak_bytes")
+        note = ""
+        if mem and mem > 16 * 2**30:
+            note = "exceeds v5e 16 GiB"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {fmt_bytes(mem)} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load(sys.argv[1])
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    print(table(rows))
+    print(f"\n{len(rows)} cells.")
+
+
+if __name__ == "__main__":
+    main()

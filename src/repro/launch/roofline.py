@@ -1,0 +1,196 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+TPU v5e-like constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. ``compiled.cost_analysis()`` supplies per-device
+HLO FLOPs and bytes (post-SPMD, i.e. already divided across chips);
+collective bytes are parsed from the partitioned HLO text by summing the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Terms (seconds per step, per chip — identical to the assignment's
+``global / (chips x peak)`` since the per-device program is global/chips):
+
+    T_compute    = flops_per_device / 197e12
+    T_memory     = bytes_per_device / 819e9
+    T_collective = collective_bytes_per_device / 50e9
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "CollectiveStats", "RooflineReport", "collective_bytes",
+           "analyze", "model_flops"]
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # B/s
+ICI_BW = 50e9         # B/s/link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape tokens like  bf16[256,4096]{1,0}  or  f32[]  appearing in operand
+# position inside a collective's argument list
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of collective ops in a (partitioned) HLO module.
+
+    `-start` variants are counted; their paired `-done` is skipped so async
+    collectives aren't double counted.
+    """
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(1)
+        # operand list: everything after the opcode's opening paren
+        args = line[m.end():]
+        # cut at the first top-level close paren
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        total = 0
+        for sm in _SHAPE_RE.finditer(args):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        if total == 0:
+            # fall back to the op's output shape (pre-opcode segment)
+            pre = line[: m.start()]
+            for sm in _SHAPE_RE.finditer(line[m.start():m.end()]):
+                total += _shape_bytes(sm.group(1), sm.group(2))
+            if total == 0:
+                for sm in _SHAPE_RE.finditer(pre):
+                    total += _shape_bytes(sm.group(1), sm.group(2))
+        bytes_by[kind] += total
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_global: float
+    peak_bytes_per_device: Optional[float] = None
+    collectives: Optional[Dict[str, int]] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput vs peak, at the modeled step time
+        max(T_c, T_m, T_coll) — the §Perf score for this cell."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_global / self.chips / t) / PEAK_FLOPS
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.collective_bytes_per_device,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, spec, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D inference; N = active
+    params (MoE), D = tokens processed this step."""
+    n = cfg.active_params_count()
+    if kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n * tokens
+    tokens = spec.global_batch * 1  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict, hlo_text: str, mf: float,
+            peak_bytes: Optional[float] = None) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=float(coll.total_bytes),
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=byts / HBM_BW,
+        t_collective=coll.total_bytes / ICI_BW,
+        model_flops_global=mf,
+        peak_bytes_per_device=peak_bytes,
+        collectives={k: v for k, v in coll.bytes_by_kind.items() if v},
+    )

@@ -1,0 +1,99 @@
+"""Batched serving driver: continuous-batching prefill + decode loop.
+
+A minimal production-shaped server: requests arrive with prompts of varying
+length, are left-aligned into a fixed batch, prefilled once, then decoded
+step by step with the packed-LNS (8-bit) weight format. Reports
+tokens/second and per-phase timings.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --requests 8 --prompt-len 32 --gen-len 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_rules, get_smoke_config
+from repro.core.lns import LNSFormat
+from repro.core.quantizer import QuantConfig
+from repro.distributed.sharding import shard_ctx
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import init_caches
+from repro.optim.madam import MadamConfig
+from repro.training import (build_decode_step, build_prefill_step,
+                            init_train_state)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--serve-bits", type=int, default=8,
+                    help="LNS weight bitwidth for serving")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(
+        update_format=LNSFormat(bits=args.serve_bits, gamma=8))
+    mesh = make_host_mesh(data=jax.device_count())
+
+    with shard_ctx(mesh, get_rules(args.arch)):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
+        params = state.params
+        bytes_w = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+        print(f"arch={cfg.name} serve weights {bytes_w / 2**20:.1f} MiB "
+              f"(packed {args.serve_bits}-bit LNS codes + scales)")
+
+        B = args.requests
+        max_len = args.prompt_len + args.gen_len
+        rng = np.random.default_rng(0)
+        tshape = ((B, args.prompt_len, cfg.num_codebooks)
+                  if cfg.num_codebooks else (B, args.prompt_len))
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, tshape, dtype=np.int32))
+
+        prefill = jax.jit(build_prefill_step(cfg, qcfg, mcfg))
+        decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
+
+        t0 = time.monotonic()
+        logits = prefill(params, {"tokens": prompts})
+        # replay the prompt through the decode path to build the cache
+        caches = init_caches(B, max_len, cfg)
+        logits, caches = decode(params, caches, {"tokens": prompts},
+                                jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(logits)
+        t_prefill = time.monotonic() - t0
+
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if cfg.num_codebooks:
+            tok = tok.reshape(B, 1, cfg.num_codebooks)
+        else:
+            tok = tok.reshape(B, 1)
+        generated = [tok]
+        t0 = time.monotonic()
+        for i in range(args.gen_len - 1):
+            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+            logits, caches = decode(params, caches, {"tokens": tok}, pos)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = tok.reshape((B, 1, cfg.num_codebooks)
+                              if cfg.num_codebooks else (B, 1))
+            generated.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.monotonic() - t0
+        n_tok = B * (args.gen_len - 1)
+        print(f"prefill {B}x{args.prompt_len} in {t_prefill:.2f}s; "
+              f"decode {n_tok} tokens in {t_decode:.2f}s "
+              f"({n_tok / max(t_decode, 1e-9):.1f} tok/s)")
+        out = jnp.concatenate(generated, axis=1)
+        print("sample:", np.asarray(out)[0, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.common import ArchConfig
+from repro.models.model import (ForwardOut, decode_step, forward, init_caches,
+                                init_params, lm_loss)
+
+__all__ = ["ArchConfig", "ForwardOut", "decode_step", "forward",
+           "init_caches", "init_params", "lm_loss"]

@@ -1,0 +1,232 @@
+"""Shared model machinery: the architecture config and init helpers."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ArchConfig", "dense_init", "embed_init", "trunc_normal"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture from the assigned pool (exact shapes from the brief).
+
+    Every assigned arch is expressible as a pattern of blocks over a shared
+    decoder trunk; family selects the block wiring.
+    """
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---
+    qkv_bias: bool = False            # qwen2.5
+    qk_norm: bool = False             # gemma3
+    rope_theta: float = 1e4
+    rope_theta_global: Optional[float] = None  # gemma3 global layers
+    sliding_window: Optional[int] = None
+    local_global_ratio: int = 0       # gemma3: N local per 1 global
+    # --- MLA (deepseek-v3) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    num_dense_layers: int = 0
+    moe_dispatch: str = "dense_ref"   # dense_ref | a2a
+    capacity_factor: float = 1.25
+    mtp_depth: int = 0                # deepseek multi-token prediction heads
+    # --- SSM / RWKV ---
+    ssm_state_dim: int = 0
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64            # mamba2 / rwkv6 head width
+    shared_attn_every: int = 0        # zamba2: shared block period
+    shared_block_lora_rank: int = 0   # zamba2 per-occurrence LoRA
+    rwkv_chunk: int = 16
+    ssm_chunk: int = 64
+    # --- modality stubs ---
+    num_patches: int = 0              # phi-3-vision prefix
+    num_codebooks: int = 0            # musicgen
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    act_fn: str = "silu"
+    mlp_gated: bool = True
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    embed_scale: bool = False         # gemma: scale embeddings by sqrt(d)
+    # beyond-paper: store the KV cache as packed 8-bit LNS codes (+ one
+    # per-position-per-head scale) — the paper's format applied to the
+    # serving bandwidth bottleneck. None = bf16 cache.
+    kv_cache_bits: Optional[int] = None
+    quantize_attention: bool = True   # paper: "quantize all GEMMs"
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM / linear-attn / mostly-local)."""
+        return self.family in ("ssm", "hybrid") or self.local_global_ratio > 0
+
+    def layer_pattern(self) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+        """(prefix_kinds, n_periods, period_kinds) — the decoder structure.
+
+        The trunk is ``prefix`` unrolled layers followed by ``n_periods``
+        scanned repetitions of ``period_kinds``.
+        """
+        if self.family == "ssm":  # rwkv6: uniform
+            return (), self.num_layers, ("rwkv",)
+        if self.family == "hybrid":  # zamba2: [mamba×(k-1), shared_attn] periods
+            k = self.shared_attn_every
+            n_periods = self.num_layers // k
+            prefix = ("mamba",) * (self.num_layers - n_periods * k)
+            return prefix, n_periods, ("mamba",) * (k - 1) + ("shared_attn",)
+        if self.family == "moe":
+            prefix = ("dense",) * self.num_dense_layers
+            return prefix, self.num_layers - self.num_dense_layers, ("moe",)
+        if self.local_global_ratio > 0:  # gemma3
+            period = ("local",) * self.local_global_ratio + ("global",)
+            n_periods = self.num_layers // len(period)
+            prefix = ("local",) * (self.num_layers - n_periods * len(period))
+            return prefix, n_periods, period
+        return (), self.num_layers, ("dense",)
+
+    def params_count(self) -> int:
+        """Total trainable parameters (used for 6·N·D roofline bookkeeping)."""
+        return _count_params(self)
+
+    def active_params_count(self) -> int:
+        """Per-token active parameters (MoE: routed top-k + shared only)."""
+        return _count_params(self, active_only=True)
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    if cfg.use_mla:
+        n = d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+        n += d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+        n += cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+        n += cfg.num_heads * cfg.v_head_dim * d
+        n += cfg.q_lora_rank + cfg.kv_lora_rank  # q_norm, kv_norm gains
+        return n
+    hd = cfg.head_dim
+    n = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd + cfg.num_heads * hd * d
+    if cfg.qkv_bias:
+        n += (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+    if cfg.qk_norm:
+        n += 2 * hd
+    return n
+
+
+def _mlp_params(d: int, f: int, gated: bool) -> int:
+    return d * f * (3 if gated else 2)
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    """Mirrors ``models.ssm.mamba_init`` exactly."""
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    h = d_in // cfg.ssm_head_dim
+    n_st = cfg.ssm_state_dim
+    conv_dim = d_in + 2 * n_st
+    n = d * (2 * d_in + 2 * n_st + h)                   # in_proj
+    n += cfg.ssm_conv_width * conv_dim + conv_dim       # conv w + b
+    n += 3 * h                                          # A_log, D, dt_bias
+    n += d_in                                           # norm
+    n += d_in * d                                       # out_proj
+    return n
+
+
+def _rwkv_params(cfg: ArchConfig) -> int:
+    """Mirrors ``models.rwkv.rwkv_init`` exactly."""
+    d = cfg.d_model
+    lora = 64
+    n = 5 * d + d                                       # mix (5,d) + w0
+    n += d * lora + lora * d                            # decay lora
+    n += d                                              # u
+    n += 5 * d * d                                      # wr wk wv wg wo
+    n += d                                              # ln_x
+    n += 2 * d                                          # mix_cm
+    n += d * cfg.d_ff + cfg.d_ff * d + d * d            # ck cv cr
+    return n
+
+
+def _count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    emb = cfg.vocab_size * d * (cfg.num_codebooks or 1)
+    head = 0 if cfg.tie_embeddings else d * cfg.vocab_size * (cfg.num_codebooks or 1)
+    prefix, n_periods, period = cfg.layer_pattern()
+    kinds = list(prefix) + list(period) * n_periods
+
+    total = emb + head + d  # final norm
+    shared_counted = False
+    for kind in kinds:
+        if kind == "rwkv":
+            total += _rwkv_params(cfg) + 2 * d          # two norms
+        elif kind == "mamba":
+            total += _mamba_params(cfg) + d             # one norm
+        elif kind == "shared_attn":
+            if not shared_counted:
+                total += (_attn_params(cfg)
+                          + _mlp_params(d, cfg.d_ff, cfg.mlp_gated))
+                shared_counted = True
+            total += 2 * d  # per-occurrence norms
+            r = cfg.shared_block_lora_rank
+            if r:  # per-occurrence LoRA on the fused qkv projection
+                hd = cfg.head_dim
+                total += d * r + r * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+        elif kind == "moe":
+            total += _attn_params(cfg) + 2 * d
+            e_all = cfg.num_experts
+            e_act = cfg.experts_per_token
+            n_exp = e_act if active_only else e_all
+            total += n_exp * _mlp_params(d, cfg.moe_d_ff, cfg.mlp_gated)
+            total += cfg.num_shared_experts * _mlp_params(
+                d, cfg.moe_d_ff, cfg.mlp_gated)
+            total += d * cfg.num_experts  # router
+        else:  # dense / local / global
+            total += (_attn_params(cfg)
+                      + _mlp_params(d, cfg.d_ff, cfg.mlp_gated) + 2 * d)
+    if cfg.mtp_depth:  # MTP module: one dense block + norm + 2d->d proj
+        total += (_attn_params(cfg) + _mlp_params(d, cfg.d_ff, cfg.mlp_gated)
+                  + 2 * d + d + 2 * d * d)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, std: Optional[float] = None):
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    return trunc_normal(key, (d_in, d_out), std, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return trunc_normal(key, (vocab, d), 0.02, dtype)

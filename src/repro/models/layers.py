@@ -1,0 +1,110 @@
+"""Shared building blocks: norms, rope, MLPs, embeddings.
+
+All GEMMs route through :func:`repro.core.quantizer.qeinsum`, so one
+``QuantConfig`` switches every architecture between fp, LNS, and FP8
+training. Weight leaves may be dense arrays *or* :class:`LNSWeight` codes
+(deployed mode — no fp master copy); ``dense_of`` decodes on use, which
+under scan-over-layers means one layer's bf16 weights are alive at a time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import lns_decode
+from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
+from repro.distributed.sharding import shard
+from repro.models.common import ArchConfig, dense_init, embed_init
+from repro.optim.madam import LNSWeight, is_lns_weight
+
+__all__ = ["dense_of", "rms_norm", "rope", "apply_rope", "mlp_init",
+           "mlp_apply", "embedding_init", "ACT_FNS"]
+
+ACT_FNS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def dense_of(w, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
+    """Materialize a (possibly LNS-stored) weight to the compute dtype."""
+    if is_lns_weight(w):
+        fmt = qcfg.update if (qcfg and qcfg.update is not None) else None
+        if fmt is None:
+            raise ValueError("LNSWeight leaves require QuantConfig.update")
+        return lns_decode(w.sign, w.code, fmt, w.scale, dtype=cfg.compute_dtype)
+    return w
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics but compute-dtype tensors.
+
+    Only the variance reduction runs in f32; the (B,S,D)-sized values stay
+    in the network dtype so GSPMD resharding (and the backward) never moves
+    a full-width f32 copy of the residual stream. The norms are still the
+    paper's full-precision carve-out — the *statistics* are exact."""
+    x = cot_boundary(x)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
+    return x * scale.astype(x.dtype)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """Rotary embedding table for integer positions: (..., head_dim/2, 2)."""
+    freqs = jnp.exp2(
+        -jnp.log2(theta) * jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+        / (head_dim // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def apply_rope(x: jax.Array, rot: jax.Array) -> jax.Array:
+    """Rotate pairs. x: (..., S, H, D); rot: (..., S, D/2, 2) broadcasting."""
+    xf = cot_boundary(x).astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    cos = jnp.expand_dims(rot[..., 0], axis=-2)  # (..., S, 1, D/2)
+    sin = jnp.expand_dims(rot[..., 1], axis=-2)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, f, dt)}
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(ks[1], d, f, dt)
+    p["down"] = dense_init(ks[2], f, d, dt)
+    return p
+
+
+def mlp_apply(p, x, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
+    act = ACT_FNS[cfg.act_fn]
+    up = qeinsum("bsd,df->bsf", x, dense_of(p["up"], cfg, qcfg), qcfg)
+    up = shard(up, "batch", "seq", "act_ff")
+    if cfg.mlp_gated:
+        gate = qeinsum("bsd,df->bsf", x, dense_of(p["gate"], cfg, qcfg), qcfg)
+        up = act(gate) * up
+    else:
+        up = act(up)
+    out = qeinsum("bsf,fd->bsd", up, dense_of(p["down"], cfg, qcfg), qcfg)
+    return shard(out, "batch", "seq", "embed")
+
+
+def embedding_init(key, cfg: ArchConfig):
+    n_books = cfg.num_codebooks or 1
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 2)
+    p = {"tok": embed_init(ks[0], cfg.vocab_size * n_books, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size * n_books, dt, std=0.02)
+    return p

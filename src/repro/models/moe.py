@@ -1,0 +1,253 @@
+"""Mixture-of-Experts: top-k router + shared experts + two dispatch paths.
+
+* ``sort``      — sort-based scatter dispatch (MaxText-style): tokens are
+  ranked within their expert via an argsort over expert ids, scattered into
+  a per-expert capacity buffer (E, C, D), processed, and gathered back.
+  O(T·K·D) data movement — no O(T·E·C) one-hot einsums, which at E=384
+  (kimi-k2) would dwarf the expert FLOPs themselves. Under pjit the
+  token-order -> expert-order scatter lowers to the EP all-to-all.
+* ``dense_ref`` — every token through every expert, masked combine. O(E)
+  FLOPs: only for CPU-scale smoke tests and as the correctness oracle for
+  the sort path.
+
+The router stays fp32 (accuracy-critical, tiny — the same carve-out the
+paper makes for batch-norm); expert GEMMs quantize like dense MLPs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
+from repro.distributed.sharding import current_mesh, shard
+from repro.models.common import ArchConfig, dense_init
+from repro.models.layers import ACT_FNS, dense_of
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_up": jax.random.normal(ks[1], (e, d, f), dt) * (d ** -0.5),
+        "w_gate": jax.random.normal(ks[2], (e, d, f), dt) * (d ** -0.5),
+        "w_down": jax.random.normal(ks[3], (e, f, d), dt) * (f ** -0.5),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "up": dense_init(ks[4], d, fs, dt),
+            "gate": dense_init(ks[5], d, fs, dt),
+            "down": dense_init(ks[6], fs, d, dt),
+        }
+    return p
+
+
+def _router(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing: (gates (T,K), expert ids (T,K), aux loss scalar)."""
+    T = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", cot_boundary(x).astype(jnp.float32),
+                        p["router"])
+    probs = jax.nn.softmax(logits, axis=-1).reshape(T, cfg.num_experts)
+    top_p, top_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch-style load-balance loss from bincounts (no (T,K,E) one-hot)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.bincount(top_i.reshape(-1), length=cfg.num_experts
+                      ).astype(jnp.float32) / (T * cfg.experts_per_token)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return top_p, top_i, aux
+
+
+def _expert_ffn(p, xe, cfg: ArchConfig, qcfg):
+    """xe: (..., E, C, D) tokens grouped per expert -> same shape."""
+    act = ACT_FNS[cfg.act_fn]
+    w_up = dense_of(p["w_up"], cfg, qcfg)
+    w_gate = dense_of(p["w_gate"], cfg, qcfg)
+    w_down = dense_of(p["w_down"], cfg, qcfg)
+    if xe.ndim == 4:  # grouped (G, E, C, D)
+        up = qeinsum("gecd,edf->gecf", xe, w_up, qcfg)
+        gate = qeinsum("gecd,edf->gecf", xe, w_gate, qcfg)
+        # note: "moe_ff" is the *weight* FSDP axis; the activation groups
+        # already occupy the data axis, so the hidden dim stays unsharded
+        up = shard(act(gate) * up, "batch", "experts", None, None)
+        return qeinsum("gecf,efd->gecd", up, w_down, qcfg)
+    up = qeinsum("ecd,edf->ecf", xe, w_up, qcfg)
+    gate = qeinsum("ecd,edf->ecf", xe, w_gate, qcfg)
+    up = shard(act(gate) * up, "experts", None, "moe_ff")
+    return qeinsum("ecf,efd->ecd", up, w_down, qcfg)
+
+
+def moe_apply(p, x, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    top_p, top_i, aux = _router(p, x, cfg)
+
+    if cfg.moe_dispatch == "dense_ref":
+        out = _dense_ref(p, x, top_p, top_i, cfg, qcfg)
+    else:
+        out = _sorted_dispatch(p, x, top_p, top_i, cfg, qcfg)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        act = ACT_FNS[cfg.act_fn]
+        up = qeinsum("bsd,df->bsf", x, dense_of(sp["up"], cfg, qcfg), qcfg)
+        gate = qeinsum("bsd,df->bsf", x, dense_of(sp["gate"], cfg, qcfg), qcfg)
+        out = out + qeinsum("bsf,fd->bsd", act(gate) * up,
+                            dense_of(sp["down"], cfg, qcfg), qcfg)
+    return shard(out, "batch", "seq", "embed"), aux
+
+
+def _dense_ref(p, x, top_p, top_i, cfg, qcfg):
+    """O(E) oracle: all tokens through all experts, weighted combine."""
+    B, S, D = x.shape
+    T, E = B * S, cfg.num_experts
+    xe = jnp.broadcast_to(x.reshape(1, T, D), (E, T, D))
+    ye = _expert_ffn(p, xe, cfg, qcfg)  # (E, T, D)
+    w = jnp.zeros((T, E), jnp.float32)
+    w = w.at[jnp.arange(T)[:, None], top_i].add(top_p)
+    return jnp.einsum("etd,te->td", ye.astype(jnp.float32), w
+                      ).reshape(B, S, D).astype(x.dtype)
+
+
+def _dp_groups() -> int:
+    """Number of data-parallel shards (the dispatch groups)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _group_routing_maps(flat_e, gates, E: int, C: int, K: int):
+    """Per-group routing index maps (runs under vmap over groups).
+
+    All heavy data movement downstream is GATHERS driven by these maps;
+    the only scatters are over (T_g·K,)-sized int32 index vectors, which
+    GSPMD replicates cheaply (D-wide scatter-adds would otherwise lower to
+    giant cross-shard reductions).
+
+    Returns:
+      slot_src  (E*C,)   source token for each expert-capacity slot
+      slot_fill (E*C,)   whether the slot is occupied
+      inv       (T_g, K) capacity slot assigned to each (token, k)
+      gate_inv  (T_g, K) gate, zeroed for dropped assignments
+      slot_gate (E*C,)   gate of the slot's occupant (0 if unfilled)
+    """
+    TK = flat_e.shape[0]
+    tok = jnp.arange(TK, dtype=jnp.int32) // K
+    counts = jax.ops.segment_sum(jnp.ones((TK,), jnp.int32), flat_e,
+                                 num_segments=E)
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    rank = jnp.arange(TK, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+    keep = rank < C
+    dst = jnp.where(keep, e_sorted * C + jnp.clip(rank, 0, C - 1), E * C)
+    slot_src = jnp.zeros((E * C + 1,), jnp.int32).at[dst].set(tok[order])
+    slot_fill = jnp.zeros((E * C + 1,), bool).at[dst].set(keep)
+    slot_gate = jnp.zeros((E * C + 1,), gates.dtype).at[dst].set(
+        gates[order] * keep)
+    inv = jnp.zeros((TK,), jnp.int32).at[order].set(dst)
+    gate_inv = (jnp.zeros((TK,), gates.dtype).at[order]
+                .set(gates[order] * keep))
+    return (slot_src[:E * C], slot_fill[:E * C],
+            inv.reshape(TK // K, K), gate_inv.reshape(TK // K, K),
+            slot_gate[:E * C])
+
+
+def _take_rows(a, idx):
+    return jnp.take_along_axis(a, idx[..., None], axis=1, mode="clip")
+
+
+@jax.custom_vjp
+def _dispatch_gather(xg, slot_src, slot_fill, inv, keep):
+    """xe[g,s] = xg[g, slot_src[g,s]] (0 if unfilled).
+
+    The automatic transpose of this gather is a cross-shard scatter-add that
+    XLA lowers to giant all-gathers; the hand-written vjp uses the *dual*
+    map instead: dxg[g,t] = Σ_k dxe[g, inv[g,t,k]] — another gather.
+    """
+    xe = _take_rows(xg, slot_src)
+    return jnp.where(slot_fill[..., None], xe, 0)
+
+
+def _dispatch_fwd(xg, slot_src, slot_fill, inv, keep):
+    return _dispatch_gather(xg, slot_src, slot_fill, inv, keep), \
+        (slot_src, slot_fill, inv, keep)
+
+
+def _dispatch_bwd(res, dxe):
+    slot_src, slot_fill, inv, keep = res
+    G = inv.shape[0]
+    d = _take_rows(dxe, inv.reshape(G, -1))          # (G, Tg*K, D)
+    d = d.reshape(inv.shape + (dxe.shape[-1],))      # (G, Tg, K, D)
+    dxg = jnp.sum(d * keep[..., None].astype(d.dtype), axis=2)
+    return dxg, None, None, None, None
+
+
+_dispatch_gather.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine_gather(ye, inv, gate, slot_src, slot_gate):
+    """out[g,t] = Σ_k ye[g, inv[g,t,k]] · gate[g,t,k].
+
+    vjp w.r.t. ye via the dual map: dye[g,s] = dout[g, slot_src[g,s]] ·
+    slot_gate[g,s] — a gather, not a scatter-add.
+    """
+    taken = _take_rows(ye, inv.reshape(inv.shape[0], -1))
+    taken = taken.reshape(inv.shape + (ye.shape[-1],))
+    return jnp.sum(taken * gate[..., None].astype(taken.dtype), axis=2)
+
+
+def _combine_fwd(ye, inv, gate, slot_src, slot_gate):
+    return _combine_gather(ye, inv, gate, slot_src, slot_gate), \
+        (ye, inv, gate, slot_src, slot_gate)
+
+
+def _combine_bwd(res, dout):
+    ye, inv, gate, slot_src, slot_gate = res
+    dye = _take_rows(dout, slot_src) * slot_gate[..., None].astype(dout.dtype)
+    taken = _take_rows(ye, inv.reshape(inv.shape[0], -1))
+    taken = taken.reshape(inv.shape + (ye.shape[-1],))
+    dgate = jnp.sum(taken * dout[:, :, None, :].astype(taken.dtype), axis=-1)
+    return dye, None, dgate.astype(gate.dtype), None, None
+
+
+_combine_gather.defvjp(_combine_fwd, _combine_bwd)
+
+
+def _sorted_dispatch(p, x, top_p, top_i, cfg, qcfg):
+    """Grouped sort dispatch, capacity C_g = cf·T_g·K/E per group."""
+    B, S, D = x.shape
+    T, E, K = B * S, cfg.num_experts, cfg.experts_per_token
+    G = _dp_groups()
+    if T % G:
+        G = 1
+    Tg = T // G
+    C = max(int(cfg.capacity_factor * Tg * K / E), 1)
+
+    xg = shard(x.reshape(G, Tg, D), "batch", None, None)
+    eg = top_i.reshape(G, Tg * K)
+    gg = top_p.reshape(G, Tg * K).astype(x.dtype)
+
+    slot_src, slot_fill, inv, gate_inv, slot_gate = jax.vmap(
+        lambda e, g: _group_routing_maps(e, g, E, C, K))(eg, gg)
+    keep = gate_inv != 0
+
+    xe = _dispatch_gather(xg, slot_src, slot_fill, inv, keep)
+    xe = shard(xe.reshape(G, E, C, D), "batch", "experts", None, None)
+    ye = _expert_ffn(p, xe, cfg, qcfg)  # (G, E, C, D)
+    ye = shard(ye, "batch", "experts", None, None).reshape(G, E * C, D)
+
+    out = _combine_gather(ye, inv.reshape(G, Tg, K), gate_inv.reshape(G, Tg, K),
+                          slot_src, slot_gate)
+    return shard(out.reshape(B, S, D), "batch", None, None).astype(x.dtype)

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) block — chunked scan for training, O(1)-state decode.
+
+The selective-state recurrence  h_t = exp(dt_t·A)·h_{t-1} + dt_t·x_t·B_t^T,
+y_t = C_t·h_t + D·x_t  is computed chunk-parallel: quadratic masked-decay
+attention within chunks of ``cfg.ssm_chunk`` tokens plus a cross-chunk state
+scan. All projections are quantized GEMMs; the recurrence itself is the
+paper's full-precision-accumulator analogue and stays fp32 (DESIGN.md §5).
+
+Single group (B/C shared across heads), depthwise causal conv of width
+``ssm_conv_width`` implemented as a sum of shifts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
+from repro.distributed.sharding import shard
+from repro.models.common import ArchConfig, dense_init
+from repro.models.layers import dense_of, rms_norm
+
+__all__ = ["mamba_init", "mamba_apply", "init_mamba_state"]
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    n = cfg.ssm_state_dim
+    return d_in, h, p, n
+
+
+def mamba_init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 7)
+    conv_dim = d_in + 2 * n
+    return {
+        # separate projections (z gate, x, B, C, dt) so the wide ones shard
+        # over the model axis without resharding a fused output split
+        "z_proj": dense_init(ks[0], d, d_in, dt),
+        "x_proj": dense_init(ks[1], d, d_in, dt),
+        "b_proj": dense_init(ks[2], d, n, dt),
+        "c_proj": dense_init(ks[3], d, n, dt),
+        "dt_proj": dense_init(ks[4], d, h, dt),
+        # depthwise causal conv, one weight block per stream (x, B, C) so
+        # the sharded x stream never concatenates with the replicated B/C
+        "conv_wx": jax.random.normal(ks[5], (w, d_in), jnp.float32) * (w ** -0.5),
+        "conv_wb": jax.random.normal(jax.random.fold_in(ks[5], 1), (w, n), jnp.float32) * (w ** -0.5),
+        "conv_wc": jax.random.normal(jax.random.fold_in(ks[5], 2), (w, n), jnp.float32) * (w ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[6], d_in, d, dt),
+    }
+
+
+def init_mamba_state(batch: int, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    d_in, h, p, n = _dims(cfg)
+    w = cfg.ssm_conv_width - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, d_in), jnp.float32),
+        "conv_b": jnp.zeros((batch, w, n), jnp.float32),
+        "conv_c": jnp.zeros((batch, w, n), jnp.float32),
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prefix: Optional[jax.Array]):
+    """Depthwise causal conv as a sum of shifted slices. xbc: (B,S,C)."""
+    width = w.shape[0]
+    if prefix is None:
+        pad = jnp.zeros_like(xbc[:, : width - 1])
+    else:
+        pad = prefix.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+w-1, C)
+    S = xbc.shape[1]
+    out = sum(full[:, i:i + S] * w[i] for i in range(width)) + b
+    new_prefix = full[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(out), new_prefix
+
+
+def mamba_apply(
+    p: Dict[str, Any],
+    x: jax.Array,                 # (B, S, D)
+    cfg: ArchConfig,
+    qcfg: Optional[QuantConfig],
+    state: Optional[Dict[str, jax.Array]] = None,
+):
+    """Returns (out (B,S,D), new_state or None)."""
+    B, S, D = x.shape
+    d_in, H, P, N = _dims(cfg)
+
+    z = qeinsum("bsd,de->bse", x, dense_of(p["z_proj"], cfg, qcfg), qcfg)
+    xin = qeinsum("bsd,de->bse", x, dense_of(p["x_proj"], cfg, qcfg), qcfg)
+    bin_ = qeinsum("bsd,dn->bsn", x, dense_of(p["b_proj"], cfg, qcfg), qcfg)
+    cin = qeinsum("bsd,dn->bsn", x, dense_of(p["c_proj"], cfg, qcfg), qcfg)
+    dt_raw = qeinsum("bsd,dh->bsh", x, dense_of(p["dt_proj"], cfg, qcfg), qcfg)
+    z = shard(z, "batch", "seq", "ssm_inner")
+    xin = shard(xin, "batch", "seq", "ssm_inner")
+    bias_x, bias_b, bias_c = jnp.split(p["conv_b"], [d_in, d_in + N])
+    pre = state if state is not None else {}
+    xs, new_cx = _causal_conv(cot_boundary(xin).astype(jnp.float32), p["conv_wx"], bias_x,
+                              pre.get("conv_x"))
+    Bv, new_cb = _causal_conv(cot_boundary(bin_).astype(jnp.float32), p["conv_wb"], bias_b,
+                              pre.get("conv_b"))
+    Cv, new_cc = _causal_conv(cot_boundary(cin).astype(jnp.float32), p["conv_wc"], bias_c,
+                              pre.get("conv_c"))
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(cot_boundary(dt_raw).astype(jnp.float32)
+                         + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    dA = dt * A                                                       # log-decay
+
+    if state is None:
+        y, last_state = _ssd_chunked(xs, dt, dA, Bv, Cv, cfg.ssm_chunk)
+        new_state = None
+    else:
+        h0 = state["ssm"]
+        # sequential step(s) — decode path, S is small (typically 1)
+        def step(h, inp):
+            xt, dtt, dat, bt, ct = inp
+            h = jnp.exp(dat)[:, :, None, None] * h + jnp.einsum(
+                "bhp,bn,bh->bhpn", xt, bt, dtt)
+            y = jnp.einsum("bhpn,bn->bhp", h, ct)
+            return h, y
+        inps = (xs.swapaxes(0, 1), dt.swapaxes(0, 1), dA.swapaxes(0, 1),
+                Bv.swapaxes(0, 1), Cv.swapaxes(0, 1))
+        h_last, ys = jax.lax.scan(step, h0, inps)
+        y = ys.swapaxes(0, 1)  # (B,S,H,P)
+        new_state = {"conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc,
+                     "ssm": h_last}
+
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = qeinsum("bse,ed->bsd", y, dense_of(p["out_proj"], cfg, qcfg), qcfg)
+    return shard(out, "batch", "seq", "embed"), new_state
+
+
+def _ssd_chunked(xs, dt, dA, Bv, Cv, Q: int):
+    """Chunk-parallel SSD. xs:(B,S,H,P) dt,dA:(B,S,H) Bv,Cv:(B,S,N)."""
+    B, S, H, P = xs.shape
+    N = Bv.shape[-1]
+    Q = min(Q, S)
+    pad = (-S) % Q
+    if pad:  # zero padding is inert: dA=0 (decay 1), dt·x=0 (no state add)
+        z = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, h = _ssd_chunked(z(xs), z(dt), z(dA), z(Bv), z(Cv), Q)
+        return y[:, :S], h
+    nc = S // Q
+
+    def chunkify(a):
+        return a.reshape((B, nc, Q) + a.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, dac = chunkify(xs), chunkify(dt), chunkify(dA)
+    bc, cc = chunkify(Bv), chunkify(Cv)
+
+    def chunk_step(h, inp):
+        xq, dtq, daq, bq, cq = inp  # (B,Q,...)
+        l = jnp.cumsum(daq, axis=1)                     # (B,Q,H) inclusive
+        dtx = xq * dtq[..., None]                       # (B,Q,H,P)
+        # intra-chunk: masked decay attention
+        g = jnp.einsum("bqn,bkn->bqk", cq, bq)          # (B,Q,Q)
+        ldiff = l[:, :, None, :] - l[:, None, :, :]     # (B,Q,K,H) l_q - l_k
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        m = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", g, m, dtx)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, h, jnp.exp(l))
+        # chunk-end state
+        ltot = l[:, -1]                                  # (B,H)
+        decay_rest = jnp.exp(ltot[:, None] - l)          # (B,Q,H)
+        s_chunk = jnp.einsum("bkhp,bkn,bkh->bhpn", dtx, bq, decay_rest)
+        h_new = jnp.exp(ltot)[:, :, None, None] * h + s_chunk
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, dac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y, h_last

@@ -1,0 +1,46 @@
+"""Modality frontend stubs (per the assignment: backbones only).
+
+``phi-3-vision`` and ``musicgen`` specify the transformer backbone; the CLIP
+vision tower and EnCodec audio codec are STUBS that produce the tensors the
+backbone consumes. ``input_specs()`` in the configs package hands the dry-run
+these shapes directly; the functions here generate concrete values for the
+smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+__all__ = ["vision_patches_stub", "encodec_tokens_stub", "apply_delay_pattern"]
+
+
+def vision_patches_stub(key, batch: int, cfg: ArchConfig) -> jax.Array:
+    """Precomputed CLIP-tile patch embeddings, already projected to d_model.
+
+    Real phi-3-vision: 336x336 tiles -> CLIP ViT-L/14 -> 2-layer MLP
+    projector -> 576 patch embeddings. The stub draws unit-scale gaussians
+    with the correct (B, num_patches, d_model) shape/dtype.
+    """
+    return jax.random.normal(
+        key, (batch, cfg.num_patches, cfg.d_model)).astype(cfg.compute_dtype)
+
+
+def encodec_tokens_stub(key, batch: int, seq: int, cfg: ArchConfig) -> jax.Array:
+    """EnCodec RVQ codes: (B, S, num_codebooks) ints in [0, vocab)."""
+    return jax.random.randint(
+        key, (batch, seq, cfg.num_codebooks), 0, cfg.vocab_size, jnp.int32)
+
+
+def apply_delay_pattern(tokens: jax.Array, pad_id: int = 0) -> jax.Array:
+    """MusicGen delay pattern: codebook k is shifted right by k steps so the
+    model predicts all books of step t from strictly-past codes."""
+    B, S, K = tokens.shape
+    out = []
+    for k in range(K):
+        shifted = jnp.concatenate(
+            [jnp.full((B, k), pad_id, tokens.dtype), tokens[:, : S - k, k]],
+            axis=1)
+        out.append(shifted)
+    return jnp.stack(out, axis=-1)

@@ -1,0 +1,4 @@
+from repro.numerics.fp import FPFormat, fp_quantize
+from repro.numerics.rounding import stochastic_round
+
+__all__ = ["FPFormat", "fp_quantize", "stochastic_round"]

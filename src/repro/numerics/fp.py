@@ -1,0 +1,71 @@
+"""Generic low-precision floating-point fake-quantization.
+
+Used for the paper's FP8 (e4m3) / FP16 baselines (Tables 4, 5, 8). Pure-jnp
+simulation: clamp to the format's finite range, round the mantissa to
+``man_bits`` with round-to-nearest-even, flush subnormals-below-min to the
+subnormal grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FPFormat", "fp_quantize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """An IEEE-like miniature float: 1 sign, ``exp_bits``, ``man_bits``.
+
+    e4m3 (paper's FP8) keeps the extra exponent value for finite max 448
+    like the OCP/NV variant; we use the plain IEEE-style max for simplicity:
+    max = 2**(bias+1) * (2 - 2**-man_bits) is close enough for QAT trends.
+    """
+
+    exp_bits: int = 4
+    man_bits: int = 3
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def max_value(self) -> float:
+        return float(2.0 ** self.bias * (2.0 - 2.0 ** (-self.man_bits)))
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** (1 - self.bias))
+
+
+def fp_quantize(x: jax.Array, fmt: FPFormat, scale_axis: Optional[int] = None) -> jax.Array:
+    """Fake-quantize onto the miniature-float grid, with absmax scaling.
+
+    The tensor is scaled so its absmax maps to the format's max value
+    (mirroring the paper's loss-scaling-free per-group scaling), quantized,
+    and scaled back.
+    """
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    absmax = (
+        jnp.max(jnp.abs(xf))
+        if scale_axis is None
+        else jnp.max(jnp.abs(xf), axis=tuple(i for i in range(x.ndim) if i != scale_axis % x.ndim), keepdims=True)
+    )
+    scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / fmt.max_value
+    v = xf / scale
+    mag = jnp.abs(v)
+    # exponent of the leading bit, clamped to the subnormal floor
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)))
+    e = jnp.clip(e, 1 - fmt.bias, fmt.bias)
+    ulp = jnp.exp2(e - fmt.man_bits)
+    q = jnp.round(v / ulp) * ulp
+    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
+    return (q * scale).astype(orig_dtype)

@@ -1,0 +1,24 @@
+"""Rounding primitives (paper Eq. 10).
+
+Stochastic rounding is used by the theory benchmarks (Theorems 1/2 assume
+``E SR(x) = x``) and optionally by Q_U; the deployed datapath uses
+deterministic round-to-nearest (SR needs RNGs that cost energy, §4.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["stochastic_round", "round_nearest"]
+
+
+def stochastic_round(key: jax.Array, x: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding: floor(x) + Bernoulli(frac(x))."""
+    floor = jnp.floor(x)
+    p = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return floor + (p <= (x.astype(jnp.float32) - floor)).astype(x.dtype)
+
+
+def round_nearest(x: jax.Array) -> jax.Array:
+    """Round-to-nearest, ties away from zero (matches the kernels)."""
+    return jnp.floor(x + 0.5)

@@ -1,0 +1,8 @@
+from repro.optim.baselines import adamw, quantized_update, sgd
+from repro.optim.madam import (LNSWeight, MadamConfig, MadamState, init_lns_params,
+                               madam_fp, madam_lns, materialize)
+
+__all__ = [
+    "LNSWeight", "MadamConfig", "MadamState", "init_lns_params", "materialize",
+    "madam_lns", "madam_fp", "sgd", "adamw", "quantized_update",
+]

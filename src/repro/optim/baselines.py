@@ -1,0 +1,104 @@
+"""Baseline optimizers (paper §6.1.2): SGD+momentum and AdamW, plus the
+*quantized weight update* wrapper of Eq. 4 used by the Fig.-7 comparison
+(W ← Q_log(U(W, ∇W)) at B_U bits)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import LNSFormat, lns_quantize
+
+__all__ = ["sgd", "adamw", "quantized_update"]
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+    count: jax.Array
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.9, weight_decay: float = 1e-4):
+    """SGD with momentum + decoupled weight decay (paper's CV default)."""
+
+    def init(params):
+        return SGDState(momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params, key=None):
+        def leaf(p, g, m):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        out = [leaf(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+                SGDState(momentum=jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+                         count=state.count + 1))
+
+    return init, update
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def adamw(lr: float = 3e-5, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01):
+    """AdamW (paper's NLP default)."""
+
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamWState(m=z(), v=z(), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params, key=None):
+        c = state.count + 1
+        cf = c.astype(jnp.float32)
+
+        def leaf(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** cf)
+            vh = v / (1 - b2 ** cf)
+            new = p.astype(jnp.float32) - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return new.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+                AdamWState(m=jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+                           v=jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+                           count=c))
+
+    return init, update
+
+
+def quantized_update(opt, fmt: LNSFormat, scale_axis: Optional[int] = -1):
+    """Eq. 4 wrapper: quantize the updated weights onto the LNS grid.
+
+    This is how SGD/AdamW are made to 'update in LNS' for the Fig.-7
+    degradation study — and why they degrade: their update magnitudes are
+    not proportional to the weights (Theorem 1)."""
+    init, update = opt
+
+    def qupdate(grads, state, params, key=None):
+        new_params, new_state = update(grads, state, params, key=key)
+
+        def q(p):
+            if p.ndim < 2:  # same fp carve-out as Madam-LNS
+                return p
+            ax = scale_axis if p.ndim >= 2 else None
+            return lns_quantize(p, fmt, scale_axis=ax)
+
+        return jax.tree.map(q, new_params), new_state
+
+    return init, qupdate

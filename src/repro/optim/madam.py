@@ -1,0 +1,224 @@
+"""Madam on LNS — paper §4, Algorithm 1.
+
+The co-design half of LNS-Madam: weights live *permanently* as LNS integer
+exponent codes (no floating-point master copy), and the multiplicative
+update is an **integer add on the exponent**:
+
+    code ← clamp( round( code + η·γ_U · (g/√ĝ₂) ⊙ sign(W) ), 0, 2^(B_U−1)−1 )
+
+(our codes store the negated exponent, so a magnitude *decrease* is a code
+*increase*; the sign never flips — multiplicative updates preserve sign).
+
+Because the weights are already LNS codes there is no integer→LNS conversion
+in the update path (paper §4, last paragraph), and the state is
+1 B sign + 2 B code per element instead of a 4 B fp32 master + 4 B Adam m.
+
+Leaves with fewer than 2 dims (norm gains, biases — the paper keeps BN at
+full precision) take a full-precision Madam step on a dense fp32 copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import LNSFormat, compute_scale, lns_decode, lns_encode
+from repro.numerics.rounding import round_nearest, stochastic_round
+
+__all__ = ["LNSWeight", "MadamConfig", "MadamState", "init_lns_params",
+           "materialize", "madam_lns", "madam_fp"]
+
+
+class LNSWeight(NamedTuple):
+    """A weight tensor stored natively in LNS (sign, exponent code, scale)."""
+
+    sign: jax.Array  # int8 in {-1, +1}
+    code: jax.Array  # fmt.code_dtype, [0, max_code]
+    scale: jax.Array  # f32, power-of-two, broadcastable per-channel scale
+
+
+def is_lns_weight(leaf) -> bool:
+    return isinstance(leaf, LNSWeight)
+
+
+@dataclasses.dataclass(frozen=True)
+class MadamConfig:
+    """Algorithm-1 hyperparameters (paper defaults: η=2⁻⁷, β=0.999).
+
+    ``factored`` replaces the full second-moment EMA with Adafactor-style
+    row/col factors for >=2-D leaves — a beyond-paper scaling feature that
+    makes optimizer state O(R+C) instead of O(R·C) (used by the trillion-
+    parameter MoE configs; DESIGN.md §8).
+    """
+
+    lr: float = 2.0 ** -7
+    beta: float = 0.999
+    update_format: LNSFormat = LNSFormat(bits=16, gamma=8 * (1 << 8))
+    stochastic: bool = False          # SR on the exponent round (Q_U option)
+    eps: float = 1e-30
+    fp_lr: Optional[float] = None     # lr for the fp (ndim<2) leaves
+    fp_clip: float = 10.0             # Madam's p-clamp for fp leaves
+    factored: bool = False            # Adafactor-style factored g2
+
+    def __post_init__(self):
+        if self.update_format.bits < 2:
+            raise ValueError("update_format.bits must be >= 2")
+
+
+class MadamState(NamedTuple):
+    g2: Any          # second-moment EMA pytree (fp32), like params
+    count: jax.Array
+
+
+def _lns_leaf_filter(path, leaf) -> bool:
+    """Default policy: >=2-D tensors live in LNS; 1-D/scalars stay fp."""
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2
+
+
+def init_lns_params(params, cfg: MadamConfig, scale_axis="auto",
+                    leaf_filter: Callable = _lns_leaf_filter):
+    """Encode a dense parameter pytree into mixed LNSWeight/fp leaves.
+
+    ``scale_axis="auto"`` keeps per-channel resolution on every axis except
+    the contraction (-2) axis — so stacked (scanned) layer weights and MoE
+    expert stacks each get their own output-channel scales.
+    """
+    fmt = cfg.update_format
+
+    def enc(path, w):
+        if not leaf_filter(path, w):
+            return w.astype(jnp.float32)
+        if scale_axis == "auto":
+            ax = tuple(i for i in range(w.ndim) if i != w.ndim - 2)
+        else:
+            ax = scale_axis
+        scale = compute_scale(w, axis=ax)
+        sign, code = lns_encode(w, fmt, scale)
+        return LNSWeight(sign=sign, code=code, scale=scale)
+
+    return jax.tree_util.tree_map_with_path(enc, params)
+
+
+def materialize(params, cfg: MadamConfig, dtype=jnp.bfloat16):
+    """Decode LNSWeight leaves to dense arrays for the forward pass.
+
+    fp leaves (norm gains etc.) pass through untouched — they stay fp32.
+    """
+    fmt = cfg.update_format
+
+    def dec(leaf):
+        if is_lns_weight(leaf):
+            return lns_decode(leaf.sign, leaf.code, fmt, leaf.scale, dtype=dtype)
+        return leaf
+
+    return jax.tree.map(dec, params, is_leaf=is_lns_weight)
+
+
+def madam_lns(cfg: MadamConfig):
+    """Build the (init, update) pair for LNS-native Madam.
+
+    ``update(grads, state, params, key=None)`` consumes gradients w.r.t. the
+    *dense* (materialized) weights and returns new (params, state). ``key``
+    is required when ``cfg.stochastic``.
+    """
+    fmt = cfg.update_format
+
+    def _shape_of(p):
+        return p.code.shape if is_lns_weight(p) else p.shape
+
+    def _v_init(p):
+        shape = _shape_of(p)
+        if cfg.factored and len(shape) >= 2:
+            return {"r": jnp.zeros(shape[:-1], jnp.float32),
+                    "c": jnp.zeros(shape[:-2] + shape[-1:], jnp.float32)}
+        return jnp.zeros(shape, jnp.float32)
+
+    def _v_update(g, v):
+        """EMA update; returns (new_v, dense v-hat for normalization)."""
+        if isinstance(v, dict):  # factored
+            r = cfg.beta * v["r"] + (1.0 - cfg.beta) * jnp.mean(g * g, axis=-1)
+            c = cfg.beta * v["c"] + (1.0 - cfg.beta) * jnp.mean(g * g, axis=-2)
+            denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), 1e-30)
+            vhat = r[..., None] * c[..., None, :] / denom[..., None]
+            return {"r": r, "c": c}, vhat
+        nv = (1.0 - cfg.beta) * g * g + cfg.beta * v
+        return nv, nv
+
+    def init(params) -> MadamState:
+        g2 = jax.tree.map(_v_init, params, is_leaf=is_lns_weight)
+        return MadamState(g2=g2, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: MadamState, params, key: Optional[jax.Array] = None):
+        count = state.count + 1
+        # bias-corrected second-moment EMA (Algorithm 1 + init correction)
+        bc = 1.0 - cfg.beta ** count.astype(jnp.float32)
+
+        leaves_p, treedef = jax.tree_util.tree_flatten(params, is_leaf=is_lns_weight)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_v = treedef.flatten_up_to(state.g2)
+        if cfg.stochastic:
+            if key is None:
+                raise ValueError("stochastic Q_U requires a PRNG key")
+            keys = list(jax.random.split(key, len(leaves_p)))
+        else:
+            keys = [None] * len(leaves_p)
+
+        new_p, new_v = [], []
+        for p, g, v, k in zip(leaves_p, leaves_g, leaves_v, keys):
+            g = g.astype(jnp.float32)
+            v, vhat = _v_update(g, v)
+            gstar = g * jax.lax.rsqrt(vhat / bc + cfg.eps)
+            if is_lns_weight(p):
+                # integer exponent step: Δcode = +η·γ_U·g*·sign(W)
+                step = cfg.lr * fmt.gamma * gstar * p.sign.astype(jnp.float32)
+                target = p.code.astype(jnp.float32) + step
+                rounded = (stochastic_round(k, target) if cfg.stochastic
+                           else round_nearest(target))
+                code = jnp.clip(rounded, 0, fmt.max_code).astype(fmt.code_dtype)
+                new_p.append(LNSWeight(sign=p.sign, code=code, scale=p.scale))
+            else:
+                # fp Madam for norm gains / biases (paper's BN carve-out)
+                lr = cfg.fp_lr if cfg.fp_lr is not None else cfg.lr
+                w = p * jnp.exp(-lr * jnp.sign(p) * gstar)
+                # allow zero-crossing for fp leaves via an additive floor
+                w = jnp.where(jnp.abs(p) < 1e-8, p - lr * gstar * 1e-8, w)
+                new_p.append(jnp.clip(w, -cfg.fp_clip, cfg.fp_clip))
+            new_v.append(v)
+
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                MadamState(g2=jax.tree_util.tree_unflatten(treedef, new_v), count=count))
+
+    return init, update
+
+
+def madam_fp(lr: float = 2.0 ** -7, beta: float = 0.999, clip: float = 10.0,
+             eps: float = 1e-30):
+    """Full-precision Madam (Eq. 9) — Bernstein et al.'s optimizer, the
+    paper's pre-quantization baseline and the Fig.-7 comparison anchor."""
+
+    def init(params) -> MadamState:
+        return MadamState(g2=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: MadamState, params, key=None):
+        count = state.count + 1
+        bc = 1.0 - beta ** count.astype(jnp.float32)
+
+        def leaf(p, g, v):
+            g = g.astype(jnp.float32)
+            v = (1.0 - beta) * g * g + beta * v
+            gstar = g * jax.lax.rsqrt(v / bc + eps)
+            w = p.astype(jnp.float32) * jnp.exp(-lr * jnp.sign(p) * gstar)
+            return jnp.clip(w, -clip, clip).astype(p.dtype), v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state.g2)
+        out = [leaf(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_p, MadamState(g2=new_v, count=count)
+
+    return init, update

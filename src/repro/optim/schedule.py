@@ -1,0 +1,34 @@
+"""Learning-rate schedules. The paper finds Madam robust at a fixed η=2⁻⁷;
+warmup/cosine are provided for the SGD/AdamW baselines and large-scale runs
+(ImageNet §.5.4 uses a 10-epoch warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_cosine", "warmup_stable_decay"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak_lr - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_stable_decay(peak_lr: float, warmup_steps: int, stable_steps: int,
+                        decay_steps: int, floor_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay_frac = jnp.clip((step - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+        dec = peak_lr * (1.0 - (1.0 - floor_frac) * decay_frac)
+        out = jnp.where(step < warmup_steps, warm, jnp.where(step < warmup_steps + stable_steps, peak_lr, dec))
+        return out
+    return fn

@@ -1,0 +1,6 @@
+from repro.training.steps import (TrainState, build_train_step,
+                                  build_prefill_step, build_decode_step,
+                                  init_train_state)
+
+__all__ = ["TrainState", "build_train_step", "build_prefill_step",
+           "build_decode_step", "init_train_state"]

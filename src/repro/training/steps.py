@@ -1,0 +1,137 @@
+"""Step builders: LNS-native train step, prefill step, decode step.
+
+The train step is the paper's full pipeline (Fig. 3):
+
+  1. materialize: LNS codes -> dense bf16 (per layer inside the scan; no
+     fp32 master copy exists anywhere in the train state)
+  2. forward/backward with Q_W/Q_A/Q_E fake-quant STE (``qeinsum``)
+  3. Q_G on the final weight gradients
+  4. Madam update directly on the integer exponent codes
+
+Gradient microbatching (``accum_steps``) accumulates quantized microbatch
+gradients — XLA overlaps each microbatch's backward with the previous
+all-reduce (latency-hiding scheduler flags set in ``launch.train``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig, quantize_grads
+from repro.models.common import ArchConfig
+from repro.models.model import decode_step as model_decode_step
+from repro.models.model import forward, lm_loss
+from repro.optim.madam import MadamConfig, MadamState, init_lns_params, \
+    madam_lns, materialize
+
+__all__ = ["TrainState", "init_train_state", "build_train_step",
+           "build_prefill_step", "build_decode_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any          # mixed LNSWeight / fp pytree
+    opt: MadamState
+    step: jax.Array
+
+
+def init_train_state(key, cfg: ArchConfig, mcfg: MadamConfig) -> TrainState:
+    """Initialize params directly in LNS (jit/eval_shape friendly)."""
+    from repro.models.model import init_params
+    dense = init_params(key, cfg)
+    params = init_lns_params(dense, mcfg, scale_axis="auto")
+    init_opt, _ = madam_lns(mcfg)
+    return TrainState(params=params, opt=init_opt(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    qcfg: Optional[QuantConfig],
+    mcfg: MadamConfig,
+    *,
+    accum_steps: int = 1,
+    remat: bool = True,
+    scan_unroll: int | bool = 1,
+) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+    _, opt_update = madam_lns(mcfg)
+
+    def loss_fn(dense, batch):
+        return lm_loss(dense, batch, cfg, qcfg, remat=remat,
+                       scan_unroll=scan_unroll)
+
+    def one_microbatch(dense, mb):
+        loss, grads = jax.value_and_grad(loss_fn)(dense, mb)
+        return loss, quantize_grads(grads, qcfg)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        dense = materialize(state.params, mcfg, dtype=cfg.compute_dtype)
+
+        if accum_steps == 1:
+            loss, grads = one_microbatch(dense, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = one_microbatch(dense, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), dense)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, new_opt = opt_update(grads, state.opt, state.params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step.astype(jnp.float32)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
+                       mcfg: Optional[MadamConfig] = None, *,
+                       scan_unroll: int | bool = 1) -> Callable:
+    """``prefill(params, batch) -> last-position logits``.
+
+    Runs the flash (training) attention path over the full prompt; the KV
+    write-back is modeled by the decode cache in serving proper — its bytes
+    are negligible next to prefill compute (DESIGN.md §Deviations).
+    """
+
+    def prefill_step(params, batch):
+        if mcfg is not None:
+            params = materialize(params, mcfg, dtype=cfg.compute_dtype)
+        out = forward(params, batch["tokens"], cfg, qcfg,
+                      patches=batch.get("patches"), remat=False,
+                      scan_unroll=scan_unroll)
+        return out.logits[:, -1]
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
+                      mcfg: Optional[MadamConfig] = None, *,
+                      scan_unroll: int | bool = 1) -> Callable:
+    """``decode(params, caches, batch, pos) -> (logits, caches)``."""
+
+    def serve_step(params, caches, batch, pos):
+        if mcfg is not None:
+            params = materialize(params, mcfg, dtype=cfg.compute_dtype)
+        return model_decode_step(params, caches, batch["tokens"], cfg, qcfg,
+                                 pos_offset=pos, scan_unroll=scan_unroll)
+
+    return serve_step

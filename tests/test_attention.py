@@ -1,0 +1,117 @@
+"""Flash attention vs naive softmax oracle; decode caches; MLA absorption."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import flash_attention
+
+
+def naive_attention(q, k, v, *, window=None, softcap=None, scale=None,
+                    q_offset=0):
+    B, Sq, H, D = q.shape
+    scale = scale or 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (64, None),
+                                            (None, 30.0), (16, 50.0)])
+@pytest.mark.parametrize("block_k", [32, 128])
+def test_flash_matches_naive(key, window, softcap, block_k):
+    B, S, H, D = 2, 256, 4, 32
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    out = flash_attention(q, k, v, window=window, softcap=softcap,
+                          block_k=block_k)
+    ref = naive_attention(q, k, v, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_mla_value_dim(key):
+    """v head width != qk head width (MLA)."""
+    B, S, H, D, Dv = 2, 128, 2, 24, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, Dv))
+    out = flash_attention(q, k, v)
+    ref = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_grad_finite(key):
+    B, S, H, D = 1, 64, 2, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    g = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v)))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_sliding_window_cache_ring_buffer(key):
+    """Window-layer decode with a ring buffer == full-history attention
+    restricted to the window."""
+    from repro.models import ArchConfig
+    from repro.models.attention import attn_init, attn_apply, init_kv_cache
+
+    cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                     num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                     vocab_size=64, sliding_window=8, dtype="float32")
+    p = attn_init(key, cfg)
+    S = 24
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 32))
+    positions = jnp.arange(S)
+    full, _ = attn_apply(p, x, cfg, None, positions=positions,
+                         window=cfg.sliding_window)
+    # decode one token at a time through the ring cache
+    cache = init_kv_cache(1, S, cfg, window=cfg.sliding_window)
+    assert cache["k"].shape[1] == 8  # ring capacity = window
+    outs = []
+    for t in range(S):
+        o, cache = attn_apply(p, x[:, t:t + 1], cfg, None,
+                              positions=positions[t:t + 1],
+                              window=cfg.sliding_window, cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_decode_matches_train(key):
+    from repro.models import ArchConfig
+    from repro.models.attention import init_mla_cache, mla_apply, mla_init
+
+    cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=48,
+                     num_heads=3, num_kv_heads=3, head_dim=16, d_ff=64,
+                     vocab_size=64, use_mla=True, q_lora_rank=24,
+                     kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                     v_head_dim=16, dtype="float32")
+    p = mla_init(key, cfg)
+    S = 12
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, S, 48))
+    positions = jnp.arange(S)
+    full, _ = mla_apply(p, x, cfg, None, positions=positions)
+    cache = init_mla_cache(2, S, cfg)
+    outs = []
+    for t in range(S):
+        o, cache = mla_apply(p, x[:, t:t + 1], cfg, None,
+                             positions=positions[t:t + 1], cache=cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)

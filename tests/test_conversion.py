@@ -1,0 +1,103 @@
+"""LNS<->integer conversion: exact decomposition + Mitchell hybrid (§2.2/2.3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion as cv
+
+
+@pytest.mark.parametrize("gamma", [1, 2, 4, 8, 16, 32])
+def test_exact_decomposition_equals_exp2(gamma):
+    """2^(p/γ) = 2^q · LUT[r] exactly (float flavour)."""
+    p = jnp.arange(0, 8 * gamma)
+    got = cv.exp2_exact(p, gamma)
+    want = np.exp2(np.arange(0, 8 * gamma) / gamma)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("gamma,lut", [(8, 8), (8, 4), (8, 2), (8, 1),
+                                       (16, 4), (32, 8)])
+def test_hybrid_error_bound(gamma, lut):
+    """Mitchell hybrid error <= the single-interval Mitchell bound (~8.6%)
+    shrinking as the LUT grows."""
+    p = jnp.arange(0, 4 * gamma)
+    approx = cv.exp2_hybrid(p, gamma, lut)
+    exact = np.exp2(np.arange(0, 4 * gamma) / gamma)
+    rel = np.abs(np.asarray(approx) - exact) / exact
+    b_l = (gamma // lut).bit_length() - 1
+    # worst Mitchell error over an interval of 2^b_l remainder steps
+    bound = 0.09 / max(lut, 1) ** 0.0 if lut == 1 else 0.09
+    assert rel.max() <= 0.09
+    if lut == gamma:
+        assert rel.max() <= 1e-6  # full LUT = exact
+
+
+def test_hybrid_error_monotone_in_lut():
+    """Max *relative* error is non-increasing in LUT size (the Mitchell
+    max-error point t*=1/ln2-1 sits inside [0, 0.5), so LUT=1 and LUT=2 tie;
+    larger LUTs clip the interval below t*)."""
+    gamma = 8
+    p = jnp.arange(0, 16 * gamma)
+    exact = np.exp2(np.arange(0, 16 * gamma) / gamma)
+    errs = []
+    for lut in (1, 2, 4, 8):
+        approx = np.asarray(cv.exp2_hybrid(p, gamma, lut))
+        errs.append((np.abs(approx - exact) / exact).max())
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-9
+    assert errs[-1] <= 1e-6  # full LUT = exact
+
+
+@pytest.mark.parametrize("gamma", [2, 8, 32])
+def test_fixed_point_matches_float(gamma):
+    """Integer datapath == float path up to fixed-point rounding."""
+    p = jnp.arange(0, 4 * gamma)
+    fixed = np.asarray(cv.exp2_exact_fixed(p, gamma, frac_bits=16))
+    want = np.exp2(np.arange(0, 4 * gamma) / gamma) * (1 << 16)
+    # LUT rounding + shift: error < one LUT ulp shifted up
+    assert np.all(np.abs(fixed - want) <= 2.0 ** (np.arange(4 * gamma) // gamma))
+
+
+@pytest.mark.parametrize("gamma", [2, 8])
+@pytest.mark.parametrize("frac_bits", [12, 16, 20])
+def test_neg_fixed_point(gamma, frac_bits):
+    """Negative-exponent flavour: LUT >> q with underflow below the LSB."""
+    m = jnp.arange(0, 8 * gamma)
+    fixed = np.asarray(cv.exp2_neg_exact_fixed(m, gamma, frac_bits))
+    want = np.exp2(-np.arange(0, 8 * gamma) / gamma) * (1 << frac_bits)
+    assert np.all(np.abs(fixed - want) <= 1.0 + want * 1e-5)
+    # monotone non-increasing; eventually underflows to 0
+    assert np.all(np.diff(fixed) <= 0)
+
+
+def test_neg_hybrid_vs_exact():
+    """Complement-Mitchell keeps the <=6.2% worst-case error of the RTL's
+    positive-convention Mitchell (the naive 1 - r/γ form reaches 77%)."""
+    gamma = 8
+    m = jnp.arange(0, 8 * gamma)
+    exact = np.exp2(-np.arange(0, 8 * gamma) / gamma)
+    for lut in (1, 2, 4):
+        approx = np.asarray(
+            cv.exp2_neg_hybrid_fixed(m, gamma, lut, frac_bits=16)) / 2.0 ** 16
+        rel = np.abs(approx - exact) / np.maximum(exact, 1e-9)
+        assert rel.max() <= 0.063
+
+
+def test_approx_decode_factor_bins():
+    """Error factor == approx/exact per remainder bin (App. §.4)."""
+    gamma, lut = 8, 2
+    r = jnp.arange(gamma)
+    f = np.asarray(cv.approx_decode_factor(r, gamma, lut))
+    exact = np.exp2(np.arange(gamma) / gamma)
+    approx = np.asarray(cv.exp2_hybrid(r, gamma, lut))
+    np.testing.assert_allclose(f, approx / exact, rtol=1e-6)
+    assert f[0] == pytest.approx(1.0)  # r=0 is exact
+
+
+def test_lut_sizes():
+    assert cv.remainder_lut(8).shape == (8,)
+    assert cv.remainder_lut(8, 2).shape == (2,)
+    with pytest.raises(ValueError):
+        cv.remainder_lut(8, 16)  # lut larger than gamma
+    with pytest.raises(ValueError):
+        cv.remainder_lut(6)      # not a power of two

@@ -1,0 +1,54 @@
+"""Analytical energy model vs the paper's published tables (§6.2)."""
+import pytest
+
+from repro.core import energy
+
+
+def test_table8_reproduced_within_tolerance():
+    """Model reproduces all 16 Table-8 cells within 25% (single calibrated
+    overhead constant across 4 models x 4 formats)."""
+    pred = energy.paper_table8()
+    for model, row in energy.PAPER_TABLE8_MJ.items():
+        for fmt, want in row.items():
+            got = pred[model][fmt]
+            assert got == pytest.approx(want, rel=0.25), (model, fmt, got)
+
+
+def test_format_ratios_match_paper():
+    """§6.2: LNS datapath is 2.2x/4.6x/11x cheaper than FP8/FP16/FP32."""
+    e = energy.DATAPATH_FJ_PER_OP
+    assert e["fp8"] / e["lns8"] == pytest.approx(2.2, rel=1e-6)
+    assert e["fp16"] / e["lns8"] == pytest.approx(4.6, rel=1e-6)
+    assert e["fp32"] / e["lns8"] == pytest.approx(11.0, rel=1e-6)
+
+
+def test_lns_over_90_percent_savings_vs_fp32():
+    """The abstract's headline: >90% energy reduction vs FP32."""
+    for model in energy.PAPER_MODEL_MACS:
+        lns = energy.per_iteration_energy_mj(
+            energy.PAPER_MODEL_MACS[model], "lns8")
+        fp32 = energy.per_iteration_energy_mj(
+            energy.PAPER_MODEL_MACS[model], "fp32")
+        assert lns < 0.10 * fp32
+
+
+def test_lut_sweep_monotone():
+    """Table 10: smaller LUT -> cheaper conversion."""
+    costs = [energy.DATAPATH_FJ_PER_OP[f"lns8_lut{n}"] for n in (1, 2, 4, 8)]
+    assert costs == sorted(costs)
+    # ~35% max saving (paper §.4)
+    assert 1.0 - costs[0] / costs[-1] == pytest.approx(0.354, abs=0.02)
+
+
+def test_gpt_scaling_monotone():
+    table = energy.gpt_scaling()
+    sizes = ["gpt-1b", "gpt-13b", "gpt-175b", "gpt-530b", "gpt-1t"]
+    vals = [table[s]["lns8"] for s in sizes]
+    assert vals == sorted(vals)
+    for s in sizes:
+        assert table[s]["fp32"] / table[s]["lns8"] == pytest.approx(11.0, rel=1e-6)
+
+
+def test_unknown_format_raises():
+    with pytest.raises(KeyError):
+        energy.per_iteration_energy_mj(1e9, "int4")

@@ -1,0 +1,138 @@
+"""QAT machinery: STE, Q_E cotangent quantization, qeinsum, Q_G (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lns import LNSFormat, lns_quantize
+from repro.core.quantizer import (QuantConfig, backward_quantize, qeinsum,
+                                  quantize_grads, ste_quantize)
+from repro.core.quant_training import approx_product_values, approx_qeinsum
+from repro.numerics.fp import FPFormat, fp_quantize
+
+FMT = LNSFormat(bits=8, gamma=8)
+
+
+def test_ste_identity_gradient(key):
+    x = jax.random.normal(key, (32,))
+    g = jax.grad(lambda x: jnp.sum(ste_quantize(x, FMT) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+
+def test_ste_forward_on_grid(key):
+    x = jax.random.normal(key, (32,))
+    q = ste_quantize(x, FMT)
+    q2 = lns_quantize(q, FMT)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q2), rtol=1e-6)
+
+
+def test_backward_quantize_forward_identity(key):
+    x = jax.random.normal(key, (8, 8))
+    np.testing.assert_array_equal(
+        np.asarray(backward_quantize(x, FMT, None, None)), np.asarray(x))
+
+
+def test_backward_quantize_quantizes_cotangent(key):
+    x = jax.random.normal(key, (64,))
+    cot = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    _, vjp = jax.vjp(lambda x: backward_quantize(x, FMT, None, None), x)
+    (g,) = vjp(cot)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(lns_quantize(cot, FMT)), rtol=1e-6)
+
+
+def test_backward_quantize_cot_dtype(key):
+    """Cotangents stay in the compute dtype through Q_E (the quantizer's
+    internal f32 math must not leak f32 containers into the backward)."""
+    x = jax.random.normal(key, (16,), jnp.bfloat16)
+    _, vjp = jax.vjp(
+        lambda x: backward_quantize(x, FMT, None, jnp.bfloat16), x)
+    (g,) = vjp(jnp.ones((16,), jnp.bfloat16))
+    assert g.dtype == jnp.bfloat16
+
+
+def test_qeinsum_fp_path_equals_einsum(key):
+    x = jax.random.normal(key, (4, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+    y = qeinsum("bi,ij->bj", x, w, None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-5)
+
+
+def test_qeinsum_quantized_close_to_fp(key):
+    x = jax.random.normal(key, (16, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32))
+    y = qeinsum("bi,ij->bj", x, w, QuantConfig.lns_madam())
+    rel = float(jnp.max(jnp.abs(y - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.15
+
+
+def test_qeinsum_grads_flow_to_both_operands(key):
+    x = jax.random.normal(key, (4, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+    cfg = QuantConfig.lns_madam()
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(qeinsum("bi,ij->bj", x, w, cfg)), (0, 1))(x, w)
+    assert float(jnp.max(jnp.abs(gx))) > 0
+    assert float(jnp.max(jnp.abs(gw))) > 0
+
+
+def test_quantize_grads_puts_grads_on_grid(key):
+    cfg = QuantConfig.lns_madam()
+    grads = {"a": jax.random.normal(key, (8, 8)),
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (4,))}
+    q = quantize_grads(grads, cfg)
+    for k in q:
+        np.testing.assert_allclose(np.asarray(q[k]),
+                                   np.asarray(lns_quantize(q[k], cfg.grad)),
+                                   rtol=1e-6)
+
+
+def test_quant_config_presets():
+    c = QuantConfig.lns_madam()
+    assert c.weight.bits == 8 and c.weight.gamma == 8
+    assert c.update.bits == 16
+    # range preserved up to the 2^(B-1)-1 off-by-one (<1%)
+    assert c.update.dynamic_range == pytest.approx(15.875, rel=0.01)
+    assert QuantConfig.fp8().weight.bits == 8
+    assert not QuantConfig.full_precision().is_quantized
+
+
+def test_fp8_quantize_known_values():
+    fmt = FPFormat(exp_bits=4, man_bits=3)
+    # values already on the e4m3-like grid survive (scale = absmax/max_value)
+    x = jnp.asarray([fmt.max_value, fmt.max_value / 2, 0.0])
+    q = fp_quantize(x, fmt)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(x), rtol=1e-6)
+
+
+def test_approx_qeinsum_matches_elementwise_oracle(key):
+    """Bucketed approximate GEMM == elementwise hybrid-decode oracle."""
+    cfg = QuantConfig.lns_madam(approx_lut=2)
+    x = jnp.abs(jax.random.normal(key, (5, 12))) + 0.1
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (12, 7))) + 0.1
+    y = approx_qeinsum("bi,ij->bj", x, w, cfg)
+
+    from repro.core.lns import compute_scale, lns_decode, lns_encode
+    fmt = cfg.weight
+    sx = compute_scale(x, axis=cfg.act_scale_axis)
+    sw = compute_scale(w, axis=cfg.weight_scale_axis)
+    sgx, ex = lns_encode(x, fmt, sx)
+    sgw, ew = lns_encode(w, fmt, sw)
+    px = (fmt.max_code - ex.astype(jnp.int32))
+    pw = (fmt.max_code - ew.astype(jnp.int32))
+    vals = approx_product_values(px[:, :, None], pw[None, :, :], fmt, 2)
+    base = 2.0 ** (-2.0 * fmt.max_code / fmt.gamma)
+    ref = jnp.einsum("bij,bij->bj",
+                     vals * sgx.astype(jnp.float32)[:, :, None]
+                     * sgw.astype(jnp.float32)[None],
+                     jnp.ones_like(vals)) * base * sx * sw
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_approx_qeinsum_ste_backward(key):
+    cfg = QuantConfig.lns_madam(approx_lut=1)
+    x = jax.random.normal(key, (4, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+    g = jax.grad(lambda x: jnp.sum(qeinsum("bi,ij->bj", x, w, cfg)))(x)
+    assert g.shape == x.shape and bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,118 @@
+"""Logical sharding rules, param-tree axis assignment, mesh resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.params_sharding import (batch_shardings,
+                                               cache_logical_axes,
+                                               opt_logical_axes,
+                                               params_logical_axes,
+                                               tree_shardings)
+from repro.distributed.sharding import (LOGICAL_RULES, shard, shard_ctx,
+                                        spec_for)
+from repro.models import ArchConfig, init_params
+from repro.optim.madam import LNSWeight, MadamConfig, init_lns_params, madam_lns
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_resolution_drops_missing_axes():
+    mesh = _mesh()  # no "pod" axis
+    with shard_ctx(mesh):
+        spec = spec_for(("batch", "embed"))
+        assert spec == P("data", None)  # ("pod","data") -> "data"
+
+
+def test_shard_noop_without_mesh(key):
+    x = jax.random.normal(key, (4, 4))
+    y = shard(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shard_applies_constraint_under_mesh(key):
+    x = jax.random.normal(key, (4, 4))
+    with shard_ctx(_mesh()):
+        y = jax.jit(lambda x: shard(x, "batch", "mlp"))(x)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_rule_overrides(key):
+    with shard_ctx(_mesh(), {"mlp": None}):
+        assert spec_for((None, "mlp")) == P(None, None)
+    with shard_ctx(_mesh()):
+        assert spec_for((None, "mlp")) == P(None, "model")
+
+
+def test_params_logical_axes_known_paths(key):
+    cfg = ArchConfig(name="t", family="dense", num_layers=4, d_model=32,
+                     num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                     vocab_size=128, dtype="float32")
+    params = init_params(key, cfg)
+    axes = params_logical_axes(params)
+    assert axes["embed"]["tok"] == ("vocab", "embed")
+    assert axes["embed"]["head"] == ("embed", "vocab")
+    # stacked period weights get the leading "stack" axis
+    assert axes["period"]["pos0"]["mlp"]["up"] == ("stack", "embed", "mlp")
+    assert axes["period"]["pos0"]["attn"]["wq"] == ("stack", "embed", "qkv_out")
+    # norms are replicated (the "stack" prefix resolves to None anyway)
+    assert axes["period"]["pos0"]["ln1"] == (None, None)
+
+
+def test_lns_weight_axes_and_shardings(key):
+    cfg = ArchConfig(name="t", family="dense", num_layers=2, d_model=32,
+                     num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                     vocab_size=128, dtype="float32")
+    mcfg = MadamConfig()
+    params = init_lns_params(init_params(key, cfg), mcfg)
+    axes = params_logical_axes(params)
+    lw = axes["period"]["pos0"]["mlp"]["up"]
+    assert isinstance(lw, LNSWeight)
+    assert lw.code == ("stack", "embed", "mlp")
+    # scale has a size-1 axis -> unsharded there
+    assert lw.scale == ("stack", None, "mlp")
+    sh = tree_shardings(axes, _mesh())
+    leaf = sh["period"]["pos0"]["mlp"]["up"]
+    assert leaf.code.spec == P(None, None, "model")
+
+
+def test_opt_axes_factored(key):
+    cfg = ArchConfig(name="t", family="dense", num_layers=2, d_model=32,
+                     num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                     vocab_size=128, dtype="float32")
+    mcfg = MadamConfig(factored=True)
+    params = init_lns_params(init_params(key, cfg), mcfg)
+    init, _ = madam_lns(mcfg)
+    opt = init(params)
+    oax = opt_logical_axes(params, opt)
+    g2 = oax.g2["period"]["pos0"]["mlp"]["up"]
+    assert g2 == {"r": ("stack", "embed"), "c": ("stack", "mlp")}
+
+
+def test_cache_axes(key):
+    from repro.models import init_caches
+    cfg = ArchConfig(name="t", family="dense", num_layers=2, d_model=32,
+                     num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                     vocab_size=128, dtype="float32")
+    caches = init_caches(2, 16, cfg)
+    axes = cache_logical_axes(caches)
+    assert axes["period"]["pos0"]["k"] == ("stack", "batch", "kv_seq",
+                                           None, None)
+
+
+def test_batch_shardings(key):
+    mesh = _mesh()
+    b = {"tokens": jnp.zeros((4, 8), jnp.int32),
+         "patches": jnp.zeros((4, 2, 16))}
+    sh = batch_shardings(b, mesh)
+    assert sh["tokens"].spec == P("data", None)
+    assert sh["patches"].spec == P("data", None, None)
+
+
+def test_unknown_logical_axis_raises():
+    with shard_ctx(_mesh()):
+        with pytest.raises(KeyError):
+            spec_for(("no_such_axis",))

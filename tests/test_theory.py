@@ -1,0 +1,113 @@
+"""Empirical verification of Theorems 1/2 and Lemma 1 (paper §4.2, App. A).
+
+The bounds hold in expectation under stochastic rounding. The *separation*
+(Fig. 4) appears in the regime the paper works in: weights already on the
+LNS grid (they are, in quantized training) and normalized gradients small
+enough that γ·η·|g| < 1 — multiplicative rules then move integer exponents
+by a small fraction while GD lands at generic off-grid points.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error_analysis as ea
+
+
+def _mean_error(key, rule, w, g, eta, gamma, trials=48):
+    w = ea.snap_to_grid(w, gamma)
+    errs = []
+    for i in range(trials):
+        k = jax.random.fold_in(key, i)
+        if rule == "gd":
+            w_new = ea.update_gd(w, g, eta)
+        elif rule == "mul":
+            w_new = ea.update_mul(w, g, eta)
+        else:
+            w_new = ea.update_signmul(w, g, eta)
+        q = ea.simplified_qlog(k, w_new, gamma)
+        errs.append(float(ea.quant_error(w_new, q)))
+    return float(np.mean(errs))
+
+
+@pytest.mark.parametrize("gamma", [64.0, 256.0])
+def test_theorem_bounds_hold(key, gamma):
+    d = 256
+    w = jax.random.normal(key, (d,)) * 0.5 + 1.0
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.1
+    eta = 2.0 ** -6
+    bounds = ea.theoretical_bounds(w, g, eta, gamma)
+    assert _mean_error(key, "gd", w, g, eta, gamma) <= float(bounds["gd"]) + 1e-3
+    assert _mean_error(key, "mul", w, g, eta, gamma) <= float(bounds["mul"]) + 1e-3
+    assert _mean_error(key, "signmul", w, g, eta, gamma) <= float(bounds["signmul"]) + 1e-3
+
+
+def test_multiplicative_below_gd(key):
+    """Fig. 4's headline, in the paper's regime (γη|g| < 1)."""
+    d, gamma, eta = 512, 1024.0, 2.0 ** -7
+    w = jnp.exp2(jax.random.normal(key, (d,)) * 2.0)  # magnitudes over decades
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.003
+    e_gd = _mean_error(key, "gd", w, g, eta, gamma)
+    e_mul = _mean_error(key, "mul", w, g, eta, gamma)
+    e_sign = _mean_error(key, "signmul", w, g, eta, gamma)
+    assert e_mul < 0.5 * e_gd
+    assert e_sign < 0.01 * e_gd
+
+
+def test_gd_updates_disregarded_at_large_weights(key):
+    """Fig. 1: with deterministic rounding, GD's additive update is rounded
+    away entirely once the quantization gap exceeds it — the weight never
+    moves — while signMUL always moves the integer exponent."""
+    gamma = 64.0
+    eta = 2.0 ** -6
+    for mag in (64.0, 256.0):
+        w = jnp.full((128,), mag)
+        g = jnp.full((128,), 0.05)
+        w_gd = ea.update_gd(w, g, eta)           # W - eta*g: tiny step
+        q_gd = ea.snap_to_grid(w_gd, gamma)      # deterministic rounding
+        assert bool(jnp.all(q_gd == ea.snap_to_grid(w, gamma)))  # swallowed
+        w_sm = ea.update_signmul(w, g, eta)
+        q_sm = ea.snap_to_grid(w_sm, gamma)
+        assert bool(jnp.all(q_sm != ea.snap_to_grid(w, gamma)))  # moved
+
+
+def test_signmul_bound_independent_of_w_and_g(key):
+    """Lemma 1: E r <= d·η/γ regardless of weights/gradients."""
+    d, gamma, eta = 256, 512.0, 2.0 ** -5
+    bound = d * eta / gamma
+    for i, (wmag, gmag) in enumerate([(0.1, 0.1), (10.0, 5.0), (100.0, 0.01)]):
+        w = jax.random.normal(jax.random.fold_in(key, i), (d,)) * wmag + wmag
+        g = jax.random.normal(jax.random.fold_in(key, i + 10), (d,)) * gmag
+        e = _mean_error(key, "signmul", w, g, eta, gamma, trials=48)
+        assert e <= bound
+
+
+def test_error_decreases_with_gamma(key):
+    """Both Fig. 4 panels: r_t shrinks as γ grows (finer grid)."""
+    d, eta = 256, 2.0 ** -6
+    w = jax.random.normal(key, (d,)) + 2.0
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.1
+    errs = [
+        _mean_error(key, "gd", w, g, eta, gamma, trials=32)
+        for gamma in (64.0, 256.0, 1024.0)
+    ]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_mul_error_grows_with_eta(key):
+    """Fig. 4 left panel: multiplicative error scales with η (Thm. 2)."""
+    d, gamma = 256, 1024.0
+    w = jnp.exp2(jax.random.normal(key, (d,)))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.003
+    errs = [
+        _mean_error(key, "mul", w, g, eta, gamma, trials=32)
+        for eta in (2.0 ** -9, 2.0 ** -7, 2.0 ** -5)
+    ]
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_sr_unbiased(key):
+    from repro.numerics.rounding import stochastic_round
+    x = jnp.full((50000,), 0.3)
+    r = stochastic_round(key, x)
+    assert float(jnp.mean(r)) == pytest.approx(0.3, abs=0.01)

@@ -6,32 +6,43 @@ Prints ``name,us_per_call,derived`` CSV. Fast subset by default; pass
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# allow plain ``python benchmarks/run.py`` (repo root not on sys.path then)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="longer training sweeps (EXPERIMENTS.md numbers)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal steps/trials — CI entry-point check only")
     ap.add_argument("--only", default=None, help="comma-list of modules")
     args = ap.parse_args()
 
     from benchmarks import (base_factor, bitwidth_sweep, conversion_approx,
                             energy, format_comparison, kernels, quant_error,
-                            update_precision)
+                            serving, update_precision)
 
-    steps = 60 if args.full else 25
+    steps = 60 if args.full else (4 if args.smoke else 25)
     suites = {
-        "quant_error": lambda: quant_error.run(trials=24 if args.full else 8),
+        "quant_error": lambda: quant_error.run(
+            trials=24 if args.full else (2 if args.smoke else 8)),
         "base_factor": lambda: base_factor.run(steps=steps),
         "format_comparison": lambda: format_comparison.run(steps=steps),
         "update_precision": lambda: update_precision.run(steps=steps),
         "bitwidth_sweep": lambda: bitwidth_sweep.run(steps=steps),
         "conversion_approx": lambda: conversion_approx.run(
-            steps=30 if args.full else 10),
+            steps=30 if args.full else (4 if args.smoke else 10)),
         "energy": energy.run,
         "kernels": kernels.run,
+        # serving keeps its default trace in --smoke: jit compiles dominate
+        # its cost, and the tiny-trace regime is prefill-bound (lock-step
+        # flattery, not the decode-bound regime the comparison is about)
+        "serving": lambda: serving.run(sweep=args.full),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,116 @@
+"""Serving throughput: continuous batching vs lock-step batching.
+
+Replays one mixed-length request trace through two harnesses over the same
+packed-LNS weights and decode step:
+
+  lockstep — requests are processed in fixed groups of ``slots``; every
+    group decodes until its *longest* request finishes (the old
+    ``launch/serve.py`` shape: finished sequences squat on their slot).
+  engine   — ``repro.serving.Engine``: a finished sequence frees its slot
+    and cache rows immediately and the next request is admitted mid-decode.
+
+Both paths are run once to warm the jit caches and timed on a second
+replay. ``--full`` adds an offered-load sweep (arrival rate -> goodput).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke_config
+from repro.core.lns import LNSFormat
+from repro.core.quantizer import QuantConfig
+from repro.models.model import init_caches
+from repro.optim.madam import MadamConfig
+from repro.serving import Engine, Request, max_trace_len, synthetic_trace
+from repro.training import build_decode_step, init_train_state
+
+
+def run_lockstep(cfg, qcfg, mcfg, params, trace: List[Request], *,
+                 slots: int, max_len: int, decode=None):
+    """Fixed-group serving; returns (useful_new_tokens, wall_seconds).
+    Pass a pre-jitted ``decode`` to share compile caches across replays."""
+    if decode is None:
+        decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
+    useful = 0
+    t0 = time.monotonic()
+    for g0 in range(0, len(trace), slots):
+        group = trace[g0:g0 + slots]
+        pmax = max(r.prompt_len for r in group)
+        gmax = max(r.max_new_tokens for r in group)
+        tokens = np.zeros((slots, pmax), np.int32)
+        for j, r in enumerate(group):
+            # left-pad shorter prompts so every row's last prompt token
+            # lands at pmax-1 (the lock-step script's fixed-shape premise)
+            tokens[j, pmax - r.prompt_len:] = np.asarray(r.prompt)
+        caches = init_caches(slots, max_len, cfg)
+        logits, caches = decode(params, caches,
+                                {"tokens": jnp.asarray(tokens)},
+                                jnp.zeros((slots,), jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(slots, 1)
+        for step in range(1, gmax):
+            pos = jnp.full((slots,), pmax + step - 1, jnp.int32)
+            logits, caches = decode(params, caches, {"tokens": tok}, pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(slots, 1)
+        jax.block_until_ready(tok)
+        useful += sum(r.max_new_tokens for r in group)
+    return useful, time.monotonic() - t0
+
+
+def run(requests: int = 24, slots: int = 4, prompt_len: int = 16,
+        gen_len: int = 24, sweep: bool = False) -> list[str]:
+    cfg = get_smoke_config("smollm-135m")
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    # bimodal lengths: the regime where lock-step groups stall on their
+    # longest member while continuous batching keeps slots occupied
+    trace = synthetic_trace(cfg, requests=requests, prompt_len=prompt_len,
+                            gen_len=gen_len, lengths="bimodal")
+    # distribution bound (covers the sweep's re-drawn traces too)
+    max_len = max_trace_len(prompt_len, gen_len, "bimodal")
+
+    rows = []
+    decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
+    run_lockstep(cfg, qcfg, mcfg, params, trace, slots=slots,
+                 max_len=max_len, decode=decode)  # warm-up: compiles
+    useful, wall = run_lockstep(cfg, qcfg, mcfg, params, trace, slots=slots,
+                                max_len=max_len, decode=decode)
+    tps_lock = useful / wall
+    rows.append(csv_row("serving_lockstep", wall * 1e6,
+                        f"tok_s={tps_lock:.1f} requests={requests} "
+                        f"slots={slots}"))
+
+    engine = Engine(cfg, qcfg, mcfg, params, num_slots=slots,
+                    max_len=max_len)
+    engine.run(trace)      # warm-up: compiles every prefill bucket
+    engine.reset()
+    agg = engine.run(trace)
+    tps_eng = agg["tokens_per_s"]
+    rows.append(csv_row(
+        "serving_engine", agg["wall_s"] * 1e6,
+        f"tok_s={tps_eng:.1f} speedup_vs_lockstep={tps_eng / tps_lock:.2f} "
+        f"ttft_p95_s={agg['ttft_p95_s']:.3f}"))
+
+    if sweep:  # offered load -> goodput curve
+        for rate in (2.0, 4.0, 8.0, 16.0):
+            engine.reset()
+            agg = engine.run(synthetic_trace(
+                cfg, requests=requests, prompt_len=prompt_len,
+                gen_len=gen_len, lengths="bimodal", rate=rate))
+            rows.append(csv_row(
+                f"serving_load_{rate:g}rps", agg["wall_s"] * 1e6,
+                f"tok_s={agg['tokens_per_s']:.1f} "
+                f"ttft_p95_s={agg['ttft_p95_s']:.3f} "
+                f"latency_p95_s={agg['latency_p95_s']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(sweep=True):
+        print(row)

@@ -1,11 +1,13 @@
-"""Serving example: batched prefill + decode with 8-bit packed LNS weights.
+"""Serving example: continuous batching with 8-bit packed LNS weights.
 
 Shows the inference side of the paper's format: serving weights are packed
 single-byte LNS codes (sign bit + 7-bit exponent) — half the HBM bytes of
-bf16 — decoded on the fly inside each layer. Reports weight bytes and
-tokens/second. This drives ``repro.launch.serve`` (the production driver).
+bf16 — decoded on the fly inside each layer. A mixed-length trace flows
+through ``repro.serving.Engine``: finished sequences free their decode slot
+and KV rows mid-run, waiting requests are admitted without recompiling the
+decode step. Reports weight bytes, per-request TTFT, and tokens/second.
 
-  PYTHONPATH=src python examples/serve_lm.py
+  python examples/serve_lm.py
 """
 import subprocess
 import sys
@@ -14,6 +16,7 @@ if __name__ == "__main__":
     sys.exit(subprocess.run([
         sys.executable, "-m", "repro.launch.serve",
         "--arch", "gemma3-12b", "--smoke",
-        "--requests", "4", "--prompt-len", "24", "--gen-len", "24",
+        "--requests", "4", "--slots", "2", "--mixed",
+        "--prompt-len", "24", "--gen-len", "24",
         "--serve-bits", "8",
     ]).returncode)

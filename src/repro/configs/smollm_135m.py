@@ -33,4 +33,7 @@ RULES = {
     "batch": ("pod", "data", "model"),
     "mlp": None, "heads": None, "qkv_out": None, "vocab": None,
     "act_ff": None, "act_heads": None, "seq_shard": None,
+    # batch occupies the whole mesh, so the decode cache's split-KV axis
+    # must stay unsharded or its PartitionSpec double-books "model"
+    "kv_seq": None,
 }

@@ -171,7 +171,7 @@ _CACHE_AXES = {
     "conv_c": ("batch", None, None),
     "shift_tm": ("batch", None),
     "shift_cm": ("batch", None),
-    "idx": (),
+    "idx": ("batch",),  # per-slot length cursor rides with its cache rows
 }
 
 

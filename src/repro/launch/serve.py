@@ -1,29 +1,26 @@
-"""Batched serving driver: continuous-batching prefill + decode loop.
+"""Serving CLI: a thin driver over the continuous-batching engine.
 
-A minimal production-shaped server: requests arrive with prompts of varying
-length, are left-aligned into a fixed batch, prefilled once, then decoded
-step by step with the packed-LNS (8-bit) weight format. Reports
-tokens/second and per-phase timings.
+Builds a mixed-length synthetic request trace, initializes the model in
+the packed 8-bit LNS serving format, and drives ``repro.serving.Engine``
+— variable-length requests are admitted into freed decode slots mid-run,
+finished sequences release their KV rows, and per-request TTFT / latency /
+tokens-per-second are reported alongside the aggregate goodput.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --requests 8 --prompt-len 32 --gen-len 32
+  python -m repro.launch.serve --arch smollm-135m --smoke \
+      --requests 8 --slots 4 --prompt-len 32 --gen-len 32
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_rules, get_smoke_config
 from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig
 from repro.distributed.sharding import shard_ctx
 from repro.launch.mesh import make_host_mesh
-from repro.models.model import init_caches
 from repro.optim.madam import MadamConfig
-from repro.training import (build_decode_step, build_prefill_step,
-                            init_train_state)
+from repro.serving import Engine, max_trace_len, synthetic_trace
+from repro.training import init_train_state
 
 
 def main():
@@ -31,10 +28,17 @@ def main():
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch width (concurrent sequences)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="vary prompt/gen lengths across the trace")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in requests/s (0 = all at t=0)")
     ap.add_argument("--serve-bits", type=int, default=8,
                     help="LNS weight bitwidth for serving")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -44,55 +48,36 @@ def main():
     mesh = make_host_mesh(data=jax.device_count())
 
     with shard_ctx(mesh, get_rules(args.arch)):
-        state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
-        params = state.params
+        state = init_train_state(jax.random.PRNGKey(args.seed), cfg, mcfg)
         bytes_w = sum(
-            x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(state.params))
         print(f"arch={cfg.name} serve weights {bytes_w / 2**20:.1f} MiB "
               f"(packed {args.serve_bits}-bit LNS codes + scales)")
 
-        B = args.requests
-        max_len = args.prompt_len + args.gen_len
-        rng = np.random.default_rng(0)
-        tshape = ((B, args.prompt_len, cfg.num_codebooks)
-                  if cfg.num_codebooks else (B, args.prompt_len))
-        prompts = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, tshape, dtype=np.int32))
+        lengths = "uniform" if args.mixed else "fixed"
+        max_len = max_trace_len(args.prompt_len, args.gen_len, lengths)
+        engine = Engine(cfg, qcfg, mcfg, state.params,
+                        num_slots=args.slots, max_len=max_len)
+        trace = synthetic_trace(cfg, requests=args.requests,
+                                prompt_len=args.prompt_len,
+                                gen_len=args.gen_len, lengths=lengths,
+                                rate=args.rate, seed=args.seed)
+        agg = engine.run(trace)
 
-        prefill = jax.jit(build_prefill_step(cfg, qcfg, mcfg))
-        decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
-
-        t0 = time.monotonic()
-        logits = prefill(params, {"tokens": prompts})
-        # replay the prompt through the decode path to build the cache
-        caches = init_caches(B, max_len, cfg)
-        logits, caches = decode(params, caches, {"tokens": prompts},
-                                jnp.asarray(0, jnp.int32))
-        jax.block_until_ready(logits)
-        t_prefill = time.monotonic() - t0
-
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if cfg.num_codebooks:
-            tok = tok.reshape(B, 1, cfg.num_codebooks)
-        else:
-            tok = tok.reshape(B, 1)
-        generated = [tok]
-        t0 = time.monotonic()
-        for i in range(args.gen_len - 1):
-            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-            logits, caches = decode(params, caches, {"tokens": tok}, pos)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tok = tok.reshape((B, 1, cfg.num_codebooks)
-                              if cfg.num_codebooks else (B, 1))
-            generated.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.monotonic() - t0
-        n_tok = B * (args.gen_len - 1)
-        print(f"prefill {B}x{args.prompt_len} in {t_prefill:.2f}s; "
-              f"decode {n_tok} tokens in {t_decode:.2f}s "
-              f"({n_tok / max(t_decode, 1e-9):.1f} tok/s)")
-        out = jnp.concatenate(generated, axis=1)
-        print("sample:", np.asarray(out)[0, :10].tolist())
+        print(f"slots={args.slots} requests={args.requests} "
+              f"decode_steps={engine.decode_steps} "
+              f"prefill_compiles={engine.prefill_compiles} "
+              f"decode_compiles={engine.decode_compiles}")
+        print(f"completed {int(agg['completed'])} requests in "
+              f"{agg['wall_s']:.2f}s: {agg['tokens_per_s']:.1f} tok/s, "
+              f"ttft mean {agg['ttft_mean_s']:.3f}s "
+              f"p95 {agg['ttft_p95_s']:.3f}s, "
+              f"latency p50 {agg['latency_p50_s']:.3f}s "
+              f"p95 {agg['latency_p95_s']:.3f}s")
+        for rs in sorted(engine.finished, key=lambda r: r.request.rid)[:4]:
+            head = rs.generated[:8]
+            print(f"  req {rs.request.rid}: prompt {rs.request.prompt_len} "
+                  f"-> {len(rs.generated)} new tokens, sample {head}")
 
 
 if __name__ == "__main__":

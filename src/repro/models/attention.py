@@ -192,7 +192,10 @@ def attn_apply(
     if cfg.qk_norm:
         q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
         k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
-    rot = rope(positions, hd, theta)[None]  # (1, S, hd/2, 2)
+    # positions may be (S,) or per-slot (B, S) — rope broadcasts either way
+    rot = rope(positions, hd, theta)
+    if rot.ndim == 3:
+        rot = rot[None]  # (1, S, hd/2, 2)
     q = apply_rope(q, rot)
     k = apply_rope(k, rot)
     q, k, v = _qa(q, cfg, qcfg), _qa(k, cfg, qcfg), _qa(v, cfg, qcfg)
@@ -232,13 +235,13 @@ def init_kv_cache(batch: int, max_len: int, cfg: ArchConfig,
             "v": jnp.zeros((batch, cap, kv, hd), jnp.uint8),
             "k_scale": jnp.ones((batch, cap, kv, 1), jnp.bfloat16),
             "v_scale": jnp.ones((batch, cap, kv, 1), jnp.bfloat16),
-            "idx": jnp.zeros((), jnp.int32),
+            "idx": jnp.zeros((batch,), jnp.int32),
         }
     dt = cfg.compute_dtype
     return {
         "k": jnp.zeros((batch, cap, kv, hd), dt),
         "v": jnp.zeros((batch, cap, kv, hd), dt),
-        "idx": jnp.zeros((), jnp.int32),
+        "idx": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -265,15 +268,31 @@ def _kv_decode(packed: jax.Array, scale: jax.Array, cfg: ArchConfig):
                       dtype=cfg.compute_dtype)
 
 
+def _row_insert(buf, new, idx):
+    """Per-row append: row b of ``new`` lands at ``buf[b, idx[b]:...]``.
+
+    Each batch row is an independent serving slot with its own write
+    cursor — the continuous-batching engine relies on this to hold
+    sequences of different lengths in one cache."""
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
+    return jax.vmap(one)(buf, new, idx)
+
+
 def _decode_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
                    window: Optional[int]):
     """Append S new positions to the cache and attend over it (plain
-    softmax; cache seq is sharded over the mesh => split-KV decode)."""
+    softmax; cache seq is sharded over the mesh => split-KV decode).
+
+    ``cache["idx"]`` is (B,): every batch row (= serving slot) has its own
+    sequence length, so a freed slot can restart from position 0 while its
+    neighbours keep decoding."""
     B, S, h, hd = q.shape
     kv = cfg.num_kv_heads
-    idx = cache["idx"]  # scalar int32: number of tokens already cached
+    idx = cache["idx"]  # (B,) int32: tokens already cached, per slot
     cap = cache["k"].shape[1]
     slot = jnp.arange(cap)
+    q_abs = idx[:, None] + jnp.arange(S)  # (B, S) absolute query positions
 
     quant = bool(cfg.kv_cache_bits)
     if quant:  # packed-LNS cache: encode the new keys once (beyond-paper)
@@ -291,20 +310,21 @@ def _decode_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
         # Attend over [old ring contents ∪ new keys]: inserting first would
         # evict keys that earlier in-call queries still need. Ring slot s
         # holds absolute position p ≡ s (mod cap), p <= idx-1.
-        last_prev = idx - 1
-        abs_prev = last_prev - ((last_prev - slot) % cap)
+        last_prev = idx[:, None] - 1                       # (B, 1)
+        abs_prev = last_prev - ((last_prev - slot[None, :]) % cap)  # (B, cap)
         k_att = jnp.concatenate([k_old, k_new], axis=1)
         v_att = jnp.concatenate([v_old, v_new], axis=1)
-        abs_pos = jnp.concatenate([abs_prev, idx + jnp.arange(S)])
+        abs_pos = jnp.concatenate([abs_prev, q_abs], axis=1)  # (B, cap+S)
         valid = jnp.concatenate(
-            [abs_prev >= 0, jnp.ones((S,), bool)])
+            [abs_prev >= 0, jnp.ones((B, S), bool)], axis=1)
 
         def ring_update(buf, new):
             if S >= cap:
                 start = (idx + S - cap) % cap
-                return jnp.roll(new[:, -cap:], start, axis=1)
-            slots = (idx + jnp.arange(S)) % cap  # may wrap
-            return buf.at[:, slots].set(new)
+                return jax.vmap(
+                    lambda n, s: jnp.roll(n, s, axis=0))(new[:, -cap:], start)
+            slots = (idx[:, None] + jnp.arange(S)) % cap  # (B, S), may wrap
+            return jax.vmap(lambda b, sl, n: b.at[sl].set(n))(buf, slots, new)
 
         new_cache["k"] = ring_update(cache["k"], store_k)
         new_cache["v"] = ring_update(cache["v"], store_v)
@@ -312,21 +332,17 @@ def _decode_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
             new_cache["k_scale"] = ring_update(cache["k_scale"], sk_new)
             new_cache["v_scale"] = ring_update(cache["v_scale"], sv_new)
     else:
-        def insert(buf, new):
-            return jax.lax.dynamic_update_slice(
-                buf, new, (0, idx) + (0,) * (buf.ndim - 2))
-
-        new_cache["k"] = insert(cache["k"], store_k)
-        new_cache["v"] = insert(cache["v"], store_v)
+        new_cache["k"] = _row_insert(cache["k"], store_k, idx)
+        new_cache["v"] = _row_insert(cache["v"], store_v, idx)
         if quant:
-            new_cache["k_scale"] = insert(cache["k_scale"], sk_new)
-            new_cache["v_scale"] = insert(cache["v_scale"], sv_new)
+            new_cache["k_scale"] = _row_insert(cache["k_scale"], sk_new, idx)
+            new_cache["v_scale"] = _row_insert(cache["v_scale"], sv_new, idx)
             k_att = _kv_decode(new_cache["k"], new_cache["k_scale"], cfg)
             v_att = _kv_decode(new_cache["v"], new_cache["v_scale"], cfg)
         else:
             k_att, v_att = new_cache["k"], new_cache["v"]
-        abs_pos = slot
-        valid = slot < (idx + S)
+        abs_pos = jnp.broadcast_to(slot[None, :], (B, cap))
+        valid = slot[None, :] < (idx[:, None] + S)
     new_cache["k"] = shard(new_cache["k"], "batch", "kv_seq", None, None)
     new_cache["v"] = shard(new_cache["v"], "batch", "kv_seq", None, None)
 
@@ -336,11 +352,10 @@ def _decode_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                         kf.astype(jnp.float32)) / math.sqrt(hd)
     logits = _softcap(logits, cfg.attn_logit_softcap)
-    q_abs = idx + jnp.arange(S)
-    mask = valid[None, :] & (abs_pos[None, :] <= q_abs[:, None])
+    mask = valid[:, None, :] & (abs_pos[:, None, :] <= q_abs[:, :, None])
     if window:
-        mask &= abs_pos[None, :] > (q_abs[:, None] - window)
-    logits = jnp.where(mask[None, None], logits, -1e30)
+        mask &= abs_pos[:, None, :] > (q_abs[:, :, None] - window)
+    logits = jnp.where(mask[:, None], logits, -1e30)  # (B,1,S,K) vs (B,h,S,K)
     p_attn = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p_attn, vf.astype(jnp.float32))
     new_cache["idx"] = idx + S
@@ -393,7 +408,9 @@ def mla_apply(
     c_kv, k_rope = kvd[..., :kvr], kvd[..., kvr:]
     c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
 
-    rot = rope(positions, rpe, cfg.rope_theta)[None]
+    rot = rope(positions, rpe, cfg.rope_theta)
+    if rot.ndim == 3:
+        rot = rot[None]
     q_rope = apply_rope(q_rope, rot)
     k_rope = apply_rope(k_rope[:, :, None, :], rot)[:, :, 0, :]  # (B,S,rpe)
 
@@ -424,18 +441,19 @@ def init_mla_cache(batch: int, max_len: int, cfg: ArchConfig):
     return {
         "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
         "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt),
-        "idx": jnp.zeros((), jnp.int32),
+        "idx": jnp.zeros((batch,), jnp.int32),
     }
 
 
 def _mla_decode(q_nope, q_rope, c_kv_new, k_rope_new, kv_up, cache,
                 cfg: ArchConfig):
-    """Absorbed-form MLA decode: cache holds (c_kv, k_rope) only."""
+    """Absorbed-form MLA decode: cache holds (c_kv, k_rope) only.
+    ``cache["idx"]`` is (B,) — per-slot lengths, as in ``_decode_attend``."""
     B, S, h, nope = q_nope.shape
     kvr, vd = cfg.kv_lora_rank, cfg.v_head_dim
-    idx = cache["idx"]
-    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, idx, 0))
-    kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, idx, 0))
+    idx = cache["idx"]  # (B,)
+    ck = _row_insert(cache["c_kv"], c_kv_new, idx)
+    kr = _row_insert(cache["k_rope"], k_rope_new, idx)
     ck = shard(ck, "batch", "kv_seq", None)
     kr = shard(kr, "batch", "kv_seq", None)
     cap = ck.shape[1]
@@ -450,9 +468,9 @@ def _mla_decode(q_nope, q_rope, c_kv_new, k_rope_new, kv_up, cache,
                            kr.astype(jnp.float32)))
     logits = logits / math.sqrt(nope + cfg.qk_rope_dim)
     slot = jnp.arange(cap)
-    q_pos = idx + jnp.arange(S)
-    mask = slot[None, :] <= q_pos[:, None]
-    logits = jnp.where(mask[None, None], logits, -1e30)
+    q_pos = idx[:, None] + jnp.arange(S)  # (B, S)
+    mask = slot[None, None, :] <= q_pos[:, :, None]  # (B, S, cap)
+    logits = jnp.where(mask[:, None], logits, -1e30)
     p_attn = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bhsk,bkr->bshr", p_attn, ck.astype(jnp.float32))
     out = jnp.einsum("bshr,rhv->bshv", ctx, w_v.astype(jnp.float32))

@@ -250,13 +250,19 @@ def forward(
 
     ``tokens``: (B, S) int32 — or (B, S, Books) for multi-codebook audio.
     With ``caches`` the call is incremental (decode/chunked prefill).
+    ``pos_offset`` may be a scalar or a (B,) vector of per-slot offsets —
+    the serving engine decodes a batch whose rows sit at different
+    sequence positions.
     """
     prefix, n_periods, period = cfg.layer_pattern()
     x = _embed(params, tokens, cfg, qcfg)
     if patches is not None:
         x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
     S = x.shape[1]
-    positions = (jnp.asarray(pos_offset) + jnp.arange(S)).astype(jnp.int32)
+    off = jnp.asarray(pos_offset)
+    positions = (off[..., None] + jnp.arange(S)).astype(jnp.int32)
+    if positions.ndim > 1 and positions.shape[0] == 1:
+        positions = positions[0]
 
     aux_total = jnp.zeros((), jnp.float32)
     shared = params.get("shared")

@@ -1,0 +1,268 @@
+"""Continuous-batching engine over the packed-LNS decode path.
+
+The engine owns a fixed decode batch of ``num_slots`` rows and one KV/state
+cache sized ``(num_slots, max_len)``. Each row is an independent serving
+slot:
+
+- the cache write cursor (``cache["idx"]``) is per-row, so a freed slot
+  restarts at position 0 while its neighbours keep decoding;
+- admission prefills the prompt through the *decode* path at batch 1 with
+  the prompt right-padded to a shape bucket (a handful of jit entries,
+  see ``_bucket``), then scatters the mini-cache row into the freed slot
+  with the cursor rewound to the true prompt length — so the padded tail
+  is dead weight that the slot's own decode overwrites token by token;
+- the decode step itself sees a single ``(num_slots, 1)`` shape forever:
+  admitting a request never recompiles it (``decode_compiles`` stays 1);
+- a finished sequence (EOS or ``max_new_tokens``) releases its slot and
+  its cache rows are recycled in place by the next admission's scatter.
+
+Weights stay in the packed 8-bit LNS serving format (``MadamConfig
+.update_format``) and are materialized per layer inside the step, exactly
+as in training — the no-fp-master-copy property carries to serving.
+
+Padding-safety: right-padded prefill is exact for attention caches (the
+padded keys sit beyond the rewound cursor, masked and later overwritten)
+but NOT for recurrent state (Mamba/RWKV consume pad tokens) nor for ring
+buffers shorter than the bucket (pads would wrap onto live keys). In those
+cases the engine prefills at the exact prompt length instead — correctness
+first, one extra compile per distinct length second.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import QuantConfig
+from repro.models.common import ArchConfig
+from repro.models.model import forward, init_caches
+from repro.optim.madam import MadamConfig, materialize
+from repro.serving.metrics import RequestMetrics, summarize
+from repro.serving.request import Request, RequestQueue, RequestState
+from repro.serving.scheduler import Scheduler
+from repro.training.steps import build_decode_step
+
+__all__ = ["Engine", "DEFAULT_BUCKETS"]
+
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def _set_cursor(caches, n):
+    """Rewind every per-slot cache cursor in a (batch=1) cache tree to n."""
+    def visit(path, leaf):
+        if getattr(path[-1], "key", None) == "idx":
+            return jnp.full_like(leaf, n)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+class Engine:
+    """Continuous-batching serving engine. See module docstring."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        qcfg: Optional[QuantConfig],
+        mcfg: Optional[MadamConfig],
+        params: Any,
+        *,
+        num_slots: int = 4,
+        max_len: int = 256,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        scan_unroll: int | bool = 1,
+    ):
+        self.cfg, self.qcfg, self.mcfg = cfg, qcfg, mcfg
+        self.params = params
+        self.num_slots, self.max_len = num_slots, max_len
+        self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
+
+        prefix, _, period = cfg.layer_pattern()
+        kinds = set(prefix) | set(period)
+        self._recurrent = bool(kinds & {"mamba", "rwkv"})
+        self._window = cfg.sliding_window if "local" in kinds else None
+
+        self._decode_fn = jax.jit(
+            build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll),
+            donate_argnums=(1,))
+        # one fused call per admission: batch-1 prefill through the decode
+        # path + scatter of the produced rows into the engine cache
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
+
+        self.caches = init_caches(num_slots, max_len, cfg)
+        # zero batch-1 cache reused by every admission's prefill (the jit
+        # body is functional, so the template itself never mutates)
+        self._mini_template = init_caches(1, max_len, cfg)
+        self.scheduler = Scheduler(num_slots)
+        self.queue = RequestQueue()
+        # host mirrors of the in-graph per-slot cursors / last tokens
+        self._slot_len = np.zeros((num_slots,), np.int64)
+        tok_width = (cfg.num_codebooks,) if cfg.num_codebooks else ()
+        self._last_tok = np.zeros((num_slots,) + tok_width, np.int32)
+        self.completed: List[RequestMetrics] = []
+        self.finished: List[RequestState] = []  # keeps generated tokens
+        self.decode_steps = 0
+        self.prefills = 0
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # jitted bodies
+
+    def _prefill_impl(self, params, big, mini, tokens, n, slot):
+        """Batch-1 decode-path prefill of ``tokens`` over the zero cache
+        ``mini``, cursor rewound to the true prompt length ``n``, rows
+        scattered into row ``slot`` of the engine cache ``big``. Returns
+        (last-real-position logits, updated engine cache)."""
+        if self.mcfg is not None:
+            params = materialize(params, self.mcfg,
+                                 dtype=self.cfg.compute_dtype)
+        out = forward(params, tokens, self.cfg, self.qcfg, caches=mini,
+                      pos_offset=0)
+        logits = jnp.take(out.logits, n - 1, axis=1)  # (1, V)
+        filled = _set_cursor(out.caches, n)
+
+        def upd(b, m):
+            # the slot axis is wherever the two shapes disagree (axis 0 for
+            # plain leaves, axis 1 for period-stacked ones)
+            ax = next((i for i, (x, y) in enumerate(zip(b.shape, m.shape))
+                       if x != y), 0)
+            start = [0] * b.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                b, m.astype(b.dtype), tuple(start))
+        return logits, jax.tree.map(upd, big, filled)
+
+    # ------------------------------------------------------------------
+    # shape bucketing
+
+    def _bucket(self, plen: int) -> int:
+        assert plen <= self.max_len  # guaranteed by submit()
+        if self._recurrent:
+            return plen  # pads would pollute the recurrent state
+        for b in self.buckets:
+            if b >= plen and (self._window is None or b <= self._window):
+                return b
+        return plen  # no safe bucket: exact shape (ring wrap / long prompt)
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill_fn._cache_size()
+
+    @property
+    def decode_compiles(self) -> int:
+        return self._decode_fn._cache_size()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+
+    def reset(self) -> None:
+        """Clear all request/slot state but keep the compiled steps — a
+        reset engine re-runs a trace with warm jit caches (benchmarks)."""
+        self.caches = init_caches(self.num_slots, self.max_len, self.cfg)
+        self.scheduler = Scheduler(self.num_slots)
+        self.queue = RequestQueue()
+        self._slot_len[:] = 0
+        self._last_tok[:] = 0
+        self.completed, self.finished = [], []
+        self.decode_steps = self.prefills = 0
+        self._t0 = None
+
+    def submit(self, req: Request) -> None:
+        # reject before any slot is bound: failing later (inside _admit)
+        # would leak the already-occupied slot and wedge the engine
+        if req.prompt_len > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt len {req.prompt_len} exceeds "
+                f"engine max_len {self.max_len}")
+        self.queue.push(req)
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return time.monotonic() - self._t0
+
+    def _greedy(self, logits) -> np.ndarray:
+        lg = np.asarray(logits, np.float32)
+        if self.cfg.num_codebooks:
+            lg = lg.reshape(lg.shape[0], self.cfg.num_codebooks,
+                            self.cfg.vocab_size)
+        return np.argmax(lg, axis=-1).astype(np.int32)
+
+    def _admit(self, rs: RequestState, clock) -> None:
+        req = rs.request
+        plen = req.prompt_len
+        bucket = self._bucket(plen)
+        prompt = np.asarray(req.prompt, np.int32)
+        tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+        tokens[0, :plen] = prompt
+
+        logits, self.caches = self._prefill_fn(
+            self.params, self.caches, self._mini_template,
+            jnp.asarray(tokens), jnp.asarray(plen, jnp.int32),
+            jnp.asarray(rs.slot, jnp.int32))
+        tok = self._greedy(logits)[0]
+        self.prefills += 1
+        self._slot_len[rs.slot] = plen
+        self._last_tok[rs.slot] = tok
+        rs.generated.append(tok.tolist() if tok.ndim else int(tok))
+        rs.t_first_token = clock()
+        self._maybe_finish(rs, clock)
+
+    def _maybe_finish(self, rs: RequestState, clock) -> None:
+        if rs.done or self._slot_len[rs.slot] + 1 >= self.max_len:
+            rs.t_finish = clock()
+            self.scheduler.release(rs.slot)
+            self.finished.append(rs)
+            self.completed.append(RequestMetrics.from_state(rs))
+
+    def step(self, now: Optional[float] = None) -> bool:
+        """Admit ready requests, then advance every occupied slot one
+        token. Returns False when there was nothing to do.
+
+        With an explicit ``now`` (simulated-time replay) every timestamp
+        this step produces uses that value, so TTFT/latency stay in the
+        caller's clock; otherwise the engine's monotonic clock is read at
+        each event."""
+        clock = self._now if now is None else (lambda: now)
+        for rs in self.scheduler.admit_from(self.queue, clock()):
+            self._admit(rs, clock)
+        if not self.scheduler.running:
+            return False
+
+        tokens = self._last_tok[:, None]  # (B, 1[, K])
+        pos = jnp.asarray(self._slot_len, jnp.int32)
+        logits, self.caches = self._decode_fn(
+            self.params, self.caches, {"tokens": jnp.asarray(tokens)}, pos)
+        toks = self._greedy(logits)
+        self.decode_steps += 1
+        self._slot_len += 1  # every row's in-graph cursor advanced by 1
+        self._last_tok = toks
+        for slot, rs in list(self.scheduler.running.items()):
+            t = toks[slot]
+            rs.generated.append(t.tolist() if t.ndim else int(t))
+            self._maybe_finish(rs, clock)
+        return True
+
+    def drain_finished(self) -> List[RequestState]:
+        """Hand over (and forget) finished request states. Long-lived
+        ``submit()``/``step()`` callers must drain periodically or the
+        retained token lists grow without bound."""
+        out, self.finished = self.finished, []
+        self.completed = []
+        return out
+
+    def run(self, requests: Sequence[Request] = ()) -> Dict[str, float]:
+        """Drive the request set to completion; returns aggregate metrics
+        for the requests completed by *this* call (its own clock)."""
+        for r in requests:
+            self.submit(r)
+        n0 = len(self.completed)
+        self._t0 = time.monotonic()
+        while self.queue or self.scheduler.running:
+            if not self.step():
+                nxt = self.queue.next_arrival()
+                if nxt is not None:
+                    time.sleep(min(max(nxt - self._now(), 0.0), 0.05))
+        return summarize(self.completed[n0:], self._now())

@@ -1,0 +1,69 @@
+"""Per-request latency accounting and aggregate serving statistics."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.serving.request import RequestState
+
+__all__ = ["RequestMetrics", "summarize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMetrics:
+    rid: int
+    slot: int
+    arrival: float
+    t_admit: float
+    t_first_token: float
+    t_finish: float
+    prompt_len: int
+    new_tokens: int
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from arrival (queueing included)."""
+        return self.t_first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.arrival
+
+    @property
+    def decode_tps(self) -> Optional[float]:
+        if self.new_tokens < 2 or self.t_finish <= self.t_first_token:
+            return None
+        return (self.new_tokens - 1) / (self.t_finish - self.t_first_token)
+
+    @classmethod
+    def from_state(cls, rs: RequestState) -> "RequestMetrics":
+        assert rs.t_first_token is not None and rs.t_finish is not None
+        return cls(rid=rs.request.rid, slot=rs.slot,
+                   arrival=rs.request.arrival, t_admit=rs.t_admit,
+                   t_first_token=rs.t_first_token, t_finish=rs.t_finish,
+                   prompt_len=rs.request.prompt_len,
+                   new_tokens=len(rs.generated))
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    i = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[i]
+
+
+def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
+    """Aggregate a finished run: goodput and latency percentiles."""
+    total_new = sum(m.new_tokens for m in metrics)
+    ttfts = sorted(m.ttft for m in metrics)
+    lats = sorted(m.latency for m in metrics)
+    return {
+        "completed": float(len(metrics)),
+        "wall_s": wall,
+        "generated_tokens": float(total_new),
+        "tokens_per_s": total_new / wall if wall > 0 else float("nan"),
+        "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+        "ttft_p95_s": _pct(ttfts, 0.95),
+        "latency_p50_s": _pct(lats, 0.50),
+        "latency_p95_s": _pct(lats, 0.95),
+    }

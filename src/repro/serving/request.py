@@ -1,0 +1,79 @@
+"""Request lifecycle for the continuous-batching serving engine.
+
+A ``Request`` is a prompt plus a generation budget; a ``RequestState`` is a
+request bound to a decode slot, accumulating generated tokens and the
+timestamps the metrics layer reads (arrival -> admit -> first token ->
+finish). ``RequestQueue`` is the arrival-ordered waiting line the scheduler
+drains into freed slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable, List, Optional, Sequence
+
+__all__ = ["Request", "RequestState", "RequestQueue"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]            # token ids; rows may be per-codebook
+    max_new_tokens: int
+    arrival: float = 0.0             # seconds relative to engine start
+    eos_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    slot: int
+    t_admit: float
+    generated: List = dataclasses.field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        if eos is None or not self.generated:
+            return False
+        last = self.generated[-1]
+        if isinstance(last, (list, tuple)):  # multi-codebook step
+            return all(t == eos for t in last)
+        return last == eos
+
+
+class RequestQueue:
+    """FIFO over arrival time: a request becomes admissible once the
+    engine clock passes its ``arrival`` (open-loop trace replay)."""
+
+    def __init__(self, requests: Iterable[Request] = ()):
+        self._q: deque = deque(sorted(requests, key=lambda r: r.arrival))
+
+    def push(self, req: Request) -> None:
+        if self._q and req.arrival < self._q[-1].arrival:
+            items = sorted([*self._q, req], key=lambda r: r.arrival)
+            self._q = deque(items)
+        else:
+            self._q.append(req)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        if self._q and self._q[0].arrival <= now:
+            return self._q.popleft()
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self._q[0].arrival if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

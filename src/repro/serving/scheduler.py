@@ -1,0 +1,56 @@
+"""Slot scheduler: continuous batching over a fixed decode batch.
+
+The engine decodes a fixed batch of ``num_slots`` rows forever; the
+scheduler's job is purely occupancy — hand a freed row to the next waiting
+request the moment a sequence finishes, instead of waiting for the whole
+batch to drain (the lock-step failure mode this subsystem replaces).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.serving.request import Request, RequestQueue, RequestState
+
+__all__ = ["Scheduler"]
+
+
+class Scheduler:
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self.running: Dict[int, RequestState] = {}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def admit(self, req: Request, now: float) -> RequestState:
+        """Bind ``req`` to the lowest free slot."""
+        slot = self._free.pop()
+        rs = RequestState(request=req, slot=slot, t_admit=now)
+        self.running[slot] = rs
+        return rs
+
+    def admit_from(self, queue: RequestQueue, now: float) -> List[RequestState]:
+        """Drain ready requests into free slots; returns the admissions."""
+        admitted = []
+        while self.has_free():
+            req = queue.pop_ready(now)
+            if req is None:
+                break
+            admitted.append(self.admit(req, now))
+        return admitted
+
+    def release(self, slot: int) -> Optional[RequestState]:
+        """Free a slot whose sequence finished; its cache row is recycled
+        in place by the next admission's scatter."""
+        rs = self.running.pop(slot, None)
+        if rs is not None:
+            self._free.append(slot)
+            self._free.sort(reverse=True)
+        return rs

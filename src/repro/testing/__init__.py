@@ -1,0 +1,4 @@
+from repro.testing.hypothesis_compat import (HAVE_HYPOTHESIS, given,
+                                             settings, st)
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

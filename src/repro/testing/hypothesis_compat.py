@@ -1,0 +1,94 @@
+"""Property-testing compat layer.
+
+Tests import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly. When hypothesis is installed (the ``[test]``
+extra pulls it in; CI always has it) the real library is used unchanged.
+In hermetic environments without it, a minimal deterministic fallback
+generates boundary values plus seeded-random draws, so the suite still
+*collects and runs* instead of dying with ``ModuleNotFoundError`` — the
+fallback trades hypothesis's shrinking and coverage for availability.
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``floats``, ``sampled_from``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Draws one example per call; boundary cases first."""
+
+        def __init__(self, boundary, draw):
+            self._boundary = list(boundary)
+            self._draw = draw
+            self._i = 0
+
+        def example(self, rng):
+            if self._i < len(self._boundary):
+                val = self._boundary[self._i]
+            else:
+                val = self._draw(rng)
+            self._i += 1
+            return val
+
+    class _st:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2 ** 31) if min_value is None else min_value
+            hi = 2 ** 31 - 1 if max_value is None else max_value
+            return lambda: _Strategy(
+                [lo, hi] + ([0] if lo < 0 < hi else []),
+                lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def floats(min_value=-1e30, max_value=1e30, allow_nan=False,
+                   allow_infinity=False, **_):
+            del allow_nan, allow_infinity  # fallback never emits them
+            boundary = [min_value, max_value,
+                        (min_value + max_value) / 2.0]
+            for near_zero in (0.0, 1e-6):  # only when inside the range
+                if min_value <= near_zero <= max_value:
+                    boundary.append(near_zero)
+            return lambda: _Strategy(
+                boundary, lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return lambda: _Strategy(seq, lambda rng: rng.choice(seq))
+
+    st = _st()
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategy_factories):
+        """Each run draws ``max_examples`` tuples deterministically
+        (seeded rng) and calls the test once per tuple."""
+
+        def deco(fn):
+            def wrapper():
+                # read at call time: @settings may sit above OR below
+                # @given (both orders are valid with real hypothesis) —
+                # above, the attribute lands on this wrapper
+                n = min(getattr(wrapper, "_compat_max_examples",
+                                getattr(fn, "_compat_max_examples", 20)), 50)
+                rng = random.Random(0xC0FFEE)
+                strategies = [f() for f in strategy_factories]
+                for _ in range(n):
+                    fn(*(s.example(rng) for s in strategies))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -30,6 +30,7 @@ def _smoke_batch(cfg, key, batch=2, seq=24):
     return out
 
 
+@pytest.mark.slow  # ten archs x jit'd train step: the suite's biggest chunk
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward_and_train_step(arch, key):
     cfg = get_smoke_config(arch)

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from repro.testing import given, settings, st
 from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
 from repro.kernels import lns_matmul, lns_qmatmul, madam_step, quantize_pack
 from repro.kernels import ref as kref
@@ -13,6 +13,9 @@ from repro.kernels.lns_matmul import lns_matmul_pallas
 from repro.kernels.lns_qmatmul import lns_qmatmul_pallas
 from repro.kernels.lns_quantize import lns_quantize_pallas
 from repro.kernels.madam_update import madam_update_pallas
+
+# kernel bodies execute in Python on CPU (interpret mode): correct but slow
+pytestmark = pytest.mark.interpret
 
 FMT = LNSFormat(bits=8, gamma=8)
 

@@ -13,6 +13,9 @@ from repro.training import (build_decode_step, build_prefill_step,
                             build_train_step, init_train_state)
 from repro.training.data import SyntheticLM
 
+# multi-step jit'd training runs; CI's per-push job skips these (nightly full)
+pytestmark = pytest.mark.slow
+
 
 def _run_training(cfg, qcfg, steps=30, lr=2.0 ** -5, seed=0):
     mcfg = MadamConfig(lr=lr)

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timed
 from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
-from repro.kernels import lns_qmatmul, madam_step, quantize_pack
+from repro.kernels import (lns_qmatmul, madam_step, madam_step_packed,
+                           quantize_pack)
 
 FMT = LNSFormat(bits=8, gamma=8)
 
@@ -44,4 +45,10 @@ def run() -> list[str]:
                                   lr=2.0 ** -7), iters=2)
     rows.append(csv_row("madam_step_512", us,
                         "hbm_per_param_bytes=3r+8rw (code+sign+g+v)"))
+
+    packed = lns_pack(sign, code, ufmt)
+    us = timed(lambda: madam_step_packed(packed, g, v, jnp.asarray(1), ufmt,
+                                         lr=2.0 ** -7), iters=2)
+    rows.append(csv_row("madam_step_packed_512", us,
+                        "hbm_per_param_bytes=2r+6rw (word+g+v, sign in-word)"))
     return rows

@@ -21,11 +21,23 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="minimal steps/trials — CI entry-point check only")
     ap.add_argument("--only", default=None, help="comma-list of modules")
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "reference"],
+                    help="kernel backend override (sets REPRO_KERNEL_BACKEND)")
+    ap.add_argument("--interpret", default=None, choices=["auto", "0", "1"],
+                    help="Pallas interpret mode (sets REPRO_KERNEL_INTERPRET;"
+                         " default: auto-detect, compiled on real TPU)")
     args = ap.parse_args()
+
+    # must land in the environment before jax/kernels trace anything
+    if args.backend:
+        os.environ["REPRO_KERNEL_BACKEND"] = args.backend
+    if args.interpret:
+        os.environ["REPRO_KERNEL_INTERPRET"] = args.interpret
 
     from benchmarks import (base_factor, bitwidth_sweep, conversion_approx,
                             energy, format_comparison, kernels, quant_error,
-                            serving, update_precision)
+                            serving, train_step, update_precision)
 
     steps = 60 if args.full else (4 if args.smoke else 25)
     suites = {
@@ -39,6 +51,11 @@ def main() -> None:
             steps=30 if args.full else (4 if args.smoke else 10)),
         "energy": energy.run,
         "kernels": kernels.run,
+        # fused-vs-unfused dispatch-path guard: always-on (incl. --smoke)
+        # so a regression that silently re-densifies the weights shows up
+        # as a fwd_weight_bytes ratio of 1.0 in CI
+        "train_step": lambda: train_step.run(
+            steps=2 if args.smoke else (6 if args.full else 3)),
         # serving keeps its default trace in --smoke: jit compiles dominate
         # its cost, and the tiny-trace regime is prefill-bound (lock-step
         # flattery, not the decode-bound regime the comparison is about)

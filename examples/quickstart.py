@@ -41,7 +41,8 @@ cfg = get_smoke_config("granite-8b")
 mcfg = MadamConfig(lr=2.0 ** -6)
 state = init_train_state(key, cfg, mcfg)
 leaf = state.params["period"]["pos0"]["mlp"]["up"]
-print(f"\nweight storage: sign {leaf.sign.dtype}, code {leaf.code.dtype}, "
+print(f"\nweight storage: packed {leaf.packed.dtype} "
+      f"({leaf.packed.dtype.itemsize} B/elem wire words), "
       f"scale {leaf.scale.shape} — no float weights")
 step = jax.jit(build_train_step(cfg, qcfg, mcfg))
 data = SyntheticLM(cfg, batch=8, seq=32)

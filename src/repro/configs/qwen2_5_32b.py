@@ -2,7 +2,7 @@
 
 [hf:Qwen/Qwen2.5-*] 64L d_model=5120 40H (GQA kv=8, head_dim=128)
 d_ff=27648 vocab=152064. 40 heads don't divide a 16-way model axis, so
-attention runs sequence-parallel (DESIGN.md §4).
+attention runs sequence-parallel (DESIGN.md §6).
 """
 from repro.models.common import ArchConfig
 

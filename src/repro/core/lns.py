@@ -29,6 +29,8 @@ import numpy as np
 
 __all__ = [
     "LNSFormat",
+    "LNSWeight",
+    "is_lns_weight",
     "pow2_scale",
     "compute_scale",
     "lns_encode",
@@ -36,6 +38,10 @@ __all__ = [
     "lns_quantize",
     "lns_pack",
     "lns_unpack",
+    "lns_word_dtype",
+    "lns_decode_packed",
+    "lns_requant_packed",
+    "lns_weight_encode",
     "quantization_gap",
 ]
 
@@ -192,6 +198,12 @@ def lns_quantize(
     return lns_decode(sign, code, fmt, scale, dtype=x.dtype)
 
 
+def lns_word_dtype(fmt: LNSFormat):
+    """Narrowest unsigned container for one packed ``fmt.bits``-bit word."""
+    return jnp.uint8 if fmt.bits <= 8 else (
+        jnp.uint16 if fmt.bits <= 16 else jnp.uint32)
+
+
 def lns_pack(sign: jax.Array, code: jax.Array, fmt: LNSFormat) -> jax.Array:
     """Pack (sign, code) into the hardware wire format: one unsigned word of
     ``fmt.bits`` bits, MSB = sign, low ``bits-1`` bits = exponent code.
@@ -199,10 +211,9 @@ def lns_pack(sign: jax.Array, code: jax.Array, fmt: LNSFormat) -> jax.Array:
     This is the storage dtype the TPU path reads from HBM — B=8 LNS weights
     are exactly 1 byte/element (the 2x bandwidth win vs bf16).
     """
-    dt = jnp.uint8 if fmt.bits <= 8 else (jnp.uint16 if fmt.bits <= 16 else jnp.uint32)
     neg = (sign.astype(jnp.int32) < 0).astype(jnp.uint32)
     word = (neg << (fmt.bits - 1)) | code.astype(jnp.uint32)
-    return word.astype(dt)
+    return word.astype(lns_word_dtype(fmt))
 
 
 def lns_unpack(packed: jax.Array, fmt: LNSFormat):
@@ -212,6 +223,142 @@ def lns_unpack(packed: jax.Array, fmt: LNSFormat):
     code = w & jnp.uint32(fmt.max_code)
     sign = (1 - 2 * sign_bit.astype(jnp.int32)).astype(jnp.int8)
     return sign, code.astype(fmt.code_dtype)
+
+
+def lns_decode_packed(word: jax.Array, fmt: LNSFormat,
+                      dtype=jnp.float32) -> jax.Array:
+    """Decode packed wire words to *unscaled* reals ``±2^(-code/γ)``.
+
+    The single definition of the packed-word decode: the Pallas qmatmul
+    kernel prologue, the jnp reference backend, and the kernel oracles in
+    ``repro.kernels.ref`` all call this, so kernel and oracle cannot drift
+    (DESIGN.md §4). Pure jnp bit-slicing — traceable inside a kernel body.
+    """
+    w = word.astype(jnp.int32)
+    code = w & fmt.max_code
+    sign = (1 - 2 * ((w >> (fmt.bits - 1)) & 1)).astype(jnp.float32)
+    mag = jnp.exp2(-code.astype(jnp.float32) / fmt.gamma)
+    if fmt.flush_zero:
+        mag = jnp.where(code == fmt.max_code, 0.0, mag)
+    return (sign * mag).astype(dtype)
+
+
+def lns_requant_packed(packed: jax.Array, src: LNSFormat,
+                       dst: LNSFormat) -> jax.Array:
+    """Re-grid packed words ``src`` -> ``dst`` with integer-only arithmetic.
+
+    ``code_dst = round(code_src * γ_dst/γ_src)`` is a shift-round when both
+    base factors are powers of two — this is how the 16-bit update store
+    feeds the 8-bit forward datapath without ever leaving the log domain
+    (paper §4's "no integer↔LNS conversion", DESIGN.md §3). Matches
+    decode→re-encode at the same scale (round-to-nearest, ties away from
+    zero, clamped to ``dst.max_code``) everywhere except *exact* grid
+    ties (``code_src·γ_dst ≡ γ_src/2 mod γ_src``, ~1/2^(B_src-B_dst) of
+    codes): there the integer path rounds deterministically away from
+    zero while the float path lands on whichever side f32 log2/exp2
+    roundoff puts it — one code step of dither on values that sit exactly
+    between two representable magnitudes.
+    """
+    w = packed.astype(jnp.int32)
+    sign_bit = (w >> (src.bits - 1)) & 1
+    code = w & src.max_code
+    if dst.gamma >= src.gamma:
+        code = code * (dst.gamma // src.gamma)
+    else:
+        r = src.gamma // dst.gamma
+        code = (code + r // 2) // r  # floor(c/r + 1/2): ties away, c >= 0
+    code = jnp.clip(code, 0, dst.max_code)
+    return ((sign_bit << (dst.bits - 1)) | code).astype(lns_word_dtype(dst))
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class LNSWeight:
+    """A weight tensor stored natively in the packed LNS wire format.
+
+    This is the single parameter representation shared by training state,
+    checkpoints, and the serving engine (DESIGN.md §3):
+
+    * ``packed`` — ``lns_pack`` words (MSB sign, low bits exponent code):
+      1 byte/element at B<=8, the exact bytes the TPU kernels read from HBM.
+    * ``scale``  — power-of-two per-channel scale, broadcastable against the
+      decoded tensor.
+    * ``delta``  — optional zero-valued dense tangent carrier. Training
+      differentiates w.r.t. ``delta`` instead of a dense master copy; its
+      gradient IS dL/dW at W = decode(packed). ``None`` outside of a loss.
+    * ``fmt``    — the static :class:`LNSFormat` of the words (pytree aux
+      data, so it travels with the leaf through jit/scan/checkpoint trees).
+    """
+
+    __slots__ = ("packed", "scale", "delta", "fmt")
+
+    def __init__(self, packed, scale, delta=None, fmt: Optional[LNSFormat] = None):
+        self.packed = packed
+        self.scale = scale
+        self.delta = delta
+        self.fmt = fmt
+
+    # -- pytree protocol (fmt is static aux data) ---------------------------
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return (((k("packed"), self.packed), (k("scale"), self.scale),
+                 (k("delta"), self.delta)), self.fmt)
+
+    @classmethod
+    def tree_unflatten(cls, fmt, children):
+        return cls(children[0], children[1], children[2], fmt)
+
+    def replace(self, **kw) -> "LNSWeight":
+        d = {"packed": self.packed, "scale": self.scale, "delta": self.delta,
+             "fmt": self.fmt}
+        d.update(kw)
+        return LNSWeight(**d)
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def shape(self):
+        return self.packed.shape
+
+    @property
+    def ndim(self):
+        return self.packed.ndim
+
+    @property
+    def sign(self):
+        return lns_unpack(self.packed, self.fmt)[0]
+
+    @property
+    def code(self):
+        return lns_unpack(self.packed, self.fmt)[1]
+
+    def decode(self, dtype=jnp.float32) -> jax.Array:
+        """Dense view ``±s·2^(-code/γ) (+ delta)`` in ``dtype``."""
+        if self.fmt is None:
+            raise ValueError("LNSWeight.decode requires fmt")
+        y = (lns_decode_packed(self.packed, self.fmt, jnp.float32)
+             * self.scale).astype(dtype)
+        if self.delta is not None:
+            y = y + self.delta.astype(dtype)
+        return y
+
+    def __repr__(self):
+        return (f"LNSWeight(packed={getattr(self.packed, 'shape', self.packed)}, "
+                f"scale={getattr(self.scale, 'shape', self.scale)}, "
+                f"delta={'None' if self.delta is None else 'dense'}, "
+                f"fmt={self.fmt})")
+
+
+def is_lns_weight(leaf) -> bool:
+    return isinstance(leaf, LNSWeight)
+
+
+def lns_weight_encode(x: jax.Array, fmt: LNSFormat, scale_axis=None,
+                      scale: Optional[jax.Array] = None,
+                      key: Optional[jax.Array] = None) -> LNSWeight:
+    """Encode a dense tensor into a packed :class:`LNSWeight`."""
+    if scale is None:
+        scale = compute_scale(x, axis=scale_axis)
+    sign, code = lns_encode(x, fmt, scale, key=key)
+    return LNSWeight(packed=lns_pack(sign, code, fmt), scale=scale, fmt=fmt)
 
 
 def quantization_gap(x: jax.Array, fmt: LNSFormat) -> jax.Array:

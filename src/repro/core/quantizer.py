@@ -23,8 +23,12 @@ from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.lns import LNSFormat, compute_scale, lns_quantize
+from repro.core.lns import (LNSFormat, LNSWeight, compute_scale,
+                            is_lns_weight, lns_decode_packed, lns_quantize,
+                            lns_requant_packed)
+from repro.kernels import dispatch
 from repro.numerics.fp import FPFormat, fp_quantize
 
 __all__ = [
@@ -111,6 +115,9 @@ class QuantConfig:
     # Hybrid conversion-approximation simulation (paper App. B / Table 10):
     # number of LUT entries; None = exact accumulation.
     approx_lut: Optional[int] = None
+    # Kernel backend for routed packed-LNS GEMMs ("pallas"/"reference";
+    # None = platform default — see repro.kernels.dispatch).
+    backend: Optional[str] = None
 
     @classmethod
     def lns_madam(cls, bits: int = 8, gamma: int = 8, update_bits: int = 16,
@@ -138,11 +145,136 @@ class QuantConfig:
         return any(f is not None for f in (self.weight, self.act, self.err, self.grad))
 
 
-def qeinsum(eq: str, x: jax.Array, w: jax.Array, cfg: Optional[QuantConfig],
+# ---------------------------------------------------------------------------
+# packed-LNS routing: GEMMs whose weight is a packed LNSWeight skip the
+# materialize + fake-quant round-trip and feed the wire words straight to
+# the dispatch layer (DESIGN.md §4).
+
+
+def _route_plan(eq: str) -> bool:
+    """True for a plain 2-D contraction ``...k,kn->...n`` (single shared
+    index, weight contributes exactly its output axis)."""
+    try:
+        lhs, out = eq.replace(" ", "").split("->")
+        xs, ws = lhs.split(",")
+    except ValueError:
+        return False
+    return (len(ws) == 2 and xs[-1] == ws[0] and out == xs[:-1] + ws[1]
+            and len(set(xs)) == len(xs) and ws[1] not in xs)
+
+
+def _routable(eq: str, w: LNSWeight, cfg: Optional[QuantConfig]) -> bool:
+    """Can this GEMM go through the packed kernel path?
+
+    Requires: LNS forward formats for both operands on one grid (the kernel
+    decodes both tiles with a single (bits, γ)), per-tensor activation
+    scale, a 2-D weight whose per-channel scale is constant along the
+    contraction axis (so it factors into the f32 epilogue), and no
+    conversion-approximation simulation.
+    """
+    if cfg is None or cfg.approx_lut is not None:
+        return False
+    if not (isinstance(cfg.weight, LNSFormat) and isinstance(cfg.act, LNSFormat)):
+        return False
+    if (cfg.weight.bits, cfg.weight.gamma) != (cfg.act.bits, cfg.act.gamma):
+        return False
+    if cfg.weight.stochastic or cfg.act.stochastic:
+        return False
+    if cfg.act_scale_axis is not None:
+        return False
+    if w.ndim != 2 or w.fmt is None:
+        return False
+    s = w.scale
+    if hasattr(s, "ndim") and s.ndim not in (0, 2):
+        return False
+    if getattr(s, "ndim", 0) == 2 and s.shape[0] != 1:
+        return False  # scale varies along the contraction axis
+    return _route_plan(eq)
+
+
+def _forward_packed(w: LNSWeight, ffmt: LNSFormat):
+    """Weight words on the forward grid: integer re-grid when the storage
+    format (B_U) is wider than the forward format (B_W) — a shift-round,
+    never a decode."""
+    if w.fmt is not None and (w.fmt.bits, w.fmt.gamma) == (ffmt.bits, ffmt.gamma):
+        return w.packed
+    return lns_requant_packed(w.packed, w.fmt, ffmt)
+
+
+def _routed_impl(fmt: LNSFormat, backend: Optional[str], x: jax.Array,
+                 pw: jax.Array, wscale: jax.Array):
+    """y = decode(Q_A(x)) @ decode(pw) * s_x * s_w via the dispatch layer.
+
+    Returns ``(y, px, sx)`` — the packed activation + scale double as the
+    custom-vjp residuals.
+    """
+    K = x.shape[-1]
+    xm = x.reshape(-1, K)
+    px, sx = dispatch.encode_pack(xm, fmt, scale_axis=None, backend=backend)
+    y = dispatch.qmatmul(px, pw, fmt, scale_a=sx,
+                         scale_b=wscale.reshape(1, -1),
+                         compute_dtype=x.dtype, backend=backend)
+    return y.reshape(x.shape[:-1] + (pw.shape[1],)).astype(x.dtype), px, sx
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _routed_matmul(fmt: LNSFormat, backend: Optional[str], x: jax.Array,
+                   delta: jax.Array, pw: jax.Array, wscale: jax.Array):
+    """Routed GEMM with STE gradients.
+
+    ``delta`` is the weight's zero tangent carrier: the primal ignores it
+    (no extra FLOPs), the backward returns dL/dW into it — exactly the
+    straight-through gradient of ``einsum(Q_A(x), Q_W(W))`` w.r.t. W.
+    """
+    return _routed_impl(fmt, backend, x, pw, wscale)[0]
+
+
+def _routed_fwd(fmt, backend, x, delta, pw, wscale):
+    y, px, sx = _routed_impl(fmt, backend, x, pw, wscale)
+    # residuals are the packed operands: 1 B/elem instead of a dense bf16
+    # activation save — the LNS bandwidth win applies to remat too (the
+    # zero-size tokens carry x/delta dtypes through the residual pytree)
+    return y, (px, sx, pw, wscale, jnp.zeros((0,), x.dtype),
+               jnp.zeros((0,), delta.dtype))
+
+
+def _routed_bwd(fmt, backend, res, dy):
+    px, sx, pw, wscale, x_tok, d_tok = res
+    x_dtype, d_dtype = x_tok.dtype, d_tok.dtype
+    dym = dy.reshape(-1, dy.shape[-1]).astype(x_dtype)
+    # STE: d/dx treats Q_A as identity -> dy @ Wq^T; d/dW -> Q_A(x)^T @ dy
+    wq = (lns_decode_packed(pw, fmt, jnp.float32)
+          * wscale.reshape(1, -1)).astype(x_dtype)
+    xq = (lns_decode_packed(px, fmt, jnp.float32) * sx).astype(x_dtype)
+    dx = (dym @ wq.T).reshape(dy.shape[:-1] + (pw.shape[0],)).astype(x_dtype)
+    ddelta = (xq.T @ dym).astype(d_dtype)
+    return (dx, ddelta, np.zeros(pw.shape, jax.dtypes.float0),
+            jnp.zeros_like(wscale))
+
+
+_routed_matmul.defvjp(_routed_fwd, _routed_bwd)
+
+
+def _routed_qeinsum(eq: str, x: jax.Array, w: LNSWeight,
+                    cfg: QuantConfig) -> jax.Array:
+    ffmt = cfg.weight
+    pw = _forward_packed(w, ffmt)
+    if w.delta is None:  # inference: no tangent carrier, no vjp machinery
+        return _routed_impl(ffmt, cfg.backend, x, pw, w.scale)[0]
+    return _routed_matmul(ffmt, cfg.backend, x, w.delta, pw, w.scale)
+
+
+def qeinsum(eq: str, x: jax.Array, w, cfg: Optional[QuantConfig],
             w_channel_axis: Optional[int] = -1) -> jax.Array:
     """Quantized GEMM: ``einsum(eq, Q_A(x), Q_W(w))`` with Q_E on the
     output cotangent. This is the layer every model projection routes
     through.
+
+    ``w`` may be a dense array or a packed :class:`LNSWeight`. Packed 2-D
+    contractions route through ``kernels/dispatch`` (tile-local decode,
+    per-channel scale epilogue — no dense weight copy); packed weights
+    that cannot route (3-D expert stacks, approx-LUT simulation, non-LNS
+    formats) decode per leaf at the use site and take the fake-quant path.
 
     ``w_channel_axis``: the weight axis that keeps per-channel scale
     resolution (output features). ``None`` forces per-tensor weight scale.
@@ -153,6 +285,11 @@ def qeinsum(eq: str, x: jax.Array, w: jax.Array, cfg: Optional[QuantConfig],
     # the HLO level would make every backward cotangent f32 (the vjp of the
     # f32 dot), doubling backward HBM + collective bytes — so GEMMs emit the
     # compute dtype and Q_E re-grids the cotangent at each boundary.
+    if is_lns_weight(w):
+        if _routable(eq, w, cfg):
+            y = _routed_qeinsum(eq, x, w, cfg)
+            return backward_quantize(y, cfg.err, cfg.err_scale_axis, x.dtype)
+        w = w.decode(x.dtype)  # per-leaf fallback (delta keeps grads flowing)
     if cfg is None or not cfg.is_quantized:
         y = jnp.einsum(eq, x, w)
         return backward_quantize(y, None, None, x.dtype)

@@ -3,8 +3,8 @@
 Maps each leaf (by its tree path) to a tuple of logical axis names, then
 resolves them against the active mesh + rules into NamedShardings. Stacked
 (scanned) period parameters get a leading "stack" axis; LNSWeight leaves
-shard sign/code like the dense weight and the scale with its size-1 axis
-unsharded.
+shard the packed words like the dense weight and the scale with its size-1
+axis unsharded.
 """
 from __future__ import annotations
 
@@ -13,8 +13,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding
 
+from repro.core.lns import LNSWeight, is_lns_weight
 from repro.distributed.sharding import logical_sharding, spec_for
-from repro.optim.madam import LNSWeight, is_lns_weight
 
 __all__ = ["params_logical_axes", "params_shardings", "batch_shardings",
            "cache_logical_axes", "tree_shardings", "opt_logical_axes"]
@@ -102,11 +102,13 @@ def params_logical_axes(params) -> Any:
     def visit(path, leaf):
         names = _path_names(path)
         if is_lns_weight(leaf):
-            axes = _leaf_axes(names, leaf.code.ndim)
+            axes = _leaf_axes(names, leaf.packed.ndim)
             scale_axes = tuple(a if leaf.scale.shape[i] != 1 else None
                                for i, a in enumerate(axes)) \
-                if leaf.scale.ndim == leaf.code.ndim else (None,) * leaf.scale.ndim
-            return LNSWeight(sign=axes, code=axes, scale=scale_axes)
+                if leaf.scale.ndim == leaf.packed.ndim else (None,) * leaf.scale.ndim
+            # keep the leaf's fmt aux so the axes/shardings tree structure
+            # matches the params tree exactly (jit in_shardings prefix match)
+            return LNSWeight(packed=axes, scale=scale_axes, fmt=leaf.fmt)
         return _leaf_axes(names, getattr(leaf, "ndim", 0))
 
     return jax.tree_util.tree_map_with_path(visit, params,
@@ -142,7 +144,7 @@ def opt_logical_axes(params, opt_state):
     p_axes = params_logical_axes(params)
 
     def leaf_axes(axes, g2_leaf):
-        code_axes = axes.code if isinstance(axes, LNSWeight) else axes
+        code_axes = axes.packed if isinstance(axes, LNSWeight) else axes
         if isinstance(g2_leaf, dict):  # factored {r, c}
             return {"r": tuple(code_axes[:-1]),
                     "c": tuple(code_axes[:-2]) + tuple(code_axes[-1:])}

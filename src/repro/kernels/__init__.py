@@ -1,15 +1,21 @@
-"""Pallas TPU kernels for the LNS hot spots (validated in interpret mode).
+"""Pallas TPU kernels for the LNS hot spots, behind a backend registry.
 
 * ``lns_matmul``   — bit-exact Fig.-6 integer datapath (validation artifact)
 * ``lns_qmatmul``  — fused dequantize->MXU matmul (production path)
 * ``lns_quantize`` — fused Q_log encode + sign/exponent pack
-* ``madam_update`` — fused Algorithm-1 step on integer exponent codes
+* ``madam_update`` — fused Algorithm-1 step on integer exponent codes, in
+  unpacked (code, sign) and packed-wire-word variants
 
 Each kernel has a pure-jnp oracle in :mod:`repro.kernels.ref` and a jit'd
-wrapper in :mod:`repro.kernels.ops`.
+wrapper in :mod:`repro.kernels.ops`. Production code does not call either
+directly: it goes through :mod:`repro.kernels.dispatch`, which picks the
+``"pallas"`` or ``"reference"`` backend per platform (override with
+``REPRO_KERNEL_BACKEND``) and auto-detects Pallas interpret mode
+(``REPRO_KERNEL_INTERPRET``).
 """
+from repro.kernels import dispatch
 from repro.kernels.ops import (default_interpret, lns_matmul, lns_qmatmul,
-                               madam_step, quantize_pack)
+                               madam_step, madam_step_packed, quantize_pack)
 
-__all__ = ["default_interpret", "lns_matmul", "lns_qmatmul", "madam_step",
-           "quantize_pack"]
+__all__ = ["default_interpret", "dispatch", "lns_matmul", "lns_qmatmul",
+           "madam_step", "madam_step_packed", "quantize_pack"]

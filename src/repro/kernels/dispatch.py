@@ -1,0 +1,180 @@
+"""Kernel backend registry: one dispatch point for the LNS hot paths.
+
+Every production consumer of the packed-LNS datapath (``qeinsum`` weight
+GEMMs, the Madam update, activation encode) routes through this module
+instead of importing a kernel directly (DESIGN.md §4). Two backends:
+
+* ``"pallas"``    — the Pallas TPU kernels (compiled Mosaic on real TPUs,
+  interpret mode elsewhere). Default on TPU/GPU.
+* ``"reference"`` — pure-jnp oracles with bit-identical semantics. Default
+  on CPU, where interpret-mode Pallas is a ~100x slowdown; also the
+  equivalence anchor the tests pin the kernels against.
+
+Selection order: explicit ``backend=`` argument > ``REPRO_KERNEL_BACKEND``
+env var > platform default. ``interpret`` resolves the same way via
+``REPRO_KERNEL_INTERPRET`` (``auto``/``0``/``1``), defaulting to interpret
+mode on anything that is not a real TPU — compiled Mosaic is never silently
+replaced by the interpreter on hardware, and the interpreter is never
+accidentally shipped to a TPU job. Both env vars are read at trace time
+(set them before the first jit of a step function).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import (LNSFormat, compute_scale, lns_decode_packed,
+                            lns_encode, lns_pack, lns_unpack, lns_word_dtype)
+
+__all__ = [
+    "BACKENDS",
+    "ENV_BACKEND",
+    "ENV_INTERPRET",
+    "default_backend",
+    "resolve_backend",
+    "resolve_interpret",
+    "qmatmul",
+    "encode_pack",
+    "madam_step",
+]
+
+BACKENDS = ("pallas", "reference")
+ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+ENV_INTERPRET = "REPRO_KERNEL_INTERPRET"
+
+
+def default_backend() -> str:
+    """``REPRO_KERNEL_BACKEND`` if set, else pallas on TPU/GPU, reference
+    elsewhere."""
+    env = os.environ.get(ENV_BACKEND, "").strip().lower()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"{ENV_BACKEND}={env!r}: expected one of {BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() in ("tpu", "gpu") else "reference"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    if backend is None:
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r}: expected one of {BACKENDS}")
+    return backend
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Platform auto-detection for Pallas interpret mode.
+
+    Compiled wherever the pallas backend is the default (TPU: Mosaic,
+    GPU: Triton), interpreter elsewhere — so the platforms that default to
+    ``"pallas"`` never silently run the ~100x interpreter. Overridable per
+    call or via ``REPRO_KERNEL_INTERPRET`` in {auto, 0, 1, false, true}.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(ENV_INTERPRET, "auto").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    if env not in ("", "auto"):
+        raise ValueError(
+            f"{ENV_INTERPRET}={env!r}: expected auto, 0, 1, false or true")
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+# ---------------------------------------------------------------------------
+# dispatched operations
+
+
+def qmatmul(pa: jax.Array, pb: jax.Array, fmt: LNSFormat,
+            scale_a: Optional[jax.Array] = None,
+            scale_b: Optional[jax.Array] = None, *,
+            compute_dtype=jnp.bfloat16,
+            backend: Optional[str] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Packed ``pa (M,K) @ pb (K,N)`` -> f32, per-row/col scale epilogue."""
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import lns_qmatmul
+        return lns_qmatmul(pa, pb, fmt, scale_a, scale_b,
+                           compute_dtype=compute_dtype,
+                           interpret=resolve_interpret(interpret))
+    a = lns_decode_packed(pa, fmt, compute_dtype)
+    b = lns_decode_packed(pb, fmt, compute_dtype)
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if scale_a is not None:
+        out = out * scale_a
+    if scale_b is not None:
+        out = out * scale_b
+    return out
+
+
+def encode_pack(x: jax.Array, fmt: LNSFormat, scale_axis: Optional[int] = None,
+                *, backend: Optional[str] = None,
+                interpret: Optional[bool] = None):
+    """Q_log-encode a 2-D tensor into packed words + its broadcast scale.
+
+    Returns ``(packed (R,C), scale (R,1) f32)``; ``scale_axis=0`` keeps
+    per-row scales, ``None`` is per-tensor (broadcast to (R,1)).
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import quantize_pack
+        return quantize_pack(x, fmt, scale_axis,
+                             interpret=resolve_interpret(interpret))
+    R = x.shape[0]
+    scale = compute_scale(x, axis=scale_axis)
+    srow = jnp.broadcast_to(
+        scale.reshape(-1, 1) if scale.ndim else scale, (R, 1)
+    ).astype(jnp.float32)
+    sign, code = lns_encode(x, fmt, srow)
+    return lns_pack(sign, code, fmt), srow
+
+
+def madam_step(packed: jax.Array, g: jax.Array, v: jax.Array,
+               count: jax.Array, fmt: LNSFormat, *, lr: float,
+               beta: float = 0.999, eps: float = 1e-30,
+               backend: Optional[str] = None,
+               interpret: Optional[bool] = None):
+    """Fused Algorithm-1 step on a packed >=2-D leaf. Returns
+    ``(new_packed, new_v)``.
+
+    One HBM pass over (packed, grad, v): the second-moment EMA, the
+    bias-corrected normalization, and the integer exponent step all happen
+    on the word in VMEM — the sign bit is carried through untouched
+    (multiplicative updates never flip sign). Leaves of any rank fold to
+    2-D (the update is elementwise).
+    """
+    shape = packed.shape
+    if packed.ndim < 2:
+        raise ValueError(f"madam_step needs a >=2-D leaf, got {shape}")
+    p2 = packed.reshape(-1, shape[-1])
+    g2 = g.reshape(p2.shape)
+    v2 = v.reshape(p2.shape)
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import madam_step_packed
+        np_, nv = madam_step_packed(p2, g2, v2, count, fmt, lr=lr, beta=beta,
+                                    eps=eps,
+                                    interpret=resolve_interpret(interpret))
+    else:
+        np_, nv = _madam_step_reference(p2, g2, v2, count, fmt, lr=lr,
+                                        beta=beta, eps=eps)
+    return np_.reshape(shape), nv.reshape(shape)
+
+
+def _madam_step_reference(packed, g, v, count, fmt: LNSFormat, *, lr, beta,
+                          eps):
+    """jnp oracle for the fused packed update — bit-exact to the kernel
+    because both call the one shared ``_step_math`` tile function."""
+    from repro.kernels.madam_update import _step_math  # cycle-free lazy
+    sign_bit = ((packed.astype(jnp.int32) >> (fmt.bits - 1)) & 1)
+    _, code = lns_unpack(packed, fmt)
+    bc = 1.0 - beta ** count.astype(jnp.float32)
+    new_code, nv = _step_math(code, 1 - 2 * sign_bit, g, v, bc, lr=lr,
+                              beta=beta, eps=eps, gamma=fmt.gamma,
+                              max_code=fmt.max_code)
+    word = (sign_bit << (fmt.bits - 1)) | new_code.astype(jnp.int32)
+    return word.astype(lns_word_dtype(fmt)), nv

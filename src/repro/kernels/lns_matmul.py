@@ -20,6 +20,7 @@ compile-time select-sums (γ ≤ 32 entries), not gathers — MXU/VPU friendly.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import conversion
 from repro.core.lns import LNSFormat
+from repro.kernels.dispatch import resolve_interpret
 
 __all__ = ["lns_matmul_pallas"]
 
@@ -101,7 +103,7 @@ def lns_matmul_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 16,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Packed-LNS matmul through the bit-exact integer datapath.
 
@@ -115,6 +117,7 @@ def lns_matmul_pallas(
     assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
         f"shapes ({M},{K})x({K},{N}) must tile by ({block_m},{block_n},{block_k})")
 
+    interpret = resolve_interpret(interpret)
     grid = (M // block_m, N // block_n, K // block_k)
     kernel = functools.partial(
         _kernel, bits=fmt.bits, gamma=fmt.gamma, frac_bits=frac_bits,

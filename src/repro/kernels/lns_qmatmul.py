@@ -14,34 +14,29 @@ output tile once — no per-element scale traffic.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.lns import LNSFormat
+from repro.core.lns import LNSFormat, lns_decode_packed
+from repro.kernels.dispatch import resolve_interpret
 
 __all__ = ["lns_qmatmul_pallas"]
 
 
-def _decode(w: jax.Array, bits: int, gamma: int, dtype) -> jax.Array:
-    """Unpack + decode a tile of packed LNS words to the compute dtype."""
-    wi = w.astype(jnp.int32)
-    max_code = (1 << (bits - 1)) - 1
-    sign = (1 - 2 * (wi >> (bits - 1))).astype(jnp.float32)
-    mag = jnp.exp2(-(wi & max_code).astype(jnp.float32) / gamma)
-    return (sign * mag).astype(dtype)
-
-
-def _kernel(pa_ref, pb_ref, out_ref, *, bits, gamma, compute_dtype):
+def _kernel(pa_ref, pb_ref, out_ref, *, fmt: LNSFormat, compute_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = _decode(pa_ref[...], bits, gamma, compute_dtype)
-    b = _decode(pb_ref[...], bits, gamma, compute_dtype)
+    # tile-local unpack+decode: the one shared definition in core.lns, so
+    # the kernel prologue cannot drift from the jnp oracle
+    a = lns_decode_packed(pa_ref[...], fmt, compute_dtype)
+    b = lns_decode_packed(pb_ref[...], fmt, compute_dtype)
     out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
 
@@ -59,13 +54,15 @@ def lns_qmatmul_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """``pa (M,K)`` x ``pb (K,N)`` packed LNS words -> f32 (M,N) (unscaled).
 
     Tile sizes default to the MXU-aligned 128; VMEM per step is
     ``bm·bk + bk·bn`` bytes of codes + the bf16 decodes + the f32 out tile.
+    ``interpret=None`` auto-detects the platform (compiled on real TPU).
     """
+    interpret = resolve_interpret(interpret)
     M, K = pa.shape
     K2, N = pb.shape
     assert K == K2, (pa.shape, pb.shape)
@@ -73,8 +70,7 @@ def lns_qmatmul_pallas(
         f"shapes ({M},{K})x({K},{N}) must tile by ({block_m},{block_n},{block_k})")
 
     grid = (M // block_m, N // block_n, K // block_k)
-    kernel = functools.partial(
-        _kernel, bits=fmt.bits, gamma=fmt.gamma, compute_dtype=compute_dtype)
+    kernel = functools.partial(_kernel, fmt=fmt, compute_dtype=compute_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -9,12 +9,14 @@ hardware's PPU also scales as a post-processing step, §5).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.lns import LNSFormat
+from repro.kernels.dispatch import resolve_interpret
 
 __all__ = ["lns_quantize_pallas"]
 
@@ -39,7 +41,7 @@ def lns_quantize_pallas(
     *,
     block_r: int = 256,
     block_c: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Encode ``x (R,C)`` with per-row ``scale (R,1)`` into packed uint8.
 
@@ -52,6 +54,7 @@ def lns_quantize_pallas(
     assert R % block_r == 0 and C % block_c == 0, (
         f"({R},{C}) must tile by ({block_r},{block_c})")
 
+    interpret = resolve_interpret(interpret)
     grid = (R // block_r, C // block_c)
     kernel = functools.partial(_kernel, bits=fmt.bits, gamma=fmt.gamma)
     return pl.pallas_call(

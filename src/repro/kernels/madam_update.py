@@ -12,26 +12,49 @@ arrives as a (1,1) operand rather than a static constant.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.lns import LNSFormat
+from repro.kernels.dispatch import resolve_interpret
 
-__all__ = ["madam_update_pallas"]
+__all__ = ["madam_update_pallas", "madam_update_packed_pallas"]
+
+
+def _step_math(code, sign, g, v, bc, *, lr, beta, eps, gamma, max_code):
+    """Shared Algorithm-1 tile math: returns (new_code f32-rounded, new_v)."""
+    g = g.astype(jnp.float32)
+    v = (1.0 - beta) * g * g + beta * v
+    gstar = g * jax.lax.rsqrt(v / bc + eps)
+    step = (lr * gamma) * gstar * sign.astype(jnp.float32)
+    target = code.astype(jnp.float32) + step
+    return jnp.clip(jnp.floor(target + 0.5), 0, max_code), v
 
 
 def _kernel(bc_ref, code_ref, sign_ref, g_ref, v_ref, code_out, v_out, *,
             lr: float, beta: float, eps: float, gamma: int, max_code: int):
-    bc = bc_ref[0, 0]
-    g = g_ref[...].astype(jnp.float32)
-    v = (1.0 - beta) * g * g + beta * v_ref[...]
-    gstar = g * jax.lax.rsqrt(v / bc + eps)
-    step = (lr * gamma) * gstar * sign_ref[...].astype(jnp.float32)
-    target = code_ref[...].astype(jnp.float32) + step
-    code = jnp.clip(jnp.floor(target + 0.5), 0, max_code)
+    code, v = _step_math(code_ref[...], sign_ref[...], g_ref[...], v_ref[...],
+                         bc_ref[0, 0], lr=lr, beta=beta, eps=eps, gamma=gamma,
+                         max_code=max_code)
     code_out[...] = code.astype(code_out.dtype)
+    v_out[...] = v
+
+
+def _packed_kernel(bc_ref, w_ref, g_ref, v_ref, w_out, v_out, *,
+                   lr: float, beta: float, eps: float, gamma: int, bits: int):
+    """Packed-word variant: unpack, step, repack — all in VMEM, so the
+    update reads/writes exactly one wire word per weight in HBM."""
+    max_code = (1 << (bits - 1)) - 1
+    w = w_ref[...].astype(jnp.int32)
+    sign_bit = (w >> (bits - 1)) & 1
+    code, v = _step_math(w & max_code, 1 - 2 * sign_bit, g_ref[...],
+                         v_ref[...], bc_ref[0, 0], lr=lr, beta=beta, eps=eps,
+                         gamma=gamma, max_code=max_code)
+    w_out[...] = ((sign_bit << (bits - 1)) | code.astype(jnp.int32)
+                  ).astype(w_out.dtype)
     v_out[...] = v
 
 
@@ -53,12 +76,14 @@ def madam_update_pallas(
     eps: float = 1e-30,
     block_r: int = 256,
     block_c: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Fused Madam step on 2-D LNS weights. Returns (new_code, new_v).
 
     ``count`` is the post-increment step (>= 1) used for bias correction.
+    ``interpret=None`` auto-detects the platform (compiled on real TPU).
     """
+    interpret = resolve_interpret(interpret)
     R, C = code.shape
     assert sign.shape == (R, C) and g.shape == (R, C) and v.shape == (R, C)
     assert R % block_r == 0 and C % block_c == 0, (
@@ -90,3 +115,63 @@ def madam_update_pallas(
         ],
         interpret=interpret,
     )(bc, code, sign, g, v)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "lr", "beta", "eps", "block_r", "block_c",
+                     "interpret"),
+)
+def madam_update_packed_pallas(
+    packed: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    count: jax.Array,
+    fmt: LNSFormat,
+    *,
+    lr: float,
+    beta: float = 0.999,
+    eps: float = 1e-30,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """Fused Madam step on *packed wire words* — the production update.
+
+    Reads (word, grad, v) and writes (word', v') in one HBM pass; the sign
+    bit never leaves the word (multiplicative updates preserve sign), so
+    the parameter traffic is 1 byte/element each way at B<=8. Returns
+    ``(new_packed, new_v)``.
+    """
+    interpret = resolve_interpret(interpret)
+    R, C = packed.shape
+    assert g.shape == (R, C) and v.shape == (R, C), (packed.shape, g.shape,
+                                                     v.shape)
+    assert R % block_r == 0 and C % block_c == 0, (
+        f"({R},{C}) must tile by ({block_r},{block_c})")
+
+    bc = (1.0 - beta ** count.astype(jnp.float32)).reshape(1, 1)
+    grid = (R // block_r, C // block_c)
+    tile = lambda i, j: (i, j)
+    kernel = functools.partial(
+        _packed_kernel, lr=lr, beta=beta, eps=eps, gamma=fmt.gamma,
+        bits=fmt.bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), tile),
+            pl.BlockSpec((block_r, block_c), tile),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), packed.dtype),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bc, packed, g, v)

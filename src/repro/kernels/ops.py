@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
+from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.lns_matmul import lns_matmul_pallas
 from repro.kernels.lns_qmatmul import lns_qmatmul_pallas
 from repro.kernels.lns_quantize import lns_quantize_pallas
-from repro.kernels.madam_update import madam_update_pallas
+from repro.kernels.madam_update import (madam_update_packed_pallas,
+                                        madam_update_pallas)
 
 __all__ = [
     "default_interpret",
@@ -24,12 +26,14 @@ __all__ = [
     "lns_matmul",
     "lns_qmatmul",
     "madam_step",
+    "madam_step_packed",
 ]
 
 
 def default_interpret() -> bool:
-    """Interpret-mode on anything that is not a real TPU."""
-    return jax.default_backend() != "tpu"
+    """Interpret-mode wherever Pallas cannot compile (i.e. not TPU/GPU);
+    env-overridable — see :func:`repro.kernels.dispatch.resolve_interpret`."""
+    return resolve_interpret(None)
 
 
 def _pad2(x: jax.Array, mult_r: int, mult_c: int, fill=0):
@@ -56,7 +60,7 @@ def quantize_pack(
     (max exponent), so padded GEMM tails contribute ~nothing and are sliced
     off anyway.
     """
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     R, C = x.shape
     scale = compute_scale(x, axis=scale_axis)  # (R,1) or scalar
     srow = jnp.broadcast_to(scale.reshape(-1, 1) if scale.ndim else scale, (R, 1)).astype(jnp.float32)
@@ -82,7 +86,7 @@ def lns_matmul(
     Quantizes both operands (per-tensor scale — one PE pass), runs the Fig.-6
     integer datapath, and rescales: ``out·s_a·s_b/2^frac_bits``. Returns f32.
     """
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     sa = compute_scale(a)
     sb = compute_scale(b)
     siga, ca = lns_encode(a, fmt, sa)
@@ -121,7 +125,7 @@ def lns_qmatmul(
     ``scale_a`` is per-row of A ((M,1) or scalar), ``scale_b`` per-column of
     B ((1,N) or scalar); both factor out of the GEMM and multiply the output.
     """
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     M, K = pa.shape
     _, N = pb.shape
     pad_word = fmt.max_code
@@ -150,7 +154,7 @@ def madam_step(
     interpret: Optional[bool] = None,
 ):
     """Fused Madam update for one 2-D LNS weight (pads to tile multiples)."""
-    interpret = default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     R, C = code.shape
     block = 256
     cp, _, _ = _pad2(code, block, block)
@@ -161,3 +165,32 @@ def madam_step(
                                  eps=eps, block_r=block, block_c=block,
                                  interpret=interpret)
     return nc[:R, :C], nv[:R, :C]
+
+
+def madam_step_packed(
+    packed: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    count: jax.Array,
+    fmt: LNSFormat,
+    *,
+    lr: float,
+    beta: float = 0.999,
+    eps: float = 1e-30,
+    interpret: Optional[bool] = None,
+):
+    """Fused Madam update on a 2-D *packed-word* weight (pads to tiles).
+
+    Pad words are 0 (sign +, code 0) with g=0, v=1: gstar is 0 there, so
+    the padded tail is a fixed point and is sliced off anyway.
+    """
+    interpret = resolve_interpret(interpret)
+    R, C = packed.shape
+    block = 256
+    pp, _, _ = _pad2(packed, block, block)
+    gp, _, _ = _pad2(g, block, block)
+    vp, _, _ = _pad2(v, block, block, fill=1.0)
+    npk, nv = madam_update_packed_pallas(pp, gp, vp, count, fmt, lr=lr,
+                                         beta=beta, eps=eps, block_r=block,
+                                         block_c=block, interpret=interpret)
+    return npk[:R, :C], nv[:R, :C]

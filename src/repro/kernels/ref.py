@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import conversion
-from repro.core.lns import LNSFormat, lns_unpack
+from repro.core.lns import LNSFormat, lns_decode_packed, lns_unpack
 
 __all__ = [
     "SAT24",
@@ -74,12 +74,12 @@ def lns_qmatmul_ref(
 
     Decodes packed words to ``compute_dtype`` (unscaled: magnitude
     2**(-code/γ)) and matmuls with f32 accumulation. Per-channel scales are
-    applied by the ops wrapper outside the kernel in both paths.
+    applied by the ops wrapper outside the kernel in both paths. The decode
+    is the same :func:`repro.core.lns.lns_decode_packed` the kernel
+    prologue runs — oracle and kernel share one definition.
     """
-    sa, ca = lns_unpack(pa, fmt)
-    sb, cb = lns_unpack(pb, fmt)
-    a = (sa.astype(jnp.float32) * jnp.exp2(-ca.astype(jnp.float32) / fmt.gamma)).astype(compute_dtype)
-    b = (sb.astype(jnp.float32) * jnp.exp2(-cb.astype(jnp.float32) / fmt.gamma)).astype(compute_dtype)
+    a = lns_decode_packed(pa, fmt, compute_dtype)
+    b = lns_decode_packed(pb, fmt, compute_dtype)
     return jnp.dot(a, b, preferred_element_type=jnp.float32)
 
 

@@ -26,7 +26,7 @@ from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum, ste_quantize
 from repro.distributed.sharding import current_mesh, shard
 from repro.models.common import ArchConfig, dense_init
-from repro.models.layers import apply_rope, dense_of, rope
+from repro.models.layers import apply_rope, decoded_of, dense_of, rope
 
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
            "init_kv_cache", "flash_attention", "model_axis_size"]
@@ -414,9 +414,8 @@ def mla_apply(
     q_rope = apply_rope(q_rope, rot)
     k_rope = apply_rope(k_rope[:, :, None, :], rot)[:, :, 0, :]  # (B,S,rpe)
 
-    kv_up = dense_of(p["kv_up"], cfg, qcfg)
-
     if cache is None:
+        kv_up = dense_of(p["kv_up"], cfg, qcfg)
         kv = qeinsum("bsr,re->bse", c_kv, kv_up, qcfg).reshape(B, S, h, nope + vd)
         k_nope, v = kv[..., :nope], kv[..., nope:]
         k = jnp.concatenate(
@@ -429,7 +428,9 @@ def mla_apply(
         out = flash_attention(qq, k, v, scale=1.0 / math.sqrt(nope + rpe))
         new_cache = None
     else:
-        out, new_cache = _mla_decode(q_nope, q_rope, c_kv, k_rope, kv_up,
+        # absorbed decode folds kv_up into q/ctx einsums: dense view needed
+        out, new_cache = _mla_decode(q_nope, q_rope, c_kv, k_rope,
+                                     decoded_of(p["kv_up"], cfg, qcfg),
                                      cache, cfg)
     out = out.reshape(B, S, h * vd)
     out = qeinsum("bse,ed->bsd", out, dense_of(p["wo"], cfg, qcfg), qcfg)

@@ -2,9 +2,13 @@
 
 All GEMMs route through :func:`repro.core.quantizer.qeinsum`, so one
 ``QuantConfig`` switches every architecture between fp, LNS, and FP8
-training. Weight leaves may be dense arrays *or* :class:`LNSWeight` codes
-(deployed mode — no fp master copy); ``dense_of`` decodes on use, which
-under scan-over-layers means one layer's bf16 weights are alive at a time.
+training. Weight leaves may be dense arrays *or* packed
+:class:`repro.core.lns.LNSWeight` words (deployed mode — no fp master
+copy): ``dense_of`` hands 2-D packed weights to ``qeinsum`` still packed
+(kernel-routed through ``repro.kernels.dispatch``), and decodes
+higher-rank leaves per use site — under scan-over-layers at most one
+layer's bf16 weights are alive at a time. ``decoded_of`` forces the dense
+view for non-GEMM uses (lookups, transposes, weight arithmetic).
 """
 from __future__ import annotations
 
@@ -13,14 +17,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.lns import lns_decode
+from repro.core.lns import is_lns_weight
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
 from repro.distributed.sharding import shard
 from repro.models.common import ArchConfig, dense_init, embed_init
-from repro.optim.madam import LNSWeight, is_lns_weight
 
-__all__ = ["dense_of", "rms_norm", "rope", "apply_rope", "mlp_init",
-           "mlp_apply", "embedding_init", "ACT_FNS"]
+__all__ = ["dense_of", "decoded_of", "rms_norm", "rope", "apply_rope",
+           "mlp_init", "mlp_apply", "embedding_init", "ACT_FNS"]
 
 ACT_FNS = {
     "silu": jax.nn.silu,
@@ -30,12 +33,24 @@ ACT_FNS = {
 
 
 def dense_of(w, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
-    """Materialize a (possibly LNS-stored) weight to the compute dtype."""
+    """Resolve a (possibly LNS-stored) weight for a GEMM.
+
+    Packed 2-D weights pass through *still packed* — ``qeinsum`` routes
+    them to the kernel dispatch layer (or decodes at the use site when the
+    GEMM cannot route). Higher-rank packed leaves (MoE expert stacks)
+    decode here, per leaf, inside whatever scan body is running — never a
+    whole-tree materialize.
+    """
+    if is_lns_weight(w) and w.ndim != 2:
+        return w.decode(cfg.compute_dtype)
+    return w
+
+
+def decoded_of(w, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
+    """Force a dense view — for non-GEMM uses (embedding lookups,
+    transposes, weight arithmetic like LoRA deltas)."""
     if is_lns_weight(w):
-        fmt = qcfg.update if (qcfg and qcfg.update is not None) else None
-        if fmt is None:
-            raise ValueError("LNSWeight leaves require QuantConfig.update")
-        return lns_decode(w.sign, w.code, fmt, w.scale, dtype=cfg.compute_dtype)
+        return w.decode(cfg.compute_dtype)
     return w
 
 

@@ -32,7 +32,8 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.common import ArchConfig, dense_init
-from repro.models.layers import dense_of, embedding_init, mlp_apply, mlp_init, rms_norm
+from repro.models.layers import (decoded_of, dense_of, embedding_init,
+                                 mlp_apply, mlp_init, rms_norm)
 
 __all__ = ["ForwardOut", "init_params", "forward", "lm_loss", "init_caches",
            "decode_step"]
@@ -116,7 +117,9 @@ def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
 
 
 def _embed(params, tokens, cfg: ArchConfig, qcfg) -> jax.Array:
-    tok_table = dense_of(params["embed"]["tok"], cfg, qcfg)
+    # lookup semantics: the table must be dense (decoded per call, not a
+    # persistent master copy)
+    tok_table = decoded_of(params["embed"]["tok"], cfg, qcfg)
     if cfg.num_codebooks:
         # musicgen: sum the per-codebook embeddings (tokens: (B,S,Books))
         offsets = jnp.arange(cfg.num_codebooks) * cfg.vocab_size
@@ -130,7 +133,7 @@ def _embed(params, tokens, cfg: ArchConfig, qcfg) -> jax.Array:
 
 def _logits(params, x, cfg: ArchConfig, qcfg) -> jax.Array:
     if cfg.tie_embeddings:
-        w = dense_of(params["embed"]["tok"], cfg, qcfg).T
+        w = decoded_of(params["embed"]["tok"], cfg, qcfg).T
     else:
         w = dense_of(params["embed"]["head"], cfg, qcfg)
     logits = qeinsum("bsd,dv->bsv", x, w, qcfg)
@@ -212,17 +215,17 @@ def _rwkv_block(bp, x, cfg, qcfg, cache):
 
 def _lora_qkv(attn_p, bp, h, cfg: ArchConfig, qcfg):
     """zamba2: add a per-occurrence LoRA delta to the fused QKV weights."""
-    # materialize the LoRA as weight deltas on wq/wk/wv slices
-    a = dense_of(bp["lora_a"], cfg, qcfg)
-    b = dense_of(bp["lora_b"], cfg, qcfg)
+    # weight arithmetic: the shared QKV must be dense to take the delta
+    a = decoded_of(bp["lora_a"], cfg, qcfg)
+    b = decoded_of(bp["lora_b"], cfg, qcfg)
     delta = jnp.einsum("dr,re->de", a, b)  # (d, (h+2kv)*hd)
     hd = cfg.head_dim
     q_dim = cfg.num_heads * hd
     kv_dim = cfg.num_kv_heads * hd
     attn_p = dict(attn_p)
-    attn_p["wq"] = dense_of(attn_p["wq"], cfg, qcfg) + delta[:, :q_dim]
-    attn_p["wk"] = dense_of(attn_p["wk"], cfg, qcfg) + delta[:, q_dim:q_dim + kv_dim]
-    attn_p["wv"] = dense_of(attn_p["wv"], cfg, qcfg) + delta[:, q_dim + kv_dim:]
+    attn_p["wq"] = decoded_of(attn_p["wq"], cfg, qcfg) + delta[:, :q_dim]
+    attn_p["wk"] = decoded_of(attn_p["wk"], cfg, qcfg) + delta[:, q_dim:q_dim + kv_dim]
+    attn_p["wv"] = decoded_of(attn_p["wv"], cfg, qcfg) + delta[:, q_dim + kv_dim:]
     return attn_p
 
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
 from repro.distributed.sharding import current_mesh, shard
 from repro.models.common import ArchConfig, dense_init
-from repro.models.layers import ACT_FNS, dense_of
+from repro.models.layers import ACT_FNS, decoded_of, dense_of
 
 __all__ = ["moe_init", "moe_apply"]
 
@@ -48,11 +48,11 @@ def moe_init(key, cfg: ArchConfig) -> Dict[str, Any]:
     return p
 
 
-def _router(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def _router(p, x, cfg: ArchConfig, qcfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Top-k routing: (gates (T,K), expert ids (T,K), aux loss scalar)."""
     T = x.shape[0] * x.shape[1]
     logits = jnp.einsum("bsd,de->bse", cot_boundary(x).astype(jnp.float32),
-                        p["router"])
+                        decoded_of(p["router"], cfg, qcfg))
     probs = jax.nn.softmax(logits, axis=-1).reshape(T, cfg.num_experts)
     top_p, top_i = jax.lax.top_k(probs, cfg.experts_per_token)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
@@ -85,7 +85,7 @@ def _expert_ffn(p, xe, cfg: ArchConfig, qcfg):
 
 def moe_apply(p, x, cfg: ArchConfig, qcfg: Optional[QuantConfig]):
     """Returns (out (B,S,D), aux_loss scalar)."""
-    top_p, top_i, aux = _router(p, x, cfg)
+    top_p, top_i, aux = _router(p, x, cfg, qcfg)
 
     if cfg.moe_dispatch == "dense_ref":
         out = _dense_ref(p, x, top_p, top_i, cfg, qcfg)

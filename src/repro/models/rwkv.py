@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
 from repro.distributed.sharding import shard
 from repro.models.common import ArchConfig, dense_init
-from repro.models.layers import dense_of
+from repro.models.layers import decoded_of, dense_of
 
 __all__ = ["rwkv_init", "rwkv_apply", "init_rwkv_state"]
 
@@ -94,7 +94,8 @@ def rwkv_apply(
 
     prev_tm = state["shift_tm"] if state is not None else None
     xs = _shifted(x, prev_tm)
-    mix = p["mix"][:, None, None, :]  # (5,1,1,D)
+    # elementwise mixing/LoRA/norm params: dense views (2-D packed leaves)
+    mix = decoded_of(p["mix"], cfg, qcfg)[:, None, None, :]  # (5,1,1,D)
     xr, xk, xv, xg, xw = [x + (xs - x) * mix[i] for i in range(5)]
 
     r = qeinsum("bsd,de->bse", xr, dense_of(p["wr"], cfg, qcfg), qcfg)
@@ -106,7 +107,8 @@ def rwkv_apply(
     # stays finite in fp32 (chunk 16 ⇒ |lcum| <= 56); faster decays are
     # numerically indistinguishable from 0 after two steps anyway.
     lora = jnp.tanh(cot_boundary(xw).astype(jnp.float32)
-                    @ p["w_lora_a"]) @ p["w_lora_b"]
+                    @ decoded_of(p["w_lora_a"], cfg, qcfg)
+                    ) @ decoded_of(p["w_lora_b"], cfg, qcfg)
     logw = -jnp.exp(jnp.clip(p["w0"] + lora, -8.0, 1.25))  # log decay < 0
 
     rh = cot_boundary(r).astype(jnp.float32).reshape(B, S, hn, hd)
@@ -133,7 +135,8 @@ def rwkv_apply(
     # per-head group norm, gate, output projection
     mean = jnp.mean(y, axis=-1, keepdims=True)
     var = jnp.var(y, axis=-1, keepdims=True)
-    y = (y - mean) * jax.lax.rsqrt(var + 64e-5) * (1.0 + p["ln_x"])
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5) * (
+        1.0 + decoded_of(p["ln_x"], cfg, qcfg))
     y = (y.reshape(B, S, D) * g.astype(jnp.float32)).astype(x.dtype)
     tm_out = qeinsum("bsd,de->bse", y, dense_of(p["wo"], cfg, qcfg), qcfg)
     tm_out = shard(tm_out, "batch", "seq", "embed")
@@ -141,7 +144,7 @@ def rwkv_apply(
     # channel mix
     prev_cm = state["shift_cm"] if state is not None else None
     xcs = _shifted(x_cm, prev_cm)
-    mixc = p["mix_cm"][:, None, None, :]
+    mixc = decoded_of(p["mix_cm"], cfg, qcfg)[:, None, None, :]
     xck = x_cm + (xcs - x_cm) * mixc[0]
     xcr = x_cm + (xcs - x_cm) * mixc[1]
     kk = qeinsum("bsd,df->bsf", xck, dense_of(p["ck"], cfg, qcfg), qcfg)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum
 from repro.distributed.sharding import shard
 from repro.models.common import ArchConfig, dense_init
-from repro.models.layers import dense_of, rms_norm
+from repro.models.layers import decoded_of, dense_of, rms_norm
 
 __all__ = ["mamba_init", "mamba_apply", "init_mamba_state"]
 
@@ -107,11 +107,16 @@ def mamba_apply(
     xin = shard(xin, "batch", "seq", "ssm_inner")
     bias_x, bias_b, bias_c = jnp.split(p["conv_b"], [d_in, d_in + N])
     pre = state if state is not None else {}
-    xs, new_cx = _causal_conv(cot_boundary(xin).astype(jnp.float32), p["conv_wx"], bias_x,
+    # depthwise conv weights are consumed as shifted slices, not GEMMs:
+    # dense view per layer (2-D packed leaves otherwise stay packed)
+    xs, new_cx = _causal_conv(cot_boundary(xin).astype(jnp.float32),
+                              decoded_of(p["conv_wx"], cfg, qcfg), bias_x,
                               pre.get("conv_x"))
-    Bv, new_cb = _causal_conv(cot_boundary(bin_).astype(jnp.float32), p["conv_wb"], bias_b,
+    Bv, new_cb = _causal_conv(cot_boundary(bin_).astype(jnp.float32),
+                              decoded_of(p["conv_wb"], cfg, qcfg), bias_b,
                               pre.get("conv_b"))
-    Cv, new_cc = _causal_conv(cot_boundary(cin).astype(jnp.float32), p["conv_wc"], bias_c,
+    Cv, new_cc = _causal_conv(cot_boundary(cin).astype(jnp.float32),
+                              decoded_of(p["conv_wc"], cfg, qcfg), bias_c,
                               pre.get("conv_c"))
     xs = xs.reshape(B, S, H, P)
     dt = jax.nn.softplus(cot_boundary(dt_raw).astype(jnp.float32)

@@ -1,8 +1,11 @@
 from repro.optim.baselines import adamw, quantized_update, sgd
-from repro.optim.madam import (LNSWeight, MadamConfig, MadamState, init_lns_params,
-                               madam_fp, madam_lns, materialize)
+from repro.optim.madam import (LNSWeight, MadamConfig, MadamState,
+                               attach_proxies, grad_proxies, init_lns_params,
+                               is_lns_weight, madam_fp, madam_lns,
+                               materialize)
 
 __all__ = [
-    "LNSWeight", "MadamConfig", "MadamState", "init_lns_params", "materialize",
+    "LNSWeight", "MadamConfig", "MadamState", "init_lns_params", "is_lns_weight",
+    "materialize", "grad_proxies", "attach_proxies",
     "madam_lns", "madam_fp", "sgd", "adamw", "quantized_update",
 ]

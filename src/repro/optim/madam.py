@@ -1,20 +1,32 @@
 """Madam on LNS — paper §4, Algorithm 1.
 
-The co-design half of LNS-Madam: weights live *permanently* as LNS integer
-exponent codes (no floating-point master copy), and the multiplicative
-update is an **integer add on the exponent**:
+The co-design half of LNS-Madam: weights live *permanently* as packed LNS
+wire words (no floating-point master copy — see :class:`repro.core.lns
+.LNSWeight` and DESIGN.md §3), and the multiplicative update is an
+**integer add on the exponent**:
 
     code ← clamp( round( code + η·γ_U · (g/√ĝ₂) ⊙ sign(W) ), 0, 2^(B_U−1)−1 )
 
 (our codes store the negated exponent, so a magnitude *decrease* is a code
-*increase*; the sign never flips — multiplicative updates preserve sign).
+*increase*; the sign bit never flips — multiplicative updates preserve
+sign).
 
-Because the weights are already LNS codes there is no integer→LNS conversion
-in the update path (paper §4, last paragraph), and the state is
-1 B sign + 2 B code per element instead of a 4 B fp32 master + 4 B Adam m.
+Because the weights are already packed LNS words there is no integer→LNS
+conversion in the update path (paper §4, last paragraph), and the state is
+one ``ceil(B_U/8)``-byte word per element instead of a 4 B fp32 master +
+4 B Adam m. Every >=2-D leaf takes the fused ``madam_update_packed``
+kernel step through :mod:`repro.kernels.dispatch` — one HBM pass over
+(word, grad, v) per leaf; the jnp reference backend is the bit-exact
+oracle (and the only path for the factored / stochastic variants).
 
 Leaves with fewer than 2 dims (norm gains, biases — the paper keeps BN at
 full precision) take a full-precision Madam step on a dense fp32 copy.
+
+Gradients: training never densifies the packed tree. The train step
+differentiates w.r.t. the zero ``delta`` carriers from
+:func:`grad_proxies`; dL/ddelta == dL/dW at W = decode(packed), produced
+either by the routed GEMM's custom VJP or by the decode-plus-delta
+fallback in the model layers.
 """
 from __future__ import annotations
 
@@ -24,23 +36,14 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.lns import LNSFormat, compute_scale, lns_decode, lns_encode
+from repro.core.lns import (LNSFormat, LNSWeight, is_lns_weight, lns_pack,
+                            lns_unpack, lns_weight_encode)
+from repro.kernels import dispatch
 from repro.numerics.rounding import round_nearest, stochastic_round
 
 __all__ = ["LNSWeight", "MadamConfig", "MadamState", "init_lns_params",
-           "materialize", "madam_lns", "madam_fp"]
-
-
-class LNSWeight(NamedTuple):
-    """A weight tensor stored natively in LNS (sign, exponent code, scale)."""
-
-    sign: jax.Array  # int8 in {-1, +1}
-    code: jax.Array  # fmt.code_dtype, [0, max_code]
-    scale: jax.Array  # f32, power-of-two, broadcastable per-channel scale
-
-
-def is_lns_weight(leaf) -> bool:
-    return isinstance(leaf, LNSWeight)
+           "is_lns_weight", "materialize", "grad_proxies", "attach_proxies",
+           "madam_lns", "madam_fp"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +54,10 @@ class MadamConfig:
     row/col factors for >=2-D leaves — a beyond-paper scaling feature that
     makes optimizer state O(R+C) instead of O(R·C) (used by the trillion-
     parameter MoE configs; DESIGN.md §8).
+
+    ``backend`` overrides the kernel backend for the fused update
+    (``"pallas"`` / ``"reference"``; None = platform default, see
+    :mod:`repro.kernels.dispatch`).
     """
 
     lr: float = 2.0 ** -7
@@ -61,6 +68,7 @@ class MadamConfig:
     fp_lr: Optional[float] = None     # lr for the fp (ndim<2) leaves
     fp_clip: float = 10.0             # Madam's p-clamp for fp leaves
     factored: bool = False            # Adafactor-style factored g2
+    backend: Optional[str] = None     # kernel backend override
 
     def __post_init__(self):
         if self.update_format.bits < 2:
@@ -73,8 +81,19 @@ class MadamState(NamedTuple):
 
 
 def _lns_leaf_filter(path, leaf) -> bool:
-    """Default policy: >=2-D tensors live in LNS; 1-D/scalars stay fp."""
-    return hasattr(leaf, "ndim") and leaf.ndim >= 2
+    """Default policy: >=2-D tensors live in LNS; 1-D/scalars stay fp.
+
+    Scanned ``period`` parameters carry a leading stack axis that does not
+    count toward the rank — a stacked norm gain (L, d) is still a 1-D gain
+    per layer and keeps the paper's full-precision carve-out (the seed
+    quantized these by accident and hid it behind the whole-tree
+    materialize; with packed leaves riding ``lax.scan`` the distinction is
+    load-bearing: every scan xs leaf must share the stack axis).
+    """
+    if not hasattr(leaf, "ndim"):
+        return False
+    stacked = any(getattr(k, "key", None) == "period" for k in path)
+    return leaf.ndim - (1 if stacked else 0) >= 2
 
 
 def init_lns_params(params, cfg: MadamConfig, scale_axis="auto",
@@ -83,7 +102,9 @@ def init_lns_params(params, cfg: MadamConfig, scale_axis="auto",
 
     ``scale_axis="auto"`` keeps per-channel resolution on every axis except
     the contraction (-2) axis — so stacked (scanned) layer weights and MoE
-    expert stacks each get their own output-channel scales.
+    expert stacks each get their own output-channel scales, and the scale
+    is constant along the contraction axis (the condition for factoring it
+    out of the routed GEMM's epilogue).
     """
     fmt = cfg.update_format
 
@@ -94,39 +115,64 @@ def init_lns_params(params, cfg: MadamConfig, scale_axis="auto",
             ax = tuple(i for i in range(w.ndim) if i != w.ndim - 2)
         else:
             ax = scale_axis
-        scale = compute_scale(w, axis=ax)
-        sign, code = lns_encode(w, fmt, scale)
-        return LNSWeight(sign=sign, code=code, scale=scale)
+        return lns_weight_encode(w, fmt, scale_axis=ax)
 
     return jax.tree_util.tree_map_with_path(enc, params)
 
 
-def materialize(params, cfg: MadamConfig, dtype=jnp.bfloat16):
-    """Decode LNSWeight leaves to dense arrays for the forward pass.
+def materialize(params, cfg: Optional[MadamConfig] = None,
+                dtype=jnp.bfloat16):
+    """Decode LNSWeight leaves to dense arrays (whole tree at once).
 
+    NOT a production path anymore: train/prefill/decode/serving consume the
+    packed leaves directly through ``kernels/dispatch`` (DESIGN.md §4).
+    Kept for the unfused baseline benchmark, offline export, and tests.
     fp leaves (norm gains etc.) pass through untouched — they stay fp32.
     """
-    fmt = cfg.update_format
+    del cfg  # each leaf carries its own fmt now
 
     def dec(leaf):
         if is_lns_weight(leaf):
-            return lns_decode(leaf.sign, leaf.code, fmt, leaf.scale, dtype=dtype)
+            return leaf.decode(dtype)
         return leaf
 
     return jax.tree.map(dec, params, is_leaf=is_lns_weight)
 
 
+def grad_proxies(params, dtype=jnp.bfloat16):
+    """Zero tangent carriers, one per LNSWeight leaf (fp leaves pass as-is).
+
+    Differentiating a loss w.r.t. this tree yields exactly dL/dW for the
+    packed leaves without a dense master copy existing as a primal: inside
+    jit the zeros fold to a broadcast constant, the routed GEMM's custom
+    VJP writes the weight cotangent into the carrier, and the decode
+    fallback adds the (zero) carrier after decode so autodiff routes the
+    cotangent the same way.
+    """
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype) if is_lns_weight(p) else p,
+        params, is_leaf=is_lns_weight)
+
+
+def attach_proxies(params, proxies):
+    """Merge proxy leaves back into the packed tree for a forward pass."""
+    return jax.tree.map(
+        lambda p, d: p.replace(delta=d) if is_lns_weight(p) else d,
+        params, proxies, is_leaf=is_lns_weight)
+
+
 def madam_lns(cfg: MadamConfig):
     """Build the (init, update) pair for LNS-native Madam.
 
-    ``update(grads, state, params, key=None)`` consumes gradients w.r.t. the
-    *dense* (materialized) weights and returns new (params, state). ``key``
-    is required when ``cfg.stochastic``.
+    ``update(grads, state, params, key=None)`` consumes gradients w.r.t.
+    the *decoded* weight values (the :func:`grad_proxies` cotangents) and
+    returns new (params, state). ``key`` is required when
+    ``cfg.stochastic``.
     """
     fmt = cfg.update_format
 
     def _shape_of(p):
-        return p.code.shape if is_lns_weight(p) else p.shape
+        return p.shape  # LNSWeight exposes packed.shape; arrays their own
 
     def _v_init(p):
         shape = _shape_of(p)
@@ -145,6 +191,19 @@ def madam_lns(cfg: MadamConfig):
             return {"r": r, "c": c}, vhat
         nv = (1.0 - cfg.beta) * g * g + cfg.beta * v
         return nv, nv
+
+    def _lns_leaf_reference(p: LNSWeight, g, v, k, bc):
+        """jnp fallback: factored v-hat and/or stochastic exponent round."""
+        leaf_fmt = p.fmt or fmt
+        v, vhat = _v_update(g, v)
+        gstar = g * jax.lax.rsqrt(vhat / bc + cfg.eps)
+        sign, code = lns_unpack(p.packed, leaf_fmt)
+        step = cfg.lr * leaf_fmt.gamma * gstar * sign.astype(jnp.float32)
+        target = code.astype(jnp.float32) + step
+        rounded = (stochastic_round(k, target) if cfg.stochastic
+                   else round_nearest(target))
+        code = jnp.clip(rounded, 0, leaf_fmt.max_code)
+        return p.replace(packed=lns_pack(sign, code, leaf_fmt)), v
 
     def init(params) -> MadamState:
         g2 = jax.tree.map(_v_init, params, is_leaf=is_lns_weight)
@@ -168,24 +227,27 @@ def madam_lns(cfg: MadamConfig):
         new_p, new_v = [], []
         for p, g, v, k in zip(leaves_p, leaves_g, leaves_v, keys):
             g = g.astype(jnp.float32)
-            v, vhat = _v_update(g, v)
-            gstar = g * jax.lax.rsqrt(vhat / bc + cfg.eps)
             if is_lns_weight(p):
-                # integer exponent step: Δcode = +η·γ_U·g*·sign(W)
-                step = cfg.lr * fmt.gamma * gstar * p.sign.astype(jnp.float32)
-                target = p.code.astype(jnp.float32) + step
-                rounded = (stochastic_round(k, target) if cfg.stochastic
-                           else round_nearest(target))
-                code = jnp.clip(rounded, 0, fmt.max_code).astype(fmt.code_dtype)
-                new_p.append(LNSWeight(sign=p.sign, code=code, scale=p.scale))
+                if cfg.stochastic or isinstance(v, dict) or p.ndim < 2:
+                    np_, nv = _lns_leaf_reference(p, g, v, k, bc)
+                else:
+                    # fused kernel: one HBM pass over (word, grad, v)
+                    pk, nv = dispatch.madam_step(
+                        p.packed, g, v, count, p.fmt or fmt, lr=cfg.lr,
+                        beta=cfg.beta, eps=cfg.eps, backend=cfg.backend)
+                    np_ = p.replace(packed=pk)
+                new_p.append(np_)
+                new_v.append(nv)
             else:
                 # fp Madam for norm gains / biases (paper's BN carve-out)
+                v, vhat = _v_update(g, v)
+                gstar = g * jax.lax.rsqrt(vhat / bc + cfg.eps)
                 lr = cfg.fp_lr if cfg.fp_lr is not None else cfg.lr
                 w = p * jnp.exp(-lr * jnp.sign(p) * gstar)
                 # allow zero-crossing for fp leaves via an additive floor
                 w = jnp.where(jnp.abs(p) < 1e-8, p - lr * gstar * 1e-8, w)
                 new_p.append(jnp.clip(w, -cfg.fp_clip, cfg.fp_clip))
-            new_v.append(v)
+                new_v.append(v)
 
         return (jax.tree_util.tree_unflatten(treedef, new_p),
                 MadamState(g2=jax.tree_util.tree_unflatten(treedef, new_v), count=count))

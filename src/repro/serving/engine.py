@@ -16,9 +16,11 @@ slot:
 - a finished sequence (EOS or ``max_new_tokens``) releases its slot and
   its cache rows are recycled in place by the next admission's scatter.
 
-Weights stay in the packed 8-bit LNS serving format (``MadamConfig
-.update_format``) and are materialized per layer inside the step, exactly
-as in training — the no-fp-master-copy property carries to serving.
+Weights stay in the packed 8-bit LNS wire format (``LNSWeight``) for the
+whole request lifetime: routed GEMMs decode tile-locally through
+``kernels/dispatch``, fallback leaves decode per layer inside the step —
+the engine never materializes the tree and loads training checkpoints
+with zero re-encoding (same bytes on disk, in the train state, and here).
 
 Padding-safety: right-padded prefill is exact for attention caches (the
 padded keys sit beyond the rewound cursor, masked and later overwritten)
@@ -39,7 +41,7 @@ import numpy as np
 from repro.core.quantizer import QuantConfig
 from repro.models.common import ArchConfig
 from repro.models.model import forward, init_caches
-from repro.optim.madam import MadamConfig, materialize
+from repro.optim.madam import MadamConfig
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
 from repro.serving.scheduler import Scheduler
@@ -115,9 +117,6 @@ class Engine:
         ``mini``, cursor rewound to the true prompt length ``n``, rows
         scattered into row ``slot`` of the engine cache ``big``. Returns
         (last-real-position logits, updated engine cache)."""
-        if self.mcfg is not None:
-            params = materialize(params, self.mcfg,
-                                 dtype=self.cfg.compute_dtype)
         out = forward(params, tokens, self.cfg, self.qcfg, caches=mini,
                       pos_offset=0)
         logits = jnp.take(out.logits, n - 1, axis=1)  # (1, V)

@@ -1,12 +1,18 @@
 """Step builders: LNS-native train step, prefill step, decode step.
 
-The train step is the paper's full pipeline (Fig. 3):
+The train step is the paper's full pipeline (Fig. 3), with the weights
+never leaving the packed wire format (DESIGN.md §3-4):
 
-  1. materialize: LNS codes -> dense bf16 (per layer inside the scan; no
-     fp32 master copy exists anywhere in the train state)
-  2. forward/backward with Q_W/Q_A/Q_E fake-quant STE (``qeinsum``)
+  1. params stay packed LNS words end to end — routed GEMMs decode
+     tile-locally inside the kernel, fallback leaves decode per leaf
+     inside the scan body; there is NO whole-tree materialize and no
+     fp master copy anywhere
+  2. forward/backward with Q_A/Q_E quantization; gradients are taken
+     w.r.t. zero delta carriers (``grad_proxies``) whose cotangent is
+     exactly dL/dW at W = decode(packed)
   3. Q_G on the final weight gradients
-  4. Madam update directly on the integer exponent codes
+  4. fused Madam update directly on the packed exponent words (one HBM
+     pass per leaf through ``kernels/dispatch``)
 
 Gradient microbatching (``accum_steps``) accumulates quantized microbatch
 gradients — XLA overlaps each microbatch's backward with the previous
@@ -14,7 +20,6 @@ all-reduce (latency-hiding scheduler flags set in ``launch.train``).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -24,8 +29,8 @@ from repro.core.quantizer import QuantConfig, quantize_grads
 from repro.models.common import ArchConfig
 from repro.models.model import decode_step as model_decode_step
 from repro.models.model import forward, lm_loss
-from repro.optim.madam import MadamConfig, MadamState, init_lns_params, \
-    madam_lns, materialize
+from repro.optim.madam import (MadamConfig, MadamState, attach_proxies,
+                               grad_proxies, init_lns_params, madam_lns)
 
 __all__ = ["TrainState", "init_train_state", "build_train_step",
            "build_prefill_step", "build_decode_step"]
@@ -59,19 +64,25 @@ def build_train_step(
     """Returns ``train_step(state, batch) -> (state, metrics)``."""
     _, opt_update = madam_lns(mcfg)
 
-    def loss_fn(dense, batch):
-        return lm_loss(dense, batch, cfg, qcfg, remat=remat,
-                       scan_unroll=scan_unroll)
-
-    def one_microbatch(dense, mb):
-        loss, grads = jax.value_and_grad(loss_fn)(dense, mb)
-        return loss, quantize_grads(grads, qcfg)
-
     def train_step(state: TrainState, batch: Dict[str, jax.Array]):
-        dense = materialize(state.params, mcfg, dtype=cfg.compute_dtype)
+        params = state.params  # packed LNSWeight / fp leaves, never dense
+
+        def loss_fn(diff, mb):
+            # diff: fp leaves + zero delta carriers for the packed leaves;
+            # dL/ddelta == dL/dW — no dense master copy is differentiated
+            return lm_loss(attach_proxies(params, diff), mb, cfg, qcfg,
+                           remat=remat, scan_unroll=scan_unroll)
+
+        def one_microbatch(diff, mb):
+            loss, grads = jax.value_and_grad(loss_fn)(diff, mb)
+            return loss, quantize_grads(grads, qcfg)
+
+        # zeros fold to a broadcast constant inside jit: the carriers cost
+        # no HBM; only the gradient outputs are dense
+        diff0 = grad_proxies(params, cfg.compute_dtype)
 
         if accum_steps == 1:
-            loss, grads = one_microbatch(dense, batch)
+            loss, grads = one_microbatch(diff0, batch)
         else:
             def split(x):
                 return x.reshape((accum_steps, x.shape[0] // accum_steps)
@@ -80,12 +91,12 @@ def build_train_step(
 
             def body(carry, mb):
                 loss_acc, g_acc = carry
-                loss, g = one_microbatch(dense, mb)
+                loss, g = one_microbatch(diff0, mb)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
                 return (loss_acc + loss, g_acc), None
 
             zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), dense)
+                lambda p: jnp.zeros(p.shape, jnp.float32), diff0)
             (loss, grads), _ = jax.lax.scan(
                 body, (jnp.zeros((), jnp.float32), zeros), mbs)
             loss = loss / accum_steps
@@ -107,14 +118,16 @@ def build_prefill_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
                        scan_unroll: int | bool = 1) -> Callable:
     """``prefill(params, batch) -> last-position logits``.
 
-    Runs the flash (training) attention path over the full prompt; the KV
+    Consumes packed ``LNSWeight`` leaves directly — routed GEMMs through
+    ``kernels/dispatch``, per-leaf decode otherwise; there is no up-front
+    materialize (``mcfg`` is accepted for signature compatibility). Runs
+    the flash (training) attention path over the full prompt; the KV
     write-back is modeled by the decode cache in serving proper — its bytes
     are negligible next to prefill compute (DESIGN.md §Deviations).
     """
+    del mcfg  # packed params are consumed as-is
 
     def prefill_step(params, batch):
-        if mcfg is not None:
-            params = materialize(params, mcfg, dtype=cfg.compute_dtype)
         out = forward(params, batch["tokens"], cfg, qcfg,
                       patches=batch.get("patches"), remat=False,
                       scan_unroll=scan_unroll)
@@ -126,11 +139,13 @@ def build_prefill_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
 def build_decode_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
                       mcfg: Optional[MadamConfig] = None, *,
                       scan_unroll: int | bool = 1) -> Callable:
-    """``decode(params, caches, batch, pos) -> (logits, caches)``."""
+    """``decode(params, caches, batch, pos) -> (logits, caches)``.
+
+    Packed params are consumed as-is (see :func:`build_prefill_step`).
+    """
+    del mcfg
 
     def serve_step(params, caches, batch, pos):
-        if mcfg is not None:
-            params = materialize(params, mcfg, dtype=cfg.compute_dtype)
         return model_decode_step(params, caches, batch["tokens"], cfg, qcfg,
                                  pos_offset=pos, scan_unroll=scan_unroll)
 

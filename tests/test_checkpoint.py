@@ -8,15 +8,17 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core.lns import LNSFormat
 from repro.optim.madam import LNSWeight
+
+_FMT = LNSFormat(bits=16, gamma=8 * (1 << 8))
 
 
 def _state(key, scale=1.0):
     return {
-        "w": LNSWeight(sign=jnp.ones((4, 4), jnp.int8),
-                       code=(jnp.arange(16).reshape(4, 4) * scale
-                             ).astype(jnp.int16),
-                       scale=jnp.ones((1, 4))),
+        "w": LNSWeight(packed=(jnp.arange(16).reshape(4, 4) * scale
+                               ).astype(jnp.uint16),
+                       scale=jnp.ones((1, 4)), fmt=_FMT),
         "b": jax.random.normal(key, (8,)),
         "step": jnp.asarray(7, jnp.int32),
     }

@@ -1,0 +1,328 @@
+"""Packed-LNS store + kernel dispatch layer (DESIGN.md §3-4).
+
+Covers the acceptance surface of the packed refactor:
+  * one wire format: training state is packed words (1 B/elem at B=8),
+    checkpoints round-trip it bit-exactly, serving loads them unchanged
+  * backend registry: reference == pallas (interpret) on GEMM, update,
+    train and decode; env-var override resolves
+  * integer re-grid (B_U -> B_W) matches decode->re-encode bit-exactly
+  * the kernel's tile decode is pinned to the jnp oracle across formats
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.lns import (LNSFormat, LNSWeight, compute_scale, lns_decode,
+                            lns_decode_packed, lns_encode, lns_pack,
+                            lns_requant_packed, lns_unpack)
+from repro.core.quantizer import QuantConfig, qeinsum
+from repro.kernels import dispatch
+from repro.optim.madam import MadamConfig, init_lns_params
+from repro.training import (build_decode_step, build_train_step,
+                            init_train_state)
+from repro.training.data import SyntheticLM
+
+FMT8 = LNSFormat(bits=8, gamma=8)
+SERVE_MCFG = MadamConfig(update_format=FMT8)
+
+
+def _packed(key, shape, fmt=FMT8):
+    x = jax.random.normal(key, shape)
+    s = compute_scale(x)
+    return lns_pack(*lns_encode(x, fmt, s), fmt), x, s
+
+
+# ---------------------------------------------------------------------------
+# shared decode / integer re-grid
+
+
+@pytest.mark.parametrize("bits,gamma", [(8, 8), (8, 2), (16, 2048), (10, 32)])
+def test_decode_packed_pinned_to_oracle(key, bits, gamma):
+    """The kernel-prologue decode == unpack+decode oracle for every fmt."""
+    fmt = LNSFormat(bits=bits, gamma=gamma)
+    codes = jax.random.randint(key, (64, 32), 0, fmt.max_code + 1, jnp.int32)
+    sign = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                          (64, 32)), 1, -1).astype(jnp.int8)
+    packed = lns_pack(sign, codes, fmt)
+    got = lns_decode_packed(packed, fmt, jnp.float32)
+    s, c = lns_unpack(packed, fmt)
+    want = lns_decode(s, c, fmt, jnp.ones(()), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requant_matches_float_reencode(key):
+    """16-bit words -> 8-bit grid: the shift-round == decode->encode off
+    the exact grid ties; at ties the integer path rounds deterministically
+    (away from zero) while the float path depends on f32 roundoff."""
+    src = LNSFormat(bits=16, gamma=8 * 256)
+    dst = FMT8
+    ratio = src.gamma // dst.gamma
+    codes = jax.random.randint(key, (4096,), 0, src.max_code + 1, jnp.int32)
+    sign = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                          codes.shape), 1, -1).astype(jnp.int8)
+    packed = lns_pack(sign, codes, src)
+    got = lns_requant_packed(packed, src, dst)
+    dense = lns_decode(sign, codes, src, jnp.ones(()), jnp.float32)
+    want = lns_pack(*lns_encode(dense, dst, jnp.ones(())), dst)
+    tie = np.asarray(codes % ratio) == ratio // 2
+    np.testing.assert_array_equal(np.asarray(got)[~tie],
+                                  np.asarray(want)[~tie])
+    # ties: deterministic round-away — code floor(c/r)+1, sign preserved
+    want_tie = np.minimum(np.asarray(codes)[tie] // ratio + 1, dst.max_code)
+    got_tie = np.asarray(got)[tie]
+    np.testing.assert_array_equal(got_tie & dst.max_code, want_tie)
+    np.testing.assert_array_equal(got_tie >> (dst.bits - 1),
+                                  np.asarray(packed)[tie] >> (src.bits - 1))
+
+
+def test_requant_identity_and_widen(key):
+    packed, _, _ = _packed(key, (32, 32))
+    same = lns_requant_packed(packed, FMT8, FMT8)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(packed))
+    wide = lns_requant_packed(packed, FMT8, LNSFormat(bits=16, gamma=8 * 256))
+    s8, c8 = lns_unpack(packed, FMT8)
+    s16, c16 = lns_unpack(wide, LNSFormat(bits=16, gamma=8 * 256))
+    np.testing.assert_array_equal(np.asarray(s16), np.asarray(s8))
+    np.testing.assert_array_equal(np.asarray(c16),
+                                  np.asarray(c8.astype(np.int32) * 256))
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+
+
+def test_backend_resolution_env_override(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_BACKEND, raising=False)
+    assert dispatch.resolve_backend(None) in dispatch.BACKENDS
+    monkeypatch.setenv(dispatch.ENV_BACKEND, "pallas")
+    assert dispatch.resolve_backend(None) == "pallas"
+    monkeypatch.setenv(dispatch.ENV_BACKEND, "reference")
+    assert dispatch.resolve_backend(None) == "reference"
+    assert dispatch.resolve_backend("pallas") == "pallas"  # arg wins
+    monkeypatch.setenv(dispatch.ENV_BACKEND, "nope")
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend(None)
+
+
+def test_interpret_resolution_env_override(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_INTERPRET, raising=False)
+    # compiled wherever pallas is the platform default (TPU/GPU)
+    assert dispatch.resolve_interpret(None) == (
+        jax.default_backend() not in ("tpu", "gpu"))
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "0")
+    assert dispatch.resolve_interpret(None) is False
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "true")
+    assert dispatch.resolve_interpret(None) is True
+    assert dispatch.resolve_interpret(False) is False  # arg wins
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "sometimes")
+    with pytest.raises(ValueError):
+        dispatch.resolve_interpret(None)
+
+
+@pytest.mark.interpret
+def test_qmatmul_backends_agree(key):
+    pa, _, sa = _packed(jax.random.fold_in(key, 1), (64, 48))
+    pb, _, sb = _packed(jax.random.fold_in(key, 2), (48, 40))
+    ref = dispatch.qmatmul(pa, pb, FMT8, sa, sb, backend="reference")
+    pal = dispatch.qmatmul(pa, pb, FMT8, sa, sb, backend="pallas",
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.interpret
+def test_encode_pack_backends_agree(key):
+    x = jax.random.normal(key, (100, 60))
+    pr, sr = dispatch.encode_pack(x, FMT8, scale_axis=0, backend="reference")
+    pp, sp = dispatch.encode_pack(x, FMT8, scale_axis=0, backend="pallas",
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(pp))
+    np.testing.assert_array_equal(np.asarray(sr), np.asarray(sp))
+
+
+@pytest.mark.interpret
+def test_madam_step_backends_bit_exact(key):
+    """The fused packed update: pallas (interpret) == jnp reference, word
+    for word, including 3-D leaves folded to 2-D."""
+    fmt = LNSFormat(bits=16, gamma=8 * 256)
+    codes = jax.random.randint(key, (3, 40, 20), 0, fmt.max_code + 1,
+                               jnp.int32)
+    sign = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                          codes.shape), 1, -1).astype(jnp.int8)
+    packed = lns_pack(sign, codes, fmt)
+    g = jax.random.normal(jax.random.fold_in(key, 2), codes.shape)
+    v = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), codes.shape))
+    a = dispatch.madam_step(packed, g, v, jnp.asarray(4), fmt, lr=2.0 ** -7,
+                            backend="reference")
+    b = dispatch.madam_step(packed, g, v, jnp.asarray(4), fmt, lr=2.0 ** -7,
+                            backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# routed qeinsum
+
+
+def test_qeinsum_routes_packed_weight(key):
+    """Packed 2-D weights route (no dense fake-quant) and stay close to the
+    dense fake-quant answer."""
+    x = jax.random.normal(key, (4, 6, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    lw = init_lns_params({"w": w}, SERVE_MCFG)["w"]
+    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
+                               backend="reference")
+    y_packed = qeinsum("bsd,df->bsf", x, lw, qcfg)
+    y_dense = qeinsum("bsd,df->bsf", x, w, qcfg)
+    assert y_packed.shape == (4, 6, 16) and y_packed.dtype == x.dtype
+    rel = float(jnp.max(jnp.abs(y_packed - y_dense))
+                / jnp.max(jnp.abs(y_dense)))
+    assert rel < 0.15
+
+
+def test_routed_gradients_match_ste(key):
+    """dL/dx and dL/dW of the routed path == the fake-quant STE path when
+    weights are already on the forward grid (same scale)."""
+    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
+                               backend="reference")
+    x = jax.random.normal(key, (8, 32)).astype(jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    lw = init_lns_params({"w": w}, SERVE_MCFG)["w"]
+    wq = lw.decode(jnp.float32)  # exactly on the stored grid
+
+    def loss_packed(x, delta):
+        out = qeinsum("bd,df->bf", x, lw.replace(delta=delta), qcfg)
+        return jnp.sum(out * out)
+
+    def loss_dense(x, w):
+        return jnp.sum(jnp.square(qeinsum("bd,df->bf", x, w, qcfg)))
+
+    gx_p, gd = jax.grad(loss_packed, (0, 1))(x, jnp.zeros_like(wq))
+    gx_d, gw = jax.grad(loss_dense, (0, 1))(x, wq)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_d),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(gw),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_qeinsum_fallback_decodes_nonroutable(key):
+    """3-D packed stacks and non-LNS configs fall back to per-leaf decode."""
+    x = jax.random.normal(key, (2, 4, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 8, 5))
+    lw = init_lns_params({"w": w}, SERVE_MCFG)["w"]
+    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8)
+    y = qeinsum("bsd,edf->bsef", x, lw, qcfg)  # not a routable plan
+    assert y.shape == (2, 4, 3, 5)
+    y_fp = qeinsum("bsd,edf->bsef", x, lw, None)  # fp config: decode path
+    assert y_fp.shape == (2, 4, 3, 5)
+
+
+# ---------------------------------------------------------------------------
+# the 1-byte store + checkpoint/serving interop
+
+
+def test_train_state_is_one_byte_per_element():
+    """>=2-D training parameter state at B=8 is exactly 1 byte/element."""
+    cfg = get_smoke_config("smollm-135m")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, SERVE_MCFG)
+
+    def visit(leaf):
+        if isinstance(leaf, LNSWeight):
+            assert leaf.packed.dtype == jnp.uint8  # 1 B/elem wire words
+            assert leaf.packed.dtype.itemsize == 1
+            assert leaf.delta is None
+            visit.count += 1
+    visit.count = 0
+    jax.tree.map(visit, state.params,
+                 is_leaf=lambda l: isinstance(l, LNSWeight))
+    assert visit.count >= 5  # embed + attn + mlp stacks all packed
+
+
+def test_checkpoint_roundtrip_and_serving_load(tmp_path):
+    """A training checkpoint is loaded by the serving engine with zero
+    re-encoding: identical packed bytes, working decode."""
+    from repro.checkpoint import CheckpointManager
+    from repro.serving import Engine
+    from repro.serving.request import Request
+
+    cfg = get_smoke_config("smollm-135m")
+    qcfg = QuantConfig.lns_madam()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, SERVE_MCFG)
+    step = jax.jit(build_train_step(cfg, qcfg, SERVE_MCFG))
+    data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
+    b = jax.tree.map(jnp.asarray, data.batch_at(0))
+    state, _ = step(state, b)
+
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, state, async_=False)
+    _, restored = m.restore_latest(state)
+    for a, c in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        assert a.dtype == c.dtype  # uint8 words restored as uint8 words
+
+    engine = Engine(cfg, qcfg, SERVE_MCFG, restored.params, num_slots=2,
+                    max_len=32)
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    while engine.step():
+        pass
+    assert len(engine.finished) == 1
+    assert len(engine.finished[0].generated) >= 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end backend equivalence (acceptance: train + decode)
+
+
+@pytest.mark.interpret
+def test_train_backends_equivalent():
+    """3 train steps on smollm: pallas (interpret) losses == reference
+    losses to tolerance; parameter words near-identical."""
+    cfg = get_smoke_config("smollm-135m")
+    losses, params = {}, {}
+    for backend in ("reference", "pallas"):
+        mcfg = dataclasses.replace(SERVE_MCFG, backend=backend)
+        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
+                                   backend=backend)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
+        step = jax.jit(build_train_step(cfg, qcfg, mcfg))
+        data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
+        ls = []
+        for i, b in zip(range(3), data):
+            state, m = step(state, jax.tree.map(jnp.asarray, b))
+            ls.append(float(m["loss"]))
+        losses[backend] = ls
+        params[backend] = state.params
+    np.testing.assert_allclose(losses["reference"], losses["pallas"],
+                               rtol=1e-4)
+    agree = [
+        float(np.mean(np.asarray(a) == np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(params["reference"]),
+                        jax.tree.leaves(params["pallas"]))
+        if np.asarray(a).dtype == np.uint8]
+    assert min(agree) > 0.99  # bf16 GEMM tile-order noise only
+
+
+@pytest.mark.interpret
+def test_decode_backends_equivalent():
+    cfg = get_smoke_config("smollm-135m")
+    from repro.models import init_caches
+    state = init_train_state(jax.random.PRNGKey(0), cfg, SERVE_MCFG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 1), 0,
+                              cfg.vocab_size)
+    outs = {}
+    for backend in ("reference", "pallas"):
+        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
+                                   backend=backend)
+        mcfg = dataclasses.replace(SERVE_MCFG, backend=backend)
+        decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
+        caches = init_caches(2, 16, cfg)
+        logits, _ = decode(state.params, caches, {"tokens": toks},
+                           jnp.asarray(0, jnp.int32))
+        outs[backend] = np.asarray(logits)
+    np.testing.assert_allclose(outs["reference"], outs["pallas"],
+                               rtol=1e-3, atol=1e-3)

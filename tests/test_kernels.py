@@ -153,6 +153,7 @@ def test_madam_kernel_exact(key, r, c):
 
 def test_madam_kernel_matches_optimizer(key):
     """The fused kernel reproduces optim.madam's leaf update bit-for-bit."""
+    from repro.core.lns import lns_pack
     from repro.optim.madam import LNSWeight, MadamConfig, madam_lns
     mcfg = MadamConfig()
     ufmt = mcfg.update_format
@@ -161,7 +162,8 @@ def test_madam_kernel_matches_optimizer(key):
     sign = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
                                           (64, 32)), 1, -1).astype(jnp.int8)
     scale = jnp.ones((1, 32))
-    params = {"w": LNSWeight(sign=sign, code=code, scale=scale)}
+    params = {"w": LNSWeight(packed=lns_pack(sign, code, ufmt), scale=scale,
+                             fmt=ufmt)}
     init, update = madam_lns(mcfg)
     st0 = init(params)
     g = {"w": jax.random.normal(jax.random.fold_in(key, 2), (64, 32))}
@@ -171,5 +173,27 @@ def test_madam_kernel_matches_optimizer(key):
                           jnp.asarray(1), ufmt, lr=mcfg.lr, beta=mcfg.beta,
                           eps=mcfg.eps)
     np.testing.assert_array_equal(np.asarray(new_p["w"].code), np.asarray(knc))
+    np.testing.assert_array_equal(np.asarray(new_p["w"].sign), np.asarray(sign))
     np.testing.assert_allclose(np.asarray(new_st.g2["w"]), np.asarray(knv),
                                rtol=1e-6)
+
+
+def test_madam_packed_kernel_matches_unpacked(key):
+    """Packed-word kernel == unpacked (code, sign) kernel, word for word."""
+    from repro.core.lns import lns_pack, lns_unpack
+    ufmt = LNSFormat(bits=16, gamma=8 * 256)
+    code = jax.random.randint(key, (100, 70), 0, ufmt.max_code,
+                              jnp.int32).astype(jnp.int16)
+    sign = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                          (100, 70)), 1, -1).astype(jnp.int8)
+    g = jax.random.normal(jax.random.fold_in(key, 2), (100, 70))
+    v = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (100, 70)))
+    packed = lns_pack(sign, code, ufmt)
+    from repro.kernels import madam_step_packed
+    npk, nv = madam_step_packed(packed, g, v, jnp.asarray(5), ufmt,
+                                lr=2.0 ** -7)
+    rc, rv = madam_step(code, sign, g, v, jnp.asarray(5), ufmt, lr=2.0 ** -7)
+    s2, c2 = lns_unpack(npk, ufmt)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(sign))
+    np.testing.assert_allclose(np.asarray(nv), np.asarray(rv), rtol=1e-6)

@@ -44,7 +44,7 @@ def test_capacity_drops_tokens(key):
 def test_router_gates_normalized(key):
     p = moe_init(key, CFG)
     x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 32))
-    top_p, top_i, aux = _router(p, x, CFG)
+    top_p, top_i, aux = _router(p, x, CFG, None)
     np.testing.assert_allclose(np.asarray(jnp.sum(top_p, -1)), 1.0, rtol=1e-5)
     assert top_i.shape == (16, 2)
     assert bool(jnp.all((top_i >= 0) & (top_i < CFG.num_experts)))
@@ -57,7 +57,7 @@ def test_aux_loss_prefers_balance(key):
     # force uniform router
     p = dict(p, router=jnp.zeros_like(p["router"]))
     x = jax.random.normal(jax.random.fold_in(key, 1), (4, 32, 32))
-    _, _, aux = _router(p, x, CFG)
+    _, _, aux = _router(p, x, CFG, None)
     assert float(aux) == pytest.approx(1.0, rel=0.05)
 
 

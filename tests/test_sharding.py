@@ -71,12 +71,12 @@ def test_lns_weight_axes_and_shardings(key):
     axes = params_logical_axes(params)
     lw = axes["period"]["pos0"]["mlp"]["up"]
     assert isinstance(lw, LNSWeight)
-    assert lw.code == ("stack", "embed", "mlp")
+    assert lw.packed == ("stack", "embed", "mlp")
     # scale has a size-1 axis -> unsharded there
     assert lw.scale == ("stack", None, "mlp")
     sh = tree_shardings(axes, _mesh())
     leaf = sh["period"]["pos0"]["mlp"]["up"]
-    assert leaf.code.spec == P(None, None, "model")
+    assert leaf.packed.spec == P(None, None, "model")
 
 
 def test_opt_axes_factored(key):

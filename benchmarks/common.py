@@ -1,6 +1,8 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -13,7 +15,10 @@ from repro.optim.madam import MadamConfig
 from repro.training import build_train_step, init_train_state
 from repro.training.data import SyntheticLM
 
-__all__ = ["timed", "train_tiny_lm", "csv_row"]
+__all__ = ["timed", "train_tiny_lm", "csv_row", "write_bench_json"]
+
+# repo root — benchmark JSON artifacts land here so CI can glob them
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -74,3 +79,14 @@ def train_tiny_lm(qcfg: QuantConfig, *, optimizer="madam", steps=60,
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def write_bench_json(suite: str, payload: Dict) -> str:
+    """Write ``BENCH_<suite>.json`` at the repo root (machine-readable
+    perf trajectory — CI uploads these from the smoke job). Returns the
+    path. Values should be plain floats/ints/strings."""
+    path = os.path.join(_ROOT, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -1,6 +1,7 @@
-"""Serving throughput: continuous batching vs lock-step batching.
+"""Serving throughput: continuous batching vs lock-step batching, dense vs
+block-paged KV, and prefix-cache reuse.
 
-Replays one mixed-length request trace through two harnesses over the same
+Replays one mixed-length request trace through the harnesses over the same
 packed-LNS weights and decode step:
 
   lockstep — requests are processed in fixed groups of ``slots``; every
@@ -8,9 +9,18 @@ packed-LNS weights and decode step:
     ``launch/serve.py`` shape: finished sequences squat on their slot).
   engine   — ``repro.serving.Engine``: a finished sequence frees its slot
     and cache rows immediately and the next request is admitted mid-decode.
+  paged    — the engine over a block-paged KV pool holding the *same* KV
+    memory as the dense engine but serving **2x the slots**: a request
+    only pins ``ceil((prompt+budget)/page_size)`` pages, so concurrency is
+    bounded by actual usage, not worst-case context. The reported peak
+    concurrency is measured from the admit/finish intervals.
+  prefix   — a shared-prefix trace through the paged engine with and
+    without prefix caching: hits map resident pages into the block table
+    and prefill only the suffix (fewer prefill tokens, same output).
 
-Both paths are run once to warm the jit caches and timed on a second
-replay. ``--full`` adds an offered-load sweep (arrival rate -> goodput).
+All timed paths are run once to warm the jit caches and timed on a second
+replay; results also land in ``BENCH_serving.json`` at the repo root.
+``--full`` adds an offered-load sweep (arrival rate -> goodput).
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, write_bench_json
 from repro.configs import get_smoke_config
 from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig
@@ -29,6 +39,33 @@ from repro.models.model import init_caches
 from repro.optim.madam import MadamConfig
 from repro.serving import Engine, Request, max_trace_len, synthetic_trace
 from repro.training import build_decode_step, init_train_state
+
+
+def _peak_concurrency(metrics) -> int:
+    """Max simultaneously-admitted requests over the run (a finish at time
+    t frees the slot before an admit at the same t takes it)."""
+    events = []
+    for m in metrics:
+        events += [(m.t_admit, 1), (m.t_finish, -1)]
+    peak = cur = 0
+    for _, d in sorted(events):
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def shared_prefix_trace(cfg, *, requests: int, prefix_len: int,
+                        suffix_len: int, gen_len: int,
+                        seed: int = 0) -> List[Request]:
+    """Chat-style trace: one common system-prompt prefix, distinct tails."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (prefix_len,)).tolist()
+    out = []
+    for i in range(requests):
+        suffix = rng.integers(0, cfg.vocab_size, (suffix_len,)).tolist()
+        out.append(Request(rid=i, prompt=prefix + suffix,
+                           max_new_tokens=gen_len))
+    return out
 
 
 def run_lockstep(cfg, qcfg, mcfg, params, trace: List[Request], *,
@@ -92,10 +129,71 @@ def run(requests: int = 24, slots: int = 4, prompt_len: int = 16,
     engine.reset()
     agg = engine.run(trace)
     tps_eng = agg["tokens_per_s"]
+    dense_peak = _peak_concurrency(engine.completed)
     rows.append(csv_row(
         "serving_engine", agg["wall_s"] * 1e6,
         f"tok_s={tps_eng:.1f} speedup_vs_lockstep={tps_eng / tps_lock:.2f} "
         f"ttft_p95_s={agg['ttft_p95_s']:.3f}"))
+
+    # ---- paged pool: same KV memory as the dense engine, 2x the slots
+    page = 16
+    num_pages = slots * max_len // page  # dense-equivalent KV positions
+    paged = Engine(cfg, qcfg, mcfg, params, num_slots=2 * slots,
+                   max_len=max_len, page_size=page, num_pages=num_pages,
+                   prefix_cache=False)
+    paged.run(trace)
+    paged.reset()
+    agg_p = paged.run(trace)
+    paged_peak = _peak_concurrency(paged.completed)
+    rows.append(csv_row(
+        "serving_paged", agg_p["wall_s"] * 1e6,
+        f"tok_s={agg_p['tokens_per_s']:.1f} slots={2 * slots} "
+        f"kv_pages={num_pages} peak_concurrency={paged_peak} "
+        f"(dense peak {dense_peak} at equal KV memory)"))
+
+    # ---- prefix caching: shared system prompt, suffix-only prefill
+    fine = (8, 16, 32, 64, 128, 256)
+    ptrace = shared_prefix_trace(cfg, requests=max(8, requests // 3),
+                                 prefix_len=3 * page, suffix_len=6,
+                                 gen_len=gen_len // 2)
+    stats = {}
+    for label, pc in (("off", False), ("on", True)):
+        e = Engine(cfg, qcfg, mcfg, params, num_slots=slots,
+                   max_len=max_len, page_size=page, buckets=fine,
+                   prefix_cache=pc)
+        e.run(ptrace)
+        e.reset()
+        agg_x = e.run(ptrace)
+        stats[label] = (e.prefill_tokens, e.prefix_hits,
+                        e.prefix_reused_tokens, agg_x)
+    (pt_off, _, _, agg_off) = stats["off"]
+    (pt_on, hits, reused, agg_on) = stats["on"]
+    rows.append(csv_row(
+        "serving_prefix_cache", agg_on["wall_s"] * 1e6,
+        f"prefill_tokens={pt_on} (vs {pt_off} uncached) "
+        f"hits={hits} reused_tokens={reused} "
+        f"tok_s={agg_on['tokens_per_s']:.1f}"))
+
+    write_bench_json("serving", {
+        "lockstep_tok_s": tps_lock,
+        "engine_tok_s": tps_eng,
+        "engine_speedup_vs_lockstep": tps_eng / tps_lock,
+        "engine_ttft_p95_s": agg["ttft_p95_s"],
+        "dense_slots": slots,
+        "dense_peak_concurrency": dense_peak,
+        "paged_tok_s": agg_p["tokens_per_s"],
+        "paged_slots": 2 * slots,
+        "paged_kv_pages": num_pages,
+        "paged_page_size": page,
+        "paged_peak_concurrency": paged_peak,
+        "prefix_prefill_tokens": pt_on,
+        "prefix_prefill_tokens_uncached": pt_off,
+        "prefix_hits": hits,
+        "prefix_reused_tokens": reused,
+        "prefix_tok_s": agg_on["tokens_per_s"],
+        "noprefix_tok_s": agg_off["tokens_per_s"],
+        "requests": requests,
+    })
 
     if sweep:  # offered load -> goodput curve
         for rate in (2.0, 4.0, 8.0, 16.0):

@@ -39,6 +39,7 @@ __all__ = [
     "qmatmul",
     "encode_pack",
     "madam_step",
+    "paged_attend",
 ]
 
 BACKENDS = ("pallas", "reference")
@@ -163,6 +164,69 @@ def madam_step(packed: jax.Array, g: jax.Array, v: jax.Array,
         np_, nv = _madam_step_reference(p2, g2, v2, count, fmt, lr=lr,
                                         beta=beta, eps=eps)
     return np_.reshape(shape), nv.reshape(shape)
+
+
+def paged_attend(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                 k_scale: Optional[jax.Array], v_scale: Optional[jax.Array],
+                 block_table: jax.Array, lengths: jax.Array, *,
+                 fmt: Optional[LNSFormat] = None,
+                 softcap: Optional[float] = None,
+                 sm_scale: float,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Attend ``q`` over a block-paged KV pool through a block table.
+
+    ``q`` is (B, S, H, hd); ``kp``/``vp`` are (P, page, KV, hd) pools —
+    packed LNS words when ``fmt`` is given (with (P, page, KV, 1) scales),
+    the compute dtype otherwise. ``block_table`` (B, max_pages) maps each
+    slot's local page j to a pool page; ``lengths`` (B,) counts the valid
+    positions per slot *including* the S just written, so query s sits at
+    absolute position ``lengths - S + s``. Returns f32 (B, S, H, hd).
+
+    The Pallas kernel serves the decode shape (S == 1) and gathers pages
+    tile-locally via scalar-prefetched block tables with in-kernel LNS
+    decode; S > 1 (the engine's batch-1 suffix prefill) and the reference
+    backend share the jnp gather implementation below.
+    """
+    if resolve_backend(backend) == "pallas" and q.shape[1] == 1:
+        from repro.kernels.ops import paged_attend_decode
+        return paged_attend_decode(q, kp, vp, k_scale, v_scale, block_table,
+                                   lengths, fmt=fmt, softcap=softcap,
+                                   sm_scale=sm_scale,
+                                   interpret=resolve_interpret(interpret))
+    return _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
+                                   lengths, fmt=fmt, softcap=softcap,
+                                   sm_scale=sm_scale)
+
+
+def _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
+                            lengths, *, fmt, softcap, sm_scale):
+    """jnp oracle: gather the slot's pages, decode, masked softmax."""
+    B, S, h, hd = q.shape
+    page, kv = kp.shape[1], kp.shape[2]
+    mp = block_table.shape[1]
+    cap = mp * page
+
+    def view(pool, scale):
+        x = pool[block_table].reshape(B, cap, kv, hd)
+        if fmt is None:
+            return x.astype(jnp.float32)
+        s = scale[block_table].reshape(B, cap, kv, 1)
+        return lns_decode_packed(x, fmt, jnp.float32) * s.astype(jnp.float32)
+
+    rep = h // kv
+    kf = jnp.repeat(view(kp, k_scale), rep, axis=2)
+    vf = jnp.repeat(view(vp, v_scale), rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf)
+    logits = logits * sm_scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    abs_pos = jnp.arange(cap)
+    q_pos = (lengths - S)[:, None] + jnp.arange(S)  # (B, S)
+    mask = abs_pos[None, None, :] <= q_pos[:, :, None]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    p_attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p_attn, vf)
 
 
 def _madam_step_reference(packed, g, v, count, fmt: LNSFormat, *, lr, beta,

@@ -19,6 +19,7 @@ from repro.kernels.lns_qmatmul import lns_qmatmul_pallas
 from repro.kernels.lns_quantize import lns_quantize_pallas
 from repro.kernels.madam_update import (madam_update_packed_pallas,
                                         madam_update_pallas)
+from repro.kernels.paged_attend import paged_attend_pallas
 
 __all__ = [
     "default_interpret",
@@ -27,6 +28,7 @@ __all__ = [
     "lns_qmatmul",
     "madam_step",
     "madam_step_packed",
+    "paged_attend_decode",
 ]
 
 
@@ -138,6 +140,32 @@ def lns_qmatmul(
     if scale_b is not None:
         out = out * scale_b
     return out
+
+
+def paged_attend_decode(
+    q: jax.Array,
+    kp: jax.Array,
+    vp: jax.Array,
+    k_scale: Optional[jax.Array],
+    v_scale: Optional[jax.Array],
+    block_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    fmt: Optional[LNSFormat] = None,
+    softcap: Optional[float] = None,
+    sm_scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Decode-shape (S == 1) paged attention through the Pallas kernel.
+
+    Thin pass-through today — serving head/page shapes are small and the
+    CPU CI leg runs in interpret mode; real-TPU tile padding would live
+    here (pad heads/head_dim to tile multiples, slice the output).
+    """
+    return paged_attend_pallas(q, kp, vp, k_scale, v_scale, block_table,
+                               lengths, fmt=fmt, softcap=softcap,
+                               sm_scale=sm_scale,
+                               interpret=resolve_interpret(interpret))
 
 
 def madam_step(

@@ -1,0 +1,143 @@
+"""Paged-attention decode kernel: block-table gather + tile-local LNS decode.
+
+One query token per slot (the serving decode shape) attends over the pages
+its block table names. The grid is (batch, max_pages) with pages innermost:
+each step DMAs one (page_size, KV, hd) K/V page — selected by the
+scalar-prefetched block table in the BlockSpec index map, so the gather
+never materializes a dense (B, max_len) view in HBM — decodes packed LNS
+words in the prologue (the shared ``core.lns.lns_decode_packed``, scales
+applied per position/head), and folds the page into a running
+online-softmax accumulator held in VMEM scratch. The last page of each row
+writes ``acc / l`` to the output.
+
+Invalid tail positions (beyond the slot's length) are masked before the
+softmax, so block-table entries that point at the pool's null page are
+harmless. Head/page dims are used as-is — the serving shapes are small and
+CPU CI runs this kernel in interpret mode; real-TPU tiling pads would go in
+``ops.paged_attend_decode``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lns import LNSFormat, lns_decode_packed
+from repro.kernels.dispatch import resolve_interpret
+
+__all__ = ["paged_attend_pallas"]
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest, fmt, softcap,
+            sm_scale, page, rep):
+    if fmt is not None:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b, p = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = k_ref[0]  # (page, kv, hd)
+    v = v_ref[0]
+    if fmt is not None:
+        # tile-local unpack+decode through the one shared definition in
+        # core.lns, so the kernel cannot drift from the jnp oracle
+        k = lns_decode_packed(k, fmt, jnp.float32) * ks_ref[0].astype(
+            jnp.float32)
+        v = lns_decode_packed(v, fmt, jnp.float32) * vs_ref[0].astype(
+            jnp.float32)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (h, hd)
+    h = q.shape[0]
+    kv = k.shape[1]
+    qg = q.reshape(kv, rep, q.shape[-1])         # GQA head groups
+    logits = jnp.einsum("krd,pkd->krp", qg, k).reshape(h, page) * sm_scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    logits = jnp.where(pos < len_ref[b], logits, -1e30)
+
+    m_prev, l_prev, acc = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    pexp = jnp.exp(logits - m_new)               # (h, page)
+    corr = jnp.exp(m_prev - m_new)               # (h, 1)
+    l_new = corr * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
+    ctx = jnp.einsum("krp,pkd->krd", pexp.reshape(kv, rep, page), v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = corr * acc + ctx.reshape(h, -1)
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _write():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "softcap", "sm_scale", "interpret"),
+)
+def paged_attend_pallas(
+    q: jax.Array,            # (B, 1, h, hd)
+    kp: jax.Array,           # (P, page, kv, hd) packed words or dense
+    vp: jax.Array,
+    k_scale: Optional[jax.Array],   # (P, page, kv, 1) when fmt is set
+    v_scale: Optional[jax.Array],
+    block_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,      # (B,) int32 valid positions per slot
+    *,
+    fmt: Optional[LNSFormat] = None,
+    softcap: Optional[float] = None,
+    sm_scale: float,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Decode-shape paged attention over a block-paged KV pool -> f32."""
+    interpret = resolve_interpret(interpret)
+    B, S, h, hd = q.shape
+    assert S == 1, "the kernel serves the decode shape; S>1 is the reference"
+    _, page, kv, _ = kp.shape
+    mp = block_table.shape[1]
+    rep = h // kv
+
+    qmap = lambda b, p, tbl, ln: (b, 0, 0, 0)
+    pgmap = lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)
+    in_specs = [
+        pl.BlockSpec((1, 1, h, hd), qmap),
+        pl.BlockSpec((1, page, kv, hd), pgmap),
+        pl.BlockSpec((1, page, kv, hd), pgmap),
+    ]
+    args = [q, kp, vp]
+    if fmt is not None:
+        in_specs += [pl.BlockSpec((1, page, kv, 1), pgmap)] * 2
+        args += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, mp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, h, hd), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),   # running max
+            pltpu.VMEM((h, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((h, hd), jnp.float32),  # weighted-value accumulator
+        ],
+    )
+    kernel = functools.partial(_kernel, fmt=fmt, softcap=softcap,
+                               sm_scale=sm_scale, page=page, rep=rep)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, h, hd), jnp.float32),
+        interpret=interpret,
+    )(block_table, lengths, *args)

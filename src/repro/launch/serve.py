@@ -38,6 +38,14 @@ def main():
                     help="offered load in requests/s (0 = all at t=0)")
     ap.add_argument("--serve-bits", type=int, default=8,
                     help="LNS weight bitwidth for serving")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size in tokens: switch the full-context "
+                         "attention layers to the block-paged pool")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool pages per layer (default: dense-equivalent "
+                         "slots * ceil(max_len / page_size))")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix page reuse")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,7 +65,9 @@ def main():
         lengths = "uniform" if args.mixed else "fixed"
         max_len = max_trace_len(args.prompt_len, args.gen_len, lengths)
         engine = Engine(cfg, qcfg, mcfg, state.params,
-                        num_slots=args.slots, max_len=max_len)
+                        num_slots=args.slots, max_len=max_len,
+                        page_size=args.page_size, num_pages=args.num_pages,
+                        prefix_cache=not args.no_prefix_cache)
         trace = synthetic_trace(cfg, requests=args.requests,
                                 prompt_len=args.prompt_len,
                                 gen_len=args.gen_len, lengths=lengths,
@@ -68,6 +78,11 @@ def main():
               f"decode_steps={engine.decode_steps} "
               f"prefill_compiles={engine.prefill_compiles} "
               f"decode_compiles={engine.decode_compiles}")
+        if engine.page_size:
+            print(f"paged KV: page_size={engine.page_size} "
+                  f"pages={engine.num_pages} "
+                  f"prefix_hits={engine.prefix_hits} "
+                  f"reused_tokens={engine.prefix_reused_tokens}")
         print(f"completed {int(agg['completed'])} requests in "
               f"{agg['wall_s']:.2f}s: {agg['tokens_per_s']:.1f} tok/s, "
               f"ttft mean {agg['ttft_mean_s']:.3f}s "

@@ -29,7 +29,8 @@ from repro.models.common import ArchConfig, dense_init
 from repro.models.layers import apply_rope, decoded_of, dense_of, rope
 
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
-           "init_kv_cache", "flash_attention", "model_axis_size"]
+           "init_kv_cache", "init_paged_kv_cache", "is_paged_cache",
+           "flash_attention", "model_axis_size"]
 
 
 def model_axis_size() -> int:
@@ -173,8 +174,10 @@ def attn_apply(
     window: Optional[int] = None,
     theta: Optional[float] = None,
     cache: Optional[Dict[str, jax.Array]] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
-    """One attention block. With ``cache``, decode/append mode (S small)."""
+    """One attention block. With ``cache``, decode/append mode (S small);
+    a paged cache additionally needs the engine's ``block_table``."""
     B, S, D = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     theta = theta if theta is not None else cfg.rope_theta
@@ -210,6 +213,11 @@ def attn_apply(
         out = flash_attention(q, kf, vf, window=window,
                               softcap=cfg.attn_logit_softcap)
         new_cache = None
+    elif is_paged_cache(cache):
+        assert window is None, "paged KV pools do not serve ring buffers"
+        assert block_table is not None, "paged cache requires a block table"
+        out, new_cache = _paged_attend(q, k, v, cache, cfg,
+                                       block_table=block_table, qcfg=qcfg)
     else:
         out, cache = _decode_attend(q, k, v, cache, cfg, window=window)
         new_cache = cache
@@ -266,6 +274,99 @@ def _kv_decode(packed: jax.Array, scale: jax.Array, cfg: ArchConfig):
     sign, code = lns_unpack(packed, fmt)
     return lns_decode(sign, code, fmt, scale.astype(jnp.float32),
                       dtype=cfg.compute_dtype)
+
+
+def init_paged_kv_cache(batch: int, num_pages: int, page_size: int,
+                        cfg: ArchConfig) -> Dict[str, jax.Array]:
+    """Block-paged KV pool shared by all slots of one attention layer.
+
+    ``num_pages + 1`` pages of ``page_size`` tokens each (the extra page is
+    the *null* page: unused block-table entries point at it, so gathers of a
+    slot's unallocated tail and writes from freed slots land in one
+    sacrificial page instead of corrupting live KV). Per-slot state is just
+    the write cursor ``idx``; the page mapping lives in the engine-owned
+    block table threaded through ``forward`` (same page ids for every
+    layer — each layer indexes its own pool with them).
+
+    Wire format matches the dense cache: with ``cfg.kv_cache_bits`` pages
+    store packed LNS words + per-(pos, head) power-of-two scales
+    (``_kv_encode``), decoded on read.
+    """
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    P = num_pages + 1
+    if cfg.kv_cache_bits:
+        return {
+            "kp": jnp.zeros((P, page_size, kv, hd), jnp.uint8),
+            "vp": jnp.zeros((P, page_size, kv, hd), jnp.uint8),
+            "kp_scale": jnp.ones((P, page_size, kv, 1), jnp.bfloat16),
+            "vp_scale": jnp.ones((P, page_size, kv, 1), jnp.bfloat16),
+            "idx": jnp.zeros((batch,), jnp.int32),
+        }
+    dt = cfg.compute_dtype
+    return {
+        "kp": jnp.zeros((P, page_size, kv, hd), dt),
+        "vp": jnp.zeros((P, page_size, kv, hd), dt),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "kp" in cache
+
+
+def _paged_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
+                  block_table: jax.Array,
+                  qcfg: Optional[QuantConfig] = None):
+    """Paged-pool decode/append: scatter the new KV into this slot's pages,
+    then attend over the pages named by the block table.
+
+    ``block_table`` is (B, max_pages) int32 — slot-local page index ``j``
+    covers absolute positions ``[j*page_size, (j+1)*page_size)``. Unused
+    entries point at the null page (see :func:`init_paged_kv_cache`), so
+    out-of-range writes from recycled rows and the gathered-but-invalid
+    tail are harmless (the tail is masked out before the softmax anyway).
+    """
+    from repro.kernels import dispatch
+    B, S, h, hd = q.shape
+    pool_k = cache["kp"]
+    page = pool_k.shape[1]
+    mp = block_table.shape[1]
+    idx = cache["idx"]  # (B,) tokens already cached, per slot
+    pos = idx[:, None] + jnp.arange(S)  # (B, S) absolute write positions
+    pg = jnp.take_along_axis(block_table, jnp.clip(pos // page, 0, mp - 1),
+                             axis=1)
+    # positions past the slot's page span (right-padded prefill tails,
+    # stale cursors of recycled rows) must not clamp onto a live page:
+    # point them out of bounds and let the scatter drop them
+    pg = jnp.where(pos < mp * page, pg, pool_k.shape[0])
+    off = pos % page
+
+    quant = bool(cfg.kv_cache_bits)
+    if quant:
+        pk_new, sk_new = _kv_encode(k_new, cfg)
+        pv_new, sv_new = _kv_encode(v_new, cfg)
+        store = (("kp", pk_new), ("vp", pv_new),
+                 ("kp_scale", sk_new), ("vp_scale", sv_new))
+    else:
+        store = (("kp", k_new), ("vp", v_new))
+
+    new_cache = dict(cache)
+    fpg, foff = pg.reshape(-1), off.reshape(-1)
+    for key, new in store:
+        flat = new.reshape((B * S,) + new.shape[2:])
+        new_cache[key] = cache[key].at[fpg, foff].set(
+            flat.astype(cache[key].dtype), mode="drop")
+    new_cache["idx"] = idx + S
+
+    out = dispatch.paged_attend(
+        q, new_cache["kp"], new_cache["vp"],
+        new_cache.get("kp_scale"), new_cache.get("vp_scale"),
+        block_table, idx + S,
+        fmt=_kv_fmt(cfg) if quant else None,
+        softcap=cfg.attn_logit_softcap,
+        sm_scale=1.0 / math.sqrt(hd),
+        backend=qcfg.backend if qcfg is not None else None)
+    return out.astype(q.dtype), new_cache
 
 
 def _row_insert(buf, new, idx):

@@ -155,7 +155,7 @@ def _attn_kind_args(cfg: ArchConfig, kind: str):
 
 
 def _block_apply(kind: str, bp, x, cfg: ArchConfig, qcfg, *, positions,
-                 shared=None, cache=None):
+                 shared=None, cache=None, block_tables=None):
     """Apply one block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ("dense", "local", "global", "moe"):
@@ -167,7 +167,8 @@ def _block_apply(kind: str, bp, x, cfg: ArchConfig, qcfg, *, positions,
         else:
             a, cache = attn_mod.attn_apply(bp["attn"], h, cfg, qcfg,
                                            positions=positions, window=window,
-                                           theta=theta, cache=cache)
+                                           theta=theta, cache=cache,
+                                           block_table=block_tables)
         x = x + a
         h = rms_norm(x, bp["ln2"], cfg.norm_eps)
         if kind == "moe":
@@ -192,7 +193,8 @@ def _block_apply(kind: str, bp, x, cfg: ArchConfig, qcfg, *, positions,
         if "lora_a" in bp:
             attn_p = _lora_qkv(attn_p, bp, h, cfg, qcfg)
         a, cache = attn_mod.attn_apply(attn_p, h, cfg, qcfg,
-                                       positions=positions, cache=cache)
+                                       positions=positions, cache=cache,
+                                       block_table=block_tables)
         x = x + a
         m = mlp_apply(sp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps), cfg, qcfg)
         return x + m, cache, aux
@@ -242,6 +244,7 @@ def forward(
     patches: Optional[jax.Array] = None,   # phi3v precomputed patch embeds
     caches: Optional[Dict[str, Any]] = None,
     pos_offset: jax.Array | int = 0,
+    block_tables: Optional[jax.Array] = None,
     remat: bool = False,
     scan_unroll: int | bool = 1,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
@@ -256,6 +259,11 @@ def forward(
     ``pos_offset`` may be a scalar or a (B,) vector of per-slot offsets —
     the serving engine decodes a batch whose rows sit at different
     sequence positions.
+
+    ``block_tables`` (B, max_pages) maps each slot's local pages into the
+    per-layer paged KV pools (see ``attention.init_paged_kv_cache``); one
+    table serves every paged layer — each indexes its own pool with the
+    same page ids. Required iff ``caches`` contains paged layers.
     """
     prefix, n_periods, period = cfg.layer_pattern()
     x = _embed(params, tokens, cfg, qcfg)
@@ -273,7 +281,7 @@ def forward(
 
     def body_fn(kind, bp, h, pos, sh, c):
         return _block_apply(kind, bp, h, cfg, qcfg, positions=pos,
-                            shared=sh, cache=c)
+                            shared=sh, cache=c, block_tables=block_tables)
 
     if remat:
         body_fn = jax.checkpoint(
@@ -376,19 +384,38 @@ def _mtp_loss(params, hidden, tokens, labels, cfg: ArchConfig, qcfg):
 # serving
 
 
-def init_caches(batch: int, max_len: int, cfg: ArchConfig) -> Dict[str, Any]:
-    """Allocate decode caches matching the trunk structure."""
+def init_caches(batch: int, max_len: int, cfg: ArchConfig, *,
+                page_size: Optional[int] = None,
+                num_pages: Optional[int] = None) -> Dict[str, Any]:
+    """Allocate decode caches matching the trunk structure.
+
+    With ``page_size`` the full-context attention layers allocate one
+    block-paged pool of ``num_pages`` pages each (default: dense-equivalent
+    capacity, ``batch * ceil(max_len / page_size)``) instead of a dense
+    ``(batch, max_len)`` buffer; ``forward`` then needs ``block_tables``.
+    Sliding-window rings, recurrent state, and MLA caches keep their dense
+    per-slot layout (DESIGN.md §7.1).
+    """
     prefix, n_periods, period = cfg.layer_pattern()
+    if page_size is not None and num_pages is None:
+        num_pages = batch * (-(-max_len // page_size))
+    paged = page_size is not None and not cfg.use_mla
 
     def one(kind):
         if kind in ("dense", "global", "moe"):
             if cfg.use_mla:
                 return attn_mod.init_mla_cache(batch, max_len, cfg)
+            if paged:
+                return attn_mod.init_paged_kv_cache(batch, num_pages,
+                                                    page_size, cfg)
             return attn_mod.init_kv_cache(batch, max_len, cfg)
         if kind == "local":
             return attn_mod.init_kv_cache(batch, max_len, cfg,
                                           window=cfg.sliding_window)
         if kind == "shared_attn":
+            if paged:
+                return attn_mod.init_paged_kv_cache(batch, num_pages,
+                                                    page_size, cfg)
             return attn_mod.init_kv_cache(batch, max_len, cfg)
         if kind == "mamba":
             return ssm_mod.init_mamba_state(batch, cfg)
@@ -409,9 +436,11 @@ def init_caches(batch: int, max_len: int, cfg: ArchConfig) -> Dict[str, Any]:
 
 def decode_step(params, caches, tokens, cfg: ArchConfig,
                 qcfg: Optional[QuantConfig] = None, *,
-                pos_offset, scan_unroll: int | bool = 1
+                pos_offset, block_tables: Optional[jax.Array] = None,
+                scan_unroll: int | bool = 1
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One incremental step (S small, typically 1). Returns (logits, caches)."""
     out = forward(params, tokens, cfg, qcfg, caches=caches,
-                  pos_offset=pos_offset, scan_unroll=scan_unroll)
+                  pos_offset=pos_offset, block_tables=block_tables,
+                  scan_unroll=scan_unroll)
     return out.logits[:, -1], out.caches

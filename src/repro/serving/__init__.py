@@ -1,9 +1,9 @@
 from repro.serving.engine import DEFAULT_BUCKETS, Engine
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import BlockAllocator, Scheduler
 from repro.serving.trace import max_trace_len, synthetic_trace
 
-__all__ = ["DEFAULT_BUCKETS", "Engine", "Request", "RequestMetrics",
-           "RequestQueue", "RequestState", "Scheduler", "max_trace_len",
-           "summarize", "synthetic_trace"]
+__all__ = ["BlockAllocator", "DEFAULT_BUCKETS", "Engine", "Request",
+           "RequestMetrics", "RequestQueue", "RequestState", "Scheduler",
+           "max_trace_len", "summarize", "synthetic_trace"]

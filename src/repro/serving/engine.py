@@ -1,20 +1,36 @@
 """Continuous-batching engine over the packed-LNS decode path.
 
-The engine owns a fixed decode batch of ``num_slots`` rows and one KV/state
-cache sized ``(num_slots, max_len)``. Each row is an independent serving
-slot:
+The engine owns a fixed decode batch of ``num_slots`` rows. Each row is an
+independent serving slot:
 
 - the cache write cursor (``cache["idx"]``) is per-row, so a freed slot
   restarts at position 0 while its neighbours keep decoding;
 - admission prefills the prompt through the *decode* path at batch 1 with
   the prompt right-padded to a shape bucket (a handful of jit entries,
-  see ``_bucket``), then scatters the mini-cache row into the freed slot
-  with the cursor rewound to the true prompt length — so the padded tail
-  is dead weight that the slot's own decode overwrites token by token;
+  see ``_bucket``), then scatters the produced rows into the freed slot
+  with the cursor rewound to the true prompt length;
 - the decode step itself sees a single ``(num_slots, 1)`` shape forever:
   admitting a request never recompiles it (``decode_compiles`` stays 1);
-- a finished sequence (EOS or ``max_new_tokens``) releases its slot and
-  its cache rows are recycled in place by the next admission's scatter.
+- a finished sequence (EOS, ``max_new_tokens``, or cache capacity — the
+  latter flagged ``truncated`` in its metrics) releases its slot and its
+  KV is recycled by a later admission.
+
+KV storage comes in two layouts (DESIGN.md §7.1):
+
+- **dense** (default): one ``(num_slots, max_len)`` buffer per layer; slot
+  count is capped by worst-case context.
+- **paged** (``page_size=...``): full-context attention layers share one
+  global pool of ``page_size``-token pages per layer plus per-slot block
+  tables; a request only holds ``ceil((prompt+budget)/page_size)`` pages,
+  so ``num_slots`` can exceed what dense allocation permits and admission
+  is gated by the ``BlockAllocator`` (pool exhausted -> the request waits
+  in the queue, nothing wedges). With ``prefix_cache`` the allocator keeps
+  a chain hash over page-aligned prompt prefixes: a hit maps the resident
+  pages into the new slot's block table and prefills only the suffix
+  (copy-on-write on a partially-reused boundary page). Sliding-window
+  rings, recurrent state, and MLA caches keep the dense layout; prefix
+  reuse switches off unless every stateful layer is paged (those layers
+  would otherwise never see the skipped tokens).
 
 Weights stay in the packed 8-bit LNS wire format (``LNSWeight``) for the
 whole request lifetime: routed GEMMs decode tile-locally through
@@ -22,12 +38,14 @@ whole request lifetime: routed GEMMs decode tile-locally through
 the engine never materializes the tree and loads training checkpoints
 with zero re-encoding (same bytes on disk, in the train state, and here).
 
-Padding-safety: right-padded prefill is exact for attention caches (the
-padded keys sit beyond the rewound cursor, masked and later overwritten)
-but NOT for recurrent state (Mamba/RWKV consume pad tokens) nor for ring
-buffers shorter than the bucket (pads would wrap onto live keys). In those
-cases the engine prefills at the exact prompt length instead — correctness
-first, one extra compile per distinct length second.
+Padding-safety: right-padded prefill is exact for *dense* attention caches
+(the padded keys sit beyond the rewound cursor, masked and later
+overwritten) and for *paged* pools (pad writes past a slot's page span are
+dropped by the scatter; pads inside the span are masked and overwritten by
+decode). It is NOT exact for recurrent state (Mamba/RWKV consume pad
+tokens) nor for ring buffers shorter than the bucket (pads would wrap onto
+live keys) — there the engine prefills at the exact prompt length instead:
+correctness first, one extra compile per distinct length second.
 """
 from __future__ import annotations
 
@@ -44,12 +62,17 @@ from repro.models.model import forward, init_caches
 from repro.optim.madam import MadamConfig
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import BlockAllocator, Scheduler
 from repro.training.steps import build_decode_step
 
 __all__ = ["Engine", "DEFAULT_BUCKETS"]
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+# layer kinds whose KV can live in a block-paged pool (full-context,
+# non-MLA attention); everything else keeps the dense per-slot layout
+_PAGED_KINDS = frozenset({"dense", "global", "moe", "shared_attn"})
+_POOL_KEYS = ("kp", "vp", "kp_scale", "vp_scale")
 
 
 def _set_cursor(caches, n):
@@ -59,6 +82,17 @@ def _set_cursor(caches, n):
             return jnp.full_like(leaf, n)
         return leaf
     return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def _slot_scatter(b, m, slot):
+    """Write the batch-1 leaf ``m`` into row ``slot`` of ``b`` — the slot
+    axis is wherever the two shapes disagree (axis 0 for plain leaves,
+    axis 1 for period-stacked ones)."""
+    ax = next((i for i, (x, y) in enumerate(zip(b.shape, m.shape))
+               if x != y), 0)
+    start = [0] * b.ndim
+    start[ax] = slot
+    return jax.lax.dynamic_update_slice(b, m.astype(b.dtype), tuple(start))
 
 
 class Engine:
@@ -75,6 +109,9 @@ class Engine:
         max_len: int = 256,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         scan_unroll: int | bool = 1,
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
+        prefix_cache: bool = True,
     ):
         self.cfg, self.qcfg, self.mcfg = cfg, qcfg, mcfg
         self.params = params
@@ -86,52 +123,153 @@ class Engine:
         self._recurrent = bool(kinds & {"mamba", "rwkv"})
         self._window = cfg.sliding_window if "local" in kinds else None
 
+        self._paged = bool(page_size) and not cfg.use_mla \
+            and bool(kinds & _PAGED_KINDS)
+        self.page_size = page_size if self._paged else None
+        if self._paged:
+            self._max_pages = -(-max_len // page_size)
+            self.num_pages = num_pages or num_slots * self._max_pages
+            self._null_page = self.num_pages
+            # skipping re-prefill of a cached prefix is only sound when no
+            # layer carries non-paged state that would miss those tokens
+            self._prefix_ok = prefix_cache and kinds <= _PAGED_KINDS
+        else:
+            self.num_pages = 0
+            self._prefix_ok = False
+
         self._decode_fn = jax.jit(
             build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll),
             donate_argnums=(1,))
         # one fused call per admission: batch-1 prefill through the decode
         # path + scatter of the produced rows into the engine cache
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        impl = self._prefill_paged_impl if self._paged else self._prefill_impl
+        self._prefill_fn = jax.jit(impl, donate_argnums=(1,))
+        if not self._paged:
+            # zero batch-1 cache reused by every dense admission's prefill
+            # (the jit body is functional, the template never mutates)
+            self._mini_template = init_caches(1, max_len, cfg)
 
-        self.caches = init_caches(num_slots, max_len, cfg)
-        # zero batch-1 cache reused by every admission's prefill (the jit
-        # body is functional, so the template itself never mutates)
-        self._mini_template = init_caches(1, max_len, cfg)
-        self.scheduler = Scheduler(num_slots)
+        self._reset_state()
+
+    def _reset_state(self) -> None:
+        cfg = self.cfg
+        self.caches = init_caches(self.num_slots, self.max_len, cfg,
+                                  page_size=self.page_size,
+                                  num_pages=self.num_pages or None)
+        allocator = None
+        if self._paged:
+            allocator = BlockAllocator(self.num_pages, self.page_size)
+            self._block_tables = np.full(
+                (self.num_slots, self._max_pages), self._null_page, np.int32)
+            self._slot_pages: List[Optional[List[int]]] = \
+                [None] * self.num_slots
+        self.scheduler = Scheduler(self.num_slots, allocator=allocator)
         self.queue = RequestQueue()
         # host mirrors of the in-graph per-slot cursors / last tokens
-        self._slot_len = np.zeros((num_slots,), np.int64)
+        self._slot_len = np.zeros((self.num_slots,), np.int64)
         tok_width = (cfg.num_codebooks,) if cfg.num_codebooks else ()
-        self._last_tok = np.zeros((num_slots,) + tok_width, np.int32)
+        self._last_tok = np.zeros((self.num_slots,) + tok_width, np.int32)
         self.completed: List[RequestMetrics] = []
         self.finished: List[RequestState] = []  # keeps generated tokens
+        self._run_sink: Optional[List[RequestMetrics]] = None
         self.decode_steps = 0
         self.prefills = 0
+        self.prefill_tokens = 0          # padded tokens actually prefilled
+        self.prefix_hits = 0             # admissions that reused pages
+        self.prefix_reused_tokens = 0    # prompt tokens skipped via reuse
         self._t0: Optional[float] = None
+
+    @property
+    def allocator(self) -> Optional[BlockAllocator]:
+        return self.scheduler.allocator
 
     # ------------------------------------------------------------------
     # jitted bodies
 
     def _prefill_impl(self, params, big, mini, tokens, n, slot):
-        """Batch-1 decode-path prefill of ``tokens`` over the zero cache
-        ``mini``, cursor rewound to the true prompt length ``n``, rows
-        scattered into row ``slot`` of the engine cache ``big``. Returns
-        (last-real-position logits, updated engine cache)."""
+        """Dense-cache admission: batch-1 decode-path prefill of ``tokens``
+        over the zero cache ``mini``, cursor rewound to the true prompt
+        length ``n``, rows scattered into row ``slot`` of the engine cache
+        ``big``. Returns (last-real-position logits, updated cache)."""
         out = forward(params, tokens, self.cfg, self.qcfg, caches=mini,
                       pos_offset=0)
         logits = jnp.take(out.logits, n - 1, axis=1)  # (1, V)
         filled = _set_cursor(out.caches, n)
-
-        def upd(b, m):
-            # the slot axis is wherever the two shapes disagree (axis 0 for
-            # plain leaves, axis 1 for period-stacked ones)
-            ax = next((i for i, (x, y) in enumerate(zip(b.shape, m.shape))
-                       if x != y), 0)
-            start = [0] * b.ndim
-            start[ax] = slot
-            return jax.lax.dynamic_update_slice(
-                b, m.astype(b.dtype), tuple(start))
+        upd = lambda b, m: _slot_scatter(b, m, slot)
         return logits, jax.tree.map(upd, big, filled)
+
+    def _prefill_paged_impl(self, params, big, tokens, n_new, n_cached,
+                            n_total, src_pages, dst_pages, slot):
+        """Paged admission: gather the slot's pages (``src_pages`` — the
+        matched prefix chain plus its fresh pages; on a copy-on-write
+        boundary the source is the *shared* page while the destination is
+        the fresh copy) into a local batch-1 pool, prefill the prompt
+        *suffix* at ``pos_offset=n_cached`` over it, rewind the cursor to
+        the true prompt length ``n_total``, and scatter the local pages
+        back to ``dst_pages`` plus the batch-1 rows of any dense layers
+        into row ``slot``. Unused *gather* entries point at the null page;
+        on the scatter side the shared prefix pages (content unchanged)
+        and the unused tail carry an out-of-range index and are dropped —
+        only the CoW copy and the fresh pages cost write bandwidth.
+        Returns (last-real-position logits, updated cache)."""
+        mp = src_pages.shape[0]
+
+        def mini_layer(c, stacked):
+            if isinstance(c, dict) and "kp" in c:
+                out = {}
+                for k, v in c.items():
+                    if k in _POOL_KEYS:
+                        out[k] = v[:, src_pages] if stacked else v[src_pages]
+                    else:  # "idx": suffix prefill resumes at n_cached
+                        shape = (v.shape[0], 1) if stacked else (1,)
+                        out[k] = jnp.full(shape, n_cached, v.dtype)
+                return out
+            ax = 1 if stacked else 0  # zeros fold to constants inside jit
+            return {k: jnp.zeros(v.shape[:ax] + (1,) + v.shape[ax + 1:],
+                                 v.dtype) for k, v in c.items()}
+
+        def map_tree(tree, fn):
+            out: Dict[str, Any] = {}
+            if "prefix" in tree:
+                out["prefix"] = [fn(c, False) for c in tree["prefix"]]
+            if "period" in tree:
+                out["period"] = {k: fn(c, True)
+                                 for k, c in tree["period"].items()}
+            return out
+
+        mini = map_tree(big, mini_layer)
+        local_tables = jnp.arange(mp, dtype=jnp.int32)[None]  # identity
+        out = forward(params, tokens, self.cfg, self.qcfg, caches=mini,
+                      pos_offset=n_cached, block_tables=local_tables)
+        logits = jnp.take(out.logits, n_new - 1, axis=1)  # (1, V)
+        filled = _set_cursor(out.caches, n_total)
+
+        def scatter_layer(b, m, stacked):
+            if isinstance(b, dict) and "kp" in b:
+                out = {}
+                for k in b:
+                    if k in _POOL_KEYS:
+                        val = m[k].astype(b[k].dtype)
+                        out[k] = (b[k].at[:, dst_pages].set(val, mode="drop")
+                                  if stacked else
+                                  b[k].at[dst_pages].set(val, mode="drop"))
+                    else:
+                        out[k] = _slot_scatter(b[k], m[k], slot)
+                return out
+            return jax.tree.map(lambda x, y: _slot_scatter(x, y, slot), b, m)
+
+        def zip_tree(btree, mtree):
+            out: Dict[str, Any] = {}
+            if "prefix" in btree:
+                out["prefix"] = [scatter_layer(x, y, False) for x, y in
+                                 zip(btree["prefix"], mtree["prefix"])]
+            if "period" in btree:
+                out["period"] = {k: scatter_layer(btree["period"][k],
+                                                  mtree["period"][k], True)
+                                 for k in btree["period"]}
+            return out
+
+        return logits, zip_tree(big, filled)
 
     # ------------------------------------------------------------------
     # shape bucketing
@@ -159,14 +297,7 @@ class Engine:
     def reset(self) -> None:
         """Clear all request/slot state but keep the compiled steps — a
         reset engine re-runs a trace with warm jit caches (benchmarks)."""
-        self.caches = init_caches(self.num_slots, self.max_len, self.cfg)
-        self.scheduler = Scheduler(self.num_slots)
-        self.queue = RequestQueue()
-        self._slot_len[:] = 0
-        self._last_tok[:] = 0
-        self.completed, self.finished = [], []
-        self.decode_steps = self.prefills = 0
-        self._t0 = None
+        self._reset_state()
 
     def submit(self, req: Request) -> None:
         # reject before any slot is bound: failing later (inside _admit)
@@ -175,6 +306,10 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt len {req.prompt_len} exceeds "
                 f"engine max_len {self.max_len}")
+        if self._paged and self._pages_needed(req) > self.num_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {self._pages_needed(req)} KV "
+                f"pages, pool holds {self.num_pages}")
         self.queue.push(req)
 
     def _now(self) -> float:
@@ -189,20 +324,125 @@ class Engine:
                             self.cfg.vocab_size)
         return np.argmax(lg, axis=-1).astype(np.int32)
 
-    def _admit(self, rs: RequestState, clock) -> None:
+    # ------------------------------------------------------------------
+    # paged admission bookkeeping (host side)
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case pages a request holds: its prompt plus the budget's
+        decode writes (the final token is returned but never cached)."""
+        n_pos = min(req.prompt_len + max(req.max_new_tokens - 1, 0),
+                    self.max_len)
+        return -(-n_pos // self.page_size)
+
+    def _reserve_pages(self, req: Request) -> Optional[Dict[str, Any]]:
+        """Match the prompt's cached prefix and reserve this request's
+        pages; None (nothing held) if the pool can't host it right now.
+
+        Under pressure the match degrades before the reservation fails:
+        first the copy-on-write hold goes (it transiently pins one page
+        beyond the request's own demand — on a pool sized exactly at
+        ``_pages_needed`` that hold would otherwise wedge the identical
+        reservation forever), then the whole prefix match (releasing the
+        shared pages back to the evictable set, so any request ``submit``
+        accepted can always be hosted with zero reuse once slots drain)."""
+        alloc = self.allocator
+        page = self.page_size
+        plen = req.prompt_len
+        need = self._pages_needed(req)
+        keys: List[bytes] = []
+        matched: List[int] = []
+        if self._prefix_ok:
+            # memoized on the request (an exhausted pool retries this
+            # reservation every step), tagged with the page size — one
+            # trace may be replayed through engines with different pages
+            memo = getattr(req, "_chain_keys", None)
+            if memo is None or memo[0] != page:
+                memo = (page, BlockAllocator.chain_keys(req.prompt, page))
+                req._chain_keys = memo
+            keys = memo[1]
+            matched = alloc.match(keys)
+        # always recompute at least the last prompt token (its logits seed
+        # decoding), so reuse is capped at plen - 1
+        n_cached = min(len(matched) * page, plen - 1)
+        n_full = n_cached // page
+        cow = matched[n_full] if n_cached % page else None
+        shared = matched[:n_full]
+        alloc.retain(shared)
+        if cow is not None:
+            alloc.retain([cow])
+        fresh = alloc.alloc(need - n_full)
+        if fresh is None and cow is not None:
+            alloc.release([cow])           # forfeit the boundary reuse
+            cow = None
+            n_cached = n_full * page
+            fresh = alloc.alloc(need - n_full)
+        if fresh is None and shared:
+            alloc.release(shared)          # forfeit the prefix match
+            shared, n_full, n_cached = [], 0, 0
+            fresh = alloc.alloc(need)
+        if fresh is None:                  # genuine pressure: nothing held
+            return None
+        return {"n_cached": n_cached, "n_full": n_full, "cow": cow,
+                "shared": shared, "fresh": fresh, "keys": keys}
+
+    # ------------------------------------------------------------------
+    # admission / decode
+
+    def _admit(self, rs: RequestState, clock,
+               resv: Optional[Dict[str, Any]] = None) -> None:
         req = rs.request
         plen = req.prompt_len
-        bucket = self._bucket(plen)
         prompt = np.asarray(req.prompt, np.int32)
-        tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
-        tokens[0, :plen] = prompt
 
-        logits, self.caches = self._prefill_fn(
-            self.params, self.caches, self._mini_template,
-            jnp.asarray(tokens), jnp.asarray(plen, jnp.int32),
-            jnp.asarray(rs.slot, jnp.int32))
+        if self._paged:
+            n_cached = resv["n_cached"]
+            held = resv["shared"] + resv["fresh"]
+            n_pages = resv["n_full"] + len(resv["fresh"])
+            bt = np.full((self._max_pages,), self._null_page, np.int32)
+            bt[:resv["n_full"]] = resv["shared"]
+            bt[resv["n_full"]:n_pages] = resv["fresh"]
+            src = bt.copy()
+            if resv["cow"] is not None:  # gather the shared boundary page,
+                src[resv["n_full"]] = resv["cow"]  # write back the copy
+            # scatter-back skips what didn't change: shared prefix pages
+            # and the unused tail go out of range and are dropped
+            oob = self.num_pages + 1
+            dst = bt.copy()
+            dst[:resv["n_full"]] = oob
+            dst[n_pages:] = oob
+            n_new = plen - n_cached
+            bucket = self._bucket(n_new)
+            tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+            tokens[0, :n_new] = prompt[n_cached:]
+            logits, self.caches = self._prefill_fn(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(n_new, jnp.int32),
+                jnp.asarray(n_cached, jnp.int32),
+                jnp.asarray(plen, jnp.int32),
+                jnp.asarray(src), jnp.asarray(dst),
+                jnp.asarray(rs.slot, jnp.int32))
+            if resv["cow"] is not None:  # content copied; drop the hold
+                self.allocator.release([resv["cow"]])
+            if self._prefix_ok:  # publish this prompt's full pages
+                for i in range(plen // self.page_size):
+                    self.allocator.register(resv["keys"][i], int(bt[i]))
+            self._block_tables[rs.slot] = bt
+            self._slot_pages[rs.slot] = held
+            if n_cached:
+                self.prefix_hits += 1
+                self.prefix_reused_tokens += n_cached
+        else:
+            bucket = self._bucket(plen)
+            tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+            tokens[0, :plen] = prompt
+            logits, self.caches = self._prefill_fn(
+                self.params, self.caches, self._mini_template,
+                jnp.asarray(tokens), jnp.asarray(plen, jnp.int32),
+                jnp.asarray(rs.slot, jnp.int32))
+
         tok = self._greedy(logits)[0]
         self.prefills += 1
+        self.prefill_tokens += bucket
         self._slot_len[rs.slot] = plen
         self._last_tok[rs.slot] = tok
         rs.generated.append(tok.tolist() if tok.ndim else int(tok))
@@ -210,11 +450,26 @@ class Engine:
         self._maybe_finish(rs, clock)
 
     def _maybe_finish(self, rs: RequestState, clock) -> None:
-        if rs.done or self._slot_len[rs.slot] + 1 >= self.max_len:
+        # the cursor names the *next* write position: the slot is out of
+        # capacity only once it passes max_len - 1 (position max_len - 1
+        # itself is usable — finishing one step earlier wasted it)
+        full = self._slot_len[rs.slot] >= self.max_len
+        if rs.done or full:
             rs.t_finish = clock()
             self.scheduler.release(rs.slot)
+            if self._paged:
+                pages = self._slot_pages[rs.slot]
+                if pages:
+                    self.allocator.release(pages)
+                self._slot_pages[rs.slot] = None
+                # stale decode writes from the recycled row must land in
+                # the null page, never in someone else's live pages
+                self._block_tables[rs.slot] = self._null_page
             self.finished.append(rs)
-            self.completed.append(RequestMetrics.from_state(rs))
+            m = RequestMetrics.from_state(rs, truncated=not rs.done and full)
+            self.completed.append(m)
+            if self._run_sink is not None:
+                self._run_sink.append(m)
 
     def step(self, now: Optional[float] = None) -> bool:
         """Admit ready requests, then advance every occupied slot one
@@ -225,15 +480,27 @@ class Engine:
         caller's clock; otherwise the engine's monotonic clock is read at
         each event."""
         clock = self._now if now is None else (lambda: now)
-        for rs in self.scheduler.admit_from(self.queue, clock()):
-            self._admit(rs, clock)
+        while self.scheduler.has_free():
+            req = self.queue.pop_ready(clock())
+            if req is None:
+                break
+            resv = None
+            if self._paged:
+                resv = self._reserve_pages(req)
+                if resv is None:  # pool exhausted: wait for a release
+                    self.queue.requeue(req)
+                    break
+            self._admit(self.scheduler.admit(req, clock()), clock, resv)
         if not self.scheduler.running:
             return False
 
         tokens = self._last_tok[:, None]  # (B, 1[, K])
         pos = jnp.asarray(self._slot_len, jnp.int32)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self._paged:
+            batch["block_tables"] = jnp.asarray(self._block_tables)
         logits, self.caches = self._decode_fn(
-            self.params, self.caches, {"tokens": jnp.asarray(tokens)}, pos)
+            self.params, self.caches, batch, pos)
         toks = self._greedy(logits)
         self.decode_steps += 1
         self._slot_len += 1  # every row's in-graph cursor advanced by 1
@@ -245,9 +512,11 @@ class Engine:
         return True
 
     def drain_finished(self) -> List[RequestState]:
-        """Hand over (and forget) finished request states. Long-lived
-        ``submit()``/``step()`` callers must drain periodically or the
-        retained token lists grow without bound."""
+        """Hand over (and forget) finished request states, and clear the
+        metrics archive with them. Long-lived ``submit()``/``step()``
+        callers must drain periodically or the retained token lists grow
+        without bound. Safe at any point: ``run()`` accounts its own
+        completions in a run-local sink, not by slicing ``completed``."""
         out, self.finished = self.finished, []
         self.completed = []
         return out
@@ -257,11 +526,14 @@ class Engine:
         for the requests completed by *this* call (its own clock)."""
         for r in requests:
             self.submit(r)
-        n0 = len(self.completed)
+        self._run_sink = sink = []
         self._t0 = time.monotonic()
-        while self.queue or self.scheduler.running:
-            if not self.step():
-                nxt = self.queue.next_arrival()
-                if nxt is not None:
-                    time.sleep(min(max(nxt - self._now(), 0.0), 0.05))
-        return summarize(self.completed[n0:], self._now())
+        try:
+            while self.queue or self.scheduler.running:
+                if not self.step():
+                    nxt = self.queue.next_arrival()
+                    if nxt is not None:
+                        time.sleep(min(max(nxt - self._now(), 0.0), 0.05))
+        finally:
+            self._run_sink = None
+        return summarize(sink, self._now())

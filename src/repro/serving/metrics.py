@@ -19,6 +19,9 @@ class RequestMetrics:
     t_finish: float
     prompt_len: int
     new_tokens: int
+    # capacity-truncated: the slot ran out of cache positions before the
+    # request reached EOS or its token budget — not a normal completion
+    truncated: bool = False
 
     @property
     def ttft(self) -> float:
@@ -36,13 +39,14 @@ class RequestMetrics:
         return (self.new_tokens - 1) / (self.t_finish - self.t_first_token)
 
     @classmethod
-    def from_state(cls, rs: RequestState) -> "RequestMetrics":
+    def from_state(cls, rs: RequestState,
+                   truncated: bool = False) -> "RequestMetrics":
         assert rs.t_first_token is not None and rs.t_finish is not None
         return cls(rid=rs.request.rid, slot=rs.slot,
                    arrival=rs.request.arrival, t_admit=rs.t_admit,
                    t_first_token=rs.t_first_token, t_finish=rs.t_finish,
                    prompt_len=rs.request.prompt_len,
-                   new_tokens=len(rs.generated))
+                   new_tokens=len(rs.generated), truncated=truncated)
 
 
 def _pct(sorted_vals: List[float], q: float) -> float:
@@ -59,6 +63,7 @@ def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
     lats = sorted(m.latency for m in metrics)
     return {
         "completed": float(len(metrics)),
+        "truncated": float(sum(m.truncated for m in metrics)),
         "wall_s": wall,
         "generated_tokens": float(total_new),
         "tokens_per_s": total_new / wall if wall > 0 else float("nan"),

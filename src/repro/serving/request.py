@@ -69,6 +69,12 @@ class RequestQueue:
             return self._q.popleft()
         return None
 
+    def requeue(self, req: Request) -> None:
+        """Put a just-popped request back at the head (admission failed —
+        e.g. the KV-page pool can't host it yet). Arrival order holds
+        because ``req`` was the head a moment ago."""
+        self._q.appendleft(req)
+
     def next_arrival(self) -> Optional[float]:
         return self._q[0].arrival if self._q else None
 

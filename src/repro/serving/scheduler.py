@@ -1,24 +1,134 @@
-"""Slot scheduler: continuous batching over a fixed decode batch.
+"""Slot scheduler + KV-page allocator: continuous batching over a fixed
+decode batch and a block-paged KV pool.
 
 The engine decodes a fixed batch of ``num_slots`` rows forever; the
 scheduler's job is purely occupancy — hand a freed row to the next waiting
 request the moment a sequence finishes, instead of waiting for the whole
 batch to drain (the lock-step failure mode this subsystem replaces).
+
+``BlockAllocator`` owns the paged KV pool's page lifecycle: a free list,
+per-page reference counts (prefix-shared pages are held by every slot that
+mapped them), and the prefix-cache registry — a chain hash over
+page-aligned prompt prefixes mapping to resident pages. Pages whose
+refcount drops to zero but that still back a registered prefix move to an
+LRU of evictable cached pages; allocation prefers truly free pages and
+evicts the oldest unreferenced cached page only under pressure (the
+registry entry dies with it).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
 
-from repro.serving.request import Request, RequestQueue, RequestState
+import numpy as np
 
-__all__ = ["Scheduler"]
+from repro.serving.request import Request, RequestState
+
+__all__ = ["BlockAllocator", "Scheduler"]
+
+
+class BlockAllocator:
+    """Refcounted page allocator + prefix-cache registry (host side)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(
+                f"need num_pages/page_size >= 1, got {num_pages}/{page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+        self._registry: Dict[bytes, int] = {}   # prefix chain key -> page
+        self._page_key: Dict[int, bytes] = {}   # inverse, for eviction
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # ref==0, cached
+
+    @property
+    def available(self) -> int:
+        """Pages allocatable right now (free + evictable cached)."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def cached(self) -> int:
+        """Unreferenced pages kept resident for prefix reuse."""
+        return len(self._lru)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Reserve ``n`` pages (ref=1 each) or None if the pool can't —
+        the caller requeues the request; nothing is partially taken."""
+        if n > self.available:
+            return None
+        out = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:  # evict the oldest unreferenced cached page
+                p, _ = self._lru.popitem(last=False)
+                del self._registry[self._page_key.pop(p)]
+            self._ref[p] = 1
+            out.append(p)
+        return out
+
+    def retain(self, pages: Sequence[int]) -> None:
+        """Take a reference on already-resident pages (prefix hits)."""
+        for p in pages:
+            if self._ref.get(p, 0) == 0:
+                self._lru.pop(p, None)
+            self._ref[p] = self._ref.get(p, 0) + 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            r = self._ref.get(p, 0) - 1
+            if r < 0:
+                raise ValueError(f"page {p} released more than retained")
+            if r == 0:
+                del self._ref[p]
+                if p in self._page_key:
+                    self._lru[p] = None   # stays resident, evictable
+                else:
+                    self._free.append(p)
+            else:
+                self._ref[p] = r
+
+    # -- prefix registry ---------------------------------------------------
+
+    @staticmethod
+    def chain_keys(prompt, page_size: int) -> List[bytes]:
+        """Rolling hash per full prompt page: key_i commits to every token
+        in pages 0..i, so one dict probe matches an entire prefix chain."""
+        arr = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        keys, h = [], b""
+        for i in range(len(arr) // page_size):
+            h = hashlib.sha1(
+                h + arr[i * page_size:(i + 1) * page_size].tobytes()).digest()
+            keys.append(h)
+        return keys
+
+    def match(self, keys: Sequence[bytes]) -> List[int]:
+        """Longest resident chain of full prefix pages (no refs taken)."""
+        out = []
+        for k in keys:
+            p = self._registry.get(k)
+            if p is None:
+                break
+            out.append(p)
+        return out
+
+    def register(self, key: bytes, page: int) -> None:
+        """Publish ``page`` as the cached copy of chain ``key`` (first
+        writer wins; a page backs at most one key)."""
+        if key not in self._registry and page not in self._page_key:
+            self._registry[key] = page
+            self._page_key[page] = key
 
 
 class Scheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int,
+                 allocator: Optional[BlockAllocator] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.num_slots = num_slots
+        self.allocator = allocator
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self.running: Dict[int, RequestState] = {}
 
@@ -35,16 +145,6 @@ class Scheduler:
         rs = RequestState(request=req, slot=slot, t_admit=now)
         self.running[slot] = rs
         return rs
-
-    def admit_from(self, queue: RequestQueue, now: float) -> List[RequestState]:
-        """Drain ready requests into free slots; returns the admissions."""
-        admitted = []
-        while self.has_free():
-            req = queue.pop_ready(now)
-            if req is None:
-                break
-            admitted.append(self.admit(req, now))
-        return admitted
 
     def release(self, slot: int) -> Optional[RequestState]:
         """Free a slot whose sequence finished; its cache row is recycled

@@ -147,6 +147,8 @@ def build_decode_step(cfg: ArchConfig, qcfg: Optional[QuantConfig],
 
     def serve_step(params, caches, batch, pos):
         return model_decode_step(params, caches, batch["tokens"], cfg, qcfg,
-                                 pos_offset=pos, scan_unroll=scan_unroll)
+                                 pos_offset=pos,
+                                 block_tables=batch.get("block_tables"),
+                                 scan_unroll=scan_unroll)
 
     return serve_step

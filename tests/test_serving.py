@@ -32,6 +32,26 @@ def test_queue_orders_and_gates_by_arrival():
     assert not q
 
 
+def test_queue_same_arrival_is_fifo():
+    """Requests sharing an arrival time pop in push order (stable sort —
+    ties must not reorder a burst)."""
+    q = RequestQueue()
+    for rid in (3, 1, 4, 1, 5):
+        q.push(Request(rid=rid, prompt=[1], max_new_tokens=1, arrival=1.0))
+    q.push(Request(rid=0, prompt=[1], max_new_tokens=1, arrival=0.5))
+    assert q.pop_ready(2.0).rid == 0
+    assert [q.pop_ready(2.0).rid for _ in range(5)] == [3, 1, 4, 1, 5]
+
+
+def test_queue_requeue_restores_head():
+    q = RequestQueue([Request(rid=0, prompt=[1], max_new_tokens=1),
+                      Request(rid=1, prompt=[1], max_new_tokens=1)])
+    head = q.pop_ready(0.0)
+    q.requeue(head)                       # admission failed: back in front
+    assert q.pop_ready(0.0).rid == 0
+    assert q.pop_ready(0.0).rid == 1
+
+
 def test_scheduler_reuses_freed_slot():
     s = Scheduler(2)
     a = s.admit(Request(rid=0, prompt=[1], max_new_tokens=4), now=0.0)
@@ -41,6 +61,21 @@ def test_scheduler_reuses_freed_slot():
     c = s.admit(Request(rid=2, prompt=[1], max_new_tokens=4), now=1.0)
     assert c.slot == a.slot                  # the freed row is recycled
     assert set(s.running) == {b.slot, c.slot}
+
+
+def test_scheduler_lowest_slot_first_after_interleaved_releases():
+    """Freed slots are reused lowest-first regardless of release order —
+    admissions stay deterministic across interleavings."""
+    s = Scheduler(4)
+    states = [s.admit(Request(rid=i, prompt=[1], max_new_tokens=1), now=0.0)
+              for i in range(4)]
+    assert [rs.slot for rs in states] == [0, 1, 2, 3]
+    s.release(2)
+    s.release(0)
+    s.release(3)
+    order = [s.admit(Request(rid=10 + i, prompt=[1], max_new_tokens=1),
+                     now=1.0).slot for i in range(3)]
+    assert order == [0, 2, 3]
 
 
 def test_eos_with_multi_codebook_tokens():
@@ -199,6 +234,87 @@ def test_oversized_prompt_rejected_before_slot_binding(serve_setup):
     eng.run([Request(rid=1, prompt=_prompts(cfg, 1, 8)[0].tolist(),
                      max_new_tokens=2)])
     assert len(eng.finished) == 1 and len(eng.finished[0].generated) == 2
+
+
+def test_slot_fills_every_cache_position(serve_setup):
+    """Capacity regression: a budget larger than the cache must truncate
+    only after position max_len - 1 was written — the old boundary
+    (``_slot_len + 1 >= max_len``) wasted the last position of every
+    slot. With prompt P and capacity M that is M - P + 1 tokens (the
+    final token is produced off position M - 1 and never cached)."""
+    cfg, qcfg, mcfg, params = serve_setup
+    P, M = 8, 16
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=M)
+    eng.run([Request(rid=0, prompt=_prompts(cfg, 1, P)[0].tolist(),
+                     max_new_tokens=100)])
+    m = eng.completed[0]
+    assert m.new_tokens == M - P + 1
+    assert m.truncated
+    # the in-graph cursor consumed every position
+    assert eng._slot_len[0] == M
+
+
+def test_truncated_flag_distinguishes_capacity_from_eos(serve_setup):
+    """A capacity-truncated request must not report like a normal
+    completion; budget/EOS completions stay untruncated."""
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=16)
+    prompts = _prompts(cfg, 2, 8, seed=9)
+    agg = eng.run([
+        Request(rid=0, prompt=prompts[0].tolist(), max_new_tokens=100),
+        Request(rid=1, prompt=prompts[1].tolist(), max_new_tokens=3),
+    ])
+    by = {m.rid: m for m in eng.completed}
+    assert by[0].truncated and not by[1].truncated
+    assert agg["truncated"] == 1.0
+
+
+def test_run_accounting_survives_drain(serve_setup):
+    """drain_finished() clears the metrics archive; a later run() must
+    still summarize exactly its own completions (run-local sink, not a
+    slice of ``completed``)."""
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=32)
+    agg1 = eng.run([Request(rid=0, prompt=_prompts(cfg, 1, 6)[0].tolist(),
+                            max_new_tokens=2)])
+    assert agg1["completed"] == 1
+    drained = eng.drain_finished()
+    assert [rs.request.rid for rs in drained] == [0]
+    assert eng.completed == [] and eng.finished == []
+    agg2 = eng.run([
+        Request(rid=1, prompt=_prompts(cfg, 1, 6, seed=1)[0].tolist(),
+                max_new_tokens=2),
+        Request(rid=2, prompt=_prompts(cfg, 1, 6, seed=2)[0].tolist(),
+                max_new_tokens=2)])
+    assert agg2["completed"] == 2
+    assert sorted(m.rid for m in eng.completed) == [1, 2]
+
+
+def test_eos_on_first_token_releases_slot_at_admission(serve_setup):
+    """A prompt whose first greedy token is EOS finishes inside the
+    admission step: the slot frees immediately and the engine keeps
+    serving the queue."""
+    cfg, qcfg, mcfg, params = serve_setup
+    prompt = _prompts(cfg, 1, 8, seed=7)[0].tolist()
+    probe = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=32)
+    probe.run([Request(rid=0, prompt=list(prompt), max_new_tokens=1)])
+    first = probe.finished[0].generated[0]
+
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=32)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=10,
+                       eos_id=first))
+    eng.submit(Request(rid=1, prompt=_prompts(cfg, 1, 8, seed=8)[0].tolist(),
+                       max_new_tokens=2))
+    t = 0.0
+    while eng.queue or eng.scheduler.running:
+        eng.step(now=t)
+        t += 1.0
+    by = {rs.request.rid: rs for rs in eng.finished}
+    assert by[0].generated == [first]          # EOS at the admission step
+    m0 = [m for m in eng.completed if m.rid == 0][0]
+    assert m0.t_finish == m0.t_first_token == 0.0 and not m0.truncated
+    assert len(by[1].generated) == 2           # queue kept moving
+    assert eng.scheduler.free_slots == 1
 
 
 def test_engine_interleaves_mixed_lengths(serve_setup):

@@ -1,0 +1,375 @@
+"""Online serving load generator: Poisson arrivals against the HTTP/SSE
+gateway, measuring what the offline trace replay cannot — TTFT at the
+first SSE frame (not at request completion), per-output-token latency
+(TPOT) from inter-frame gaps, and queue wait under admission control.
+
+By default the benchmark boots an in-process gateway (smoke config,
+ephemeral port) and drives it over real sockets; ``--target URL`` points
+the client at an externally launched ``python -m repro.launch.serve
+--http`` instead. Client-side percentiles plus the server's own
+``/metrics`` queue-wait land in ``BENCH_serving.json`` (merged into the
+offline serving numbers, ``gateway_*`` keys).
+
+``--smoke`` is the CI leg: a short trace, then hard assertions that SSE
+frames arrived *incrementally* (a stream that buffers until completion
+has first-frame == last-frame time), that sampled streams are
+seed-reproducible, that a mid-stream disconnect frees its KV pages, and
+that shutdown is clean.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import write_bench_json  # noqa: E402
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# minimal asyncio HTTP client (stdlib only, one connection per request)
+
+
+async def _read_head(reader) -> Tuple[int, Dict[str, str]]:
+    line = await reader.readline()
+    status = int(line.split()[1])
+    headers: Dict[str, str] = {}
+    while True:
+        raw = await reader.readline()
+        if raw in (b"\r\n", b"\n", b""):
+            return status, headers
+        k, _, v = raw.decode("latin-1").partition(":")
+        headers[k.strip().lower()] = v.strip()
+
+
+async def request_json(host: str, port: int, method: str, path: str,
+                       body: Optional[dict] = None) -> Tuple[int, dict]:
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        payload = json.dumps(body).encode() if body is not None else b""
+        head = (f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(payload)}\r\n\r\n")
+        writer.write(head.encode() + payload)
+        await writer.drain()
+        status, _ = await _read_head(reader)
+        raw = await reader.read()
+        obj = json.loads(raw) if raw else {}
+        return status, obj
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+class StreamResult:
+    def __init__(self, rid: Optional[str] = None):
+        self.rid = rid
+        self.status: Optional[int] = None
+        self.tokens: List = []
+        self.frame_times: List[float] = []  # monotonic, per token frame
+        self.finish_reason: Optional[str] = None
+        self.t_submit = 0.0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (self.frame_times[0] - self.t_submit
+                if self.frame_times else None)
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if len(self.frame_times) < 2:
+            return None
+        return ((self.frame_times[-1] - self.frame_times[0])
+                / (len(self.frame_times) - 1))
+
+
+async def stream_completion(host: str, port: int, body: dict, *,
+                            cancel_after: Optional[int] = None
+                            ) -> StreamResult:
+    """POST a streaming completion and consume its SSE frames.
+
+    ``cancel_after=n`` disconnects after the n-th token frame — the
+    mid-flight cancellation path (the server must abort the request)."""
+    from repro.server.sse import DONE, SSEParser
+
+    res = StreamResult()
+    res.t_submit = time.monotonic()
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        payload = json.dumps({**body, "stream": True}).encode()
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+                      f"Content-Type: application/json\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload)
+        await writer.drain()
+        res.status, _ = await _read_head(reader)
+        if res.status != 200:
+            res.finish_reason = f"http_{res.status}"
+            return res
+        parser = SSEParser()
+        while True:
+            chunk = await reader.read(4096)
+            if not chunk:
+                return res
+            for event in parser.feed(chunk):
+                if event == DONE:
+                    return res
+                obj = json.loads(event)
+                if res.rid is None:
+                    res.rid = obj.get("id")
+                choice = obj["choices"][0]
+                toks = choice["delta"]["token_ids"]
+                if toks:
+                    res.tokens.extend(toks)
+                    res.frame_times.append(time.monotonic())
+                if choice["finish_reason"]:
+                    res.finish_reason = choice["finish_reason"]
+            if cancel_after is not None and len(res.tokens) >= cancel_after:
+                res.finish_reason = "client_cancelled"
+                return res  # close the socket mid-stream
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# load generation
+
+
+def _pct(vals: List[float], q: float) -> float:
+    if not vals:
+        return float("nan")
+    vals = sorted(vals)
+    i = min(len(vals) - 1, int(q * (len(vals) - 1) + 0.5))
+    return vals[i]
+
+
+async def run_load(host: str, port: int, *, requests: int, rate: float,
+                   prompt_len: int, gen_len: int, vocab: int, seed: int,
+                   temperature: float) -> Tuple[List[StreamResult], float]:
+    """Open-loop Poisson arrivals; every request is an SSE stream."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    t0 = time.monotonic()
+
+    async def one(i: int, delay: float) -> StreamResult:
+        await asyncio.sleep(delay)
+        body = {"prompt": rng.integers(0, vocab, (prompt_len,)).tolist(),
+                "max_tokens": gen_len, "temperature": temperature,
+                "seed": int(rng.integers(0, 2**31)), "top_k": 50}
+        return await stream_completion(host, port, body)
+
+    delays, t = [], 0.0
+    for _ in range(requests):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        delays.append(t)
+    results = await asyncio.gather(
+        *[one(i, d) for i, d in enumerate(delays)])
+    return list(results), time.monotonic() - t0
+
+
+def percentiles(results: List[StreamResult]) -> Dict[str, float]:
+    ttfts = [r.ttft for r in results if r.ttft is not None]
+    tpots = [r.tpot for r in results if r.tpot is not None]
+    toks = sum(len(r.tokens) for r in results)
+    return {
+        "gateway_completed": float(
+            sum(r.finish_reason in ("stop", "length", "capacity")
+                for r in results)),
+        "gateway_rejected": float(
+            sum((r.finish_reason or "").startswith("http_")
+                for r in results)),
+        "gateway_tokens": float(toks),
+        "gateway_ttft_p50_s": _pct(ttfts, 0.50),
+        "gateway_ttft_p95_s": _pct(ttfts, 0.95),
+        "gateway_tpot_p50_s": _pct(tpots, 0.50),
+        "gateway_tpot_p95_s": _pct(tpots, 0.95),
+    }
+
+
+# ---------------------------------------------------------------------------
+# in-process server (no --target)
+
+
+def _boot(arch: str, smoke: bool, slots: int, max_len: int,
+          page_size: Optional[int], max_queue: int):
+    import jax
+
+    from repro.configs import get_config, get_rules, get_smoke_config
+    from repro.core.lns import LNSFormat
+    from repro.core.quantizer import QuantConfig
+    from repro.distributed.sharding import shard_ctx
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim.madam import MadamConfig
+    from repro.serving import Engine
+    from repro.server.driver import EngineDriver
+    from repro.training import init_train_state
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    mesh = make_host_mesh(data=jax.device_count())
+    with shard_ctx(mesh, get_rules(arch)):
+        params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    engine = Engine(cfg, qcfg, mcfg, params, num_slots=slots,
+                    max_len=max_len, page_size=page_size)
+    driver = EngineDriver(engine, max_inflight=max_queue).start()
+    return cfg, engine, driver
+
+
+async def _amain(args) -> Dict[str, float]:
+    driver = gateway = engine = None
+    if args.target:
+        host, _, port = args.target.rpartition("//")[-1].rpartition(":")
+        host, port = host or "127.0.0.1", int(port)
+        vocab = args.vocab
+    else:
+        from repro.server.app import Gateway
+        cfg, engine, driver = _boot(args.arch, args.smoke, args.slots,
+                                    args.max_len, args.page_size,
+                                    args.max_queue)
+        gateway = await Gateway(driver, port=0, model=cfg.name).start()
+        host, port = gateway.address
+        vocab = cfg.vocab_size
+        print(f"in-process gateway on {host}:{port} "
+              f"(arch={cfg.name} slots={args.slots} "
+              f"page_size={args.page_size})")
+
+    try:
+        # warm the jit caches so percentiles measure serving, not compiles
+        warm = await stream_completion(host, port, {
+            "prompt": list(range(1, min(args.prompt_len, 8) + 1)),
+            "max_tokens": 2})
+        assert warm.status == 200, f"warmup failed: {warm.status}"
+
+        results, wall = await run_load(
+            host, port, requests=args.requests, rate=args.rate,
+            prompt_len=args.prompt_len, gen_len=args.gen_len,
+            vocab=vocab, seed=args.seed, temperature=args.temperature)
+        out = percentiles(results)
+        out["gateway_wall_s"] = wall
+        out["gateway_offered_rps"] = args.rate
+
+        # queue wait is a server-side number: admission timestamps live in
+        # the engine clock, so read it off /metrics
+        status, stats = await request_json(host, port, "GET", "/metrics")
+        assert status == 200, f"/metrics failed: {status}"
+        out["gateway_queued_p50_s"] = stats.get("queued_p50_s", float("nan"))
+        out["gateway_queued_p95_s"] = stats.get("queued_p95_s", float("nan"))
+
+        if args.smoke:
+            await _smoke_asserts(host, port, results, stats, engine)
+        return out
+    finally:
+        if gateway is not None:
+            await gateway.stop()
+        if driver is not None:
+            driver.shutdown()
+            assert not driver.alive, "driver thread failed to stop"
+
+
+async def _smoke_asserts(host, port, results, stats, engine) -> None:
+    """CI-leg invariants (in-process server only for the page checks)."""
+    # every stream finished and its frames arrived incrementally — a
+    # gateway that buffers until completion collapses all frame times
+    for r in results:
+        assert r.finish_reason in ("stop", "length"), \
+            f"stream ended with {r.finish_reason}"
+        assert len(r.frame_times) >= 2, "stream produced < 2 token frames"
+        assert r.frame_times[-1] > r.frame_times[0], \
+            "SSE frames were not incremental (all arrived at once)"
+    # sampled outputs are reproducible per seed
+    body = {"prompt": [3, 1, 4, 1, 5], "max_tokens": 6,
+            "temperature": 0.8, "top_k": 50, "seed": 1234}
+    a = await stream_completion(host, port, body)
+    b = await stream_completion(host, port, body)
+    assert a.tokens == b.tokens and len(a.tokens) == 6, \
+        f"seeded sampling not reproducible: {a.tokens} vs {b.tokens}"
+    c = await stream_completion(host, port, {**body, "seed": 99})
+    assert c.tokens != a.tokens, "distinct seeds produced identical output"
+    # mid-stream disconnect aborts the request and frees its pages
+    if engine is not None and engine.page_size:
+        before = engine.allocator.available
+        r = await stream_completion(
+            host, port, {"prompt": [1, 2, 3, 4], "max_tokens": 64},
+            cancel_after=2)
+        assert r.finish_reason == "client_cancelled"
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            if not engine.scheduler.running \
+                    and engine.allocator.available >= before:
+                break
+            await asyncio.sleep(0.05)
+        assert engine.allocator.available >= before, \
+            "cancelled stream leaked KV pages"
+    print("gateway smoke asserts passed: incremental SSE, seeded "
+          "reproducibility, cancellation frees pages")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke config + CI invariants")
+    ap.add_argument("--target", default=None,
+                    help="URL of an already-running gateway "
+                         "(default: boot one in-process)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/s (0 = burst)")
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=32)
+    ap.add_argument("--vocab", type=int, default=512,
+                    help="prompt id range when using --target")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.requests is None:
+        args.requests = 6 if args.smoke else 16
+
+    out = asyncio.run(_amain(args))
+
+    # merge into the offline serving trajectory (benchmarks/serving.py
+    # writes the same file earlier in the CI job — keep its keys)
+    path = os.path.join(_ROOT, "BENCH_serving.json")
+    merged: Dict[str, float] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(out)
+    write_bench_json("serving", merged)
+
+    print("name,us_per_call,derived")
+    print(f"gateway_ttft_p50,{out['gateway_ttft_p50_s'] * 1e6:.1f},"
+          f"p95={out['gateway_ttft_p95_s']:.3f}s")
+    print(f"gateway_tpot_p50,{out['gateway_tpot_p50_s'] * 1e6:.1f},"
+          f"p95={out['gateway_tpot_p95_s']:.3f}s")
+    print(f"gateway_queued_p50,{out['gateway_queued_p50_s'] * 1e6:.1f},"
+          f"p95={out['gateway_queued_p95_s']:.3f}s")
+    print(f"gateway_wall,{out['gateway_wall_s'] * 1e6:.1f},"
+          f"completed={int(out['gateway_completed'])}/"
+          f"{args.requests} rejected={int(out['gateway_rejected'])} "
+          f"tokens={int(out['gateway_tokens'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,29 @@
 """Serving CLI: a thin driver over the continuous-batching engine.
 
-Builds a mixed-length synthetic request trace, initializes the model in
-the packed 8-bit LNS serving format, and drives ``repro.serving.Engine``
-— variable-length requests are admitted into freed decode slots mid-run,
-finished sequences release their KV rows, and per-request TTFT / latency /
-tokens-per-second are reported alongside the aggregate goodput.
+Offline (default): builds a mixed-length synthetic request trace,
+initializes the model in the packed 8-bit LNS serving format, and drives
+``repro.serving.Engine`` — variable-length requests are admitted into
+freed decode slots mid-run, finished sequences release their KV rows, and
+per-request TTFT / latency / tokens-per-second are reported alongside the
+aggregate goodput.
 
   python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 8 --slots 4 --prompt-len 32 --gen-len 32
+
+Online (``--http HOST:PORT``): boots the asyncio gateway
+(``repro.server``) over the same engine instead of replaying a trace —
+OpenAI-style ``POST /v1/completions`` with per-request sampling and SSE
+token streaming, ``DELETE /v1/requests/{id}`` mid-flight cancellation,
+``GET /health`` / ``GET /metrics``. Ctrl-C shuts down cleanly (live
+requests are aborted, their slots and KV pages released).
+
+  python -m repro.launch.serve --arch smollm-135m --smoke \
+      --http 127.0.0.1:8000
+  curl -N localhost:8000/v1/completions -d \
+      '{"prompt": [1,2,3], "max_tokens": 8, "stream": true}'
 """
 import argparse
+import asyncio
 
 import jax
 
@@ -21,6 +35,35 @@ from repro.launch.mesh import make_host_mesh
 from repro.optim.madam import MadamConfig
 from repro.serving import Engine, max_trace_len, synthetic_trace
 from repro.training import init_train_state
+
+
+def _serve_http(engine, http: str, model: str, max_queue: int) -> None:
+    """Run the online gateway until interrupted; clean shutdown aborts
+    live requests so their slots and KV pages are released."""
+    from repro.server.app import Gateway
+    from repro.server.driver import EngineDriver
+
+    host, _, port = http.rpartition(":")
+    driver = EngineDriver(engine, max_inflight=max_queue).start()
+
+    async def _run():
+        gw = await Gateway(driver, host=host or "127.0.0.1",
+                           port=int(port or 8000), model=model).start()
+        h, p = gw.address
+        print(f"gateway listening on http://{h}:{p}  "
+              f"(slots={engine.num_slots} max_len={engine.max_len} "
+              f"max_queue={max_queue})", flush=True)
+        try:
+            await gw.serve_forever()
+        finally:
+            await gw.stop()
+
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        print("shutting down: aborting live requests", flush=True)
+    finally:
+        driver.shutdown()
 
 
 def main():
@@ -46,6 +89,15 @@ def main():
                          "slots * ceil(max_len / page_size))")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="serve online over HTTP/SSE instead of replaying "
+                         "a synthetic trace (port 0 = ephemeral)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="per-slot cache capacity (online mode; offline "
+                         "derives it from the trace distribution)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission-control watermark: live requests "
+                         "beyond this are refused with 429")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,11 +115,15 @@ def main():
               f"(packed {args.serve_bits}-bit LNS codes + scales)")
 
         lengths = "uniform" if args.mixed else "fixed"
-        max_len = max_trace_len(args.prompt_len, args.gen_len, lengths)
+        max_len = args.max_len or max_trace_len(args.prompt_len,
+                                                args.gen_len, lengths)
         engine = Engine(cfg, qcfg, mcfg, state.params,
                         num_slots=args.slots, max_len=max_len,
                         page_size=args.page_size, num_pages=args.num_pages,
                         prefix_cache=not args.no_prefix_cache)
+        if args.http:
+            _serve_http(engine, args.http, cfg.name, args.max_queue)
+            return
         trace = synthetic_trace(cfg, requests=args.requests,
                                 prompt_len=args.prompt_len,
                                 gen_len=args.gen_len, lengths=lengths,

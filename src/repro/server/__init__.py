@@ -1,0 +1,30 @@
+"""Online serving gateway over the continuous-batching engine.
+
+Modules
+-------
+sampling  — ``SamplingParams`` + the on-device batch sampler the engine
+            fuses into its jitted decode step
+protocol  — OpenAI-style JSON request/response schema for the HTTP API
+sse       — server-sent-events framing (encode + incremental parser)
+driver    — ``EngineDriver``: the thread that owns the engine, with a
+            thread-safe submit/abort mailbox and admission control
+app       — the asyncio HTTP front-end (``Gateway``)
+
+``driver`` and ``app`` are imported lazily: ``serving.engine`` imports
+``repro.server.sampling`` for the sampler, and an eager import here
+would close the cycle back through ``driver -> serving``.
+"""
+from repro.server.sampling import GREEDY, SamplingParams, sample_logits
+
+__all__ = ["GREEDY", "SamplingParams", "sample_logits",
+           "EngineDriver", "Gateway"]
+
+_LAZY = {"EngineDriver": "repro.server.driver", "Gateway": "repro.server.app"}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

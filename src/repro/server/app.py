@@ -1,0 +1,266 @@
+"""Asyncio HTTP/SSE gateway over the engine driver (stdlib only).
+
+A deliberately small HTTP/1.1 server (``asyncio.start_server`` + hand
+parsing — the container bakes no web framework) exposing:
+
+  POST   /v1/completions     token-id completions; ``"stream": true``
+                             switches to SSE with one frame per token
+                             flushed as it is produced (TTFT, not
+                             completion time) and a ``data: [DONE]``
+                             terminator
+  DELETE /v1/requests/{id}   cancel a live request mid-flight
+  GET    /health             liveness (503 once the driver stops)
+  GET    /metrics            driver snapshot + rolling latency summary
+
+Backpressure: the driver's inflight watermark maps to **429**, a dead
+driver to **503**. A streaming client that disconnects (curl ^C, browser
+tab close) is detected by EOF on its socket and the request is aborted —
+its decode slot and KV pages free mid-flight without perturbing
+co-batched requests. Responses close the connection (``Connection:
+close``); per-request connections keep cancellation semantics trivial.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import Optional, Tuple
+
+from repro.server import protocol, sse
+from repro.server.driver import EngineDriver
+
+__all__ = ["Gateway"]
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            429: "Too Many Requests", 500: "Internal Server Error",
+            503: "Service Unavailable"}
+
+
+def _http_head(status: int, content_type: str,
+               length: Optional[int] = None) -> bytes:
+    head = [f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}",
+            f"Content-Type: {content_type}",
+            "Connection: close"]
+    if length is not None:
+        head.append(f"Content-Length: {length}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode()
+
+
+class _AsyncSink:
+    """Thread-safe bridge: driver-thread events -> an asyncio queue."""
+
+    def __init__(self, loop: asyncio.AbstractEventLoop):
+        self.queue: "asyncio.Queue[tuple]" = asyncio.Queue()
+        self._loop = loop
+
+    def __call__(self, event: tuple) -> None:
+        try:
+            self._loop.call_soon_threadsafe(self.queue.put_nowait, event)
+        except RuntimeError:
+            pass  # loop already closed (shutdown) — the client is gone
+
+
+class Gateway:
+    def __init__(self, driver: EngineDriver, *, host: str = "127.0.0.1",
+                 port: int = 8000, model: str = "lns-madam"):
+        self._driver = driver
+        self._host, self._port = host, port
+        self._model = model
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        """Actual (host, port) — resolves port 0 after ``start()``."""
+        assert self._server is not None, "gateway not started"
+        return self._server.sockets[0].getsockname()[:2]
+
+    async def start(self) -> "Gateway":
+        self._server = await asyncio.start_server(
+            self._handle_conn, self._host, self._port)
+        return self
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    # ------------------------------------------------------------------
+    # connection handling
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            # one deadline over the whole request parse — a half-sent
+            # head or short body must not pin the connection forever
+            method, path, body = await asyncio.wait_for(
+                self._read_request(reader), timeout=30.0)
+            if method is None:
+                return
+            await self._route(method, path, body, reader, writer)
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.TimeoutError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    @staticmethod
+    async def _read_request(reader: asyncio.StreamReader):
+        """Parse request line, headers, and Content-Length body; returns
+        (None, None, None) on a malformed request line."""
+        head = await reader.readline()
+        parts = head.decode("latin-1").split()
+        if len(parts) < 2:
+            return None, None, None
+        method, path = parts[0].upper(), parts[1]
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode("latin-1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        body = b""
+        n = int(headers.get("content-length", 0) or 0)
+        if n:
+            body = await reader.readexactly(n)
+        return method, path, body
+
+    async def _route(self, method: str, path: str, body: bytes,
+                     reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        path = path.split("?", 1)[0]
+        if method == "GET" and path == "/health":
+            ok = self._driver.alive
+            await self._json(writer, 200 if ok else 503,
+                             {"status": "ok" if ok else "stopping"})
+        elif method == "GET" and path == "/metrics":
+            await self._json(writer, 200, self._driver.stats())
+        elif method == "DELETE" and path.startswith("/v1/requests/"):
+            tail = path.rsplit("/", 1)[-1].removeprefix("cmpl-")
+            if not tail.isdigit():
+                await self._error(writer, 404, f"unknown request id {tail!r}")
+                return
+            self._driver.abort(int(tail))
+            await self._json(writer, 200, {"id": f"cmpl-{tail}",
+                                           "aborting": True})
+        elif method == "POST" and path == "/v1/completions":
+            await self._completions(body, reader, writer)
+        else:
+            await self._error(writer, 404, f"no route for {method} {path}")
+
+    async def _json(self, writer, status: int, obj) -> None:
+        # percentiles are NaN until the first completion; bare NaN is not
+        # RFC-8259 JSON and breaks strict parsers (jq, fetch().json())
+        obj = {k: (None if isinstance(v, float) and v != v else v)
+               for k, v in obj.items()} if isinstance(obj, dict) else obj
+        payload = json.dumps(obj, allow_nan=False).encode()
+        writer.write(_http_head(status, "application/json", len(payload)))
+        writer.write(payload)
+        await writer.drain()
+
+    async def _error(self, writer, status: int, message: str) -> None:
+        payload = protocol.error_body(message, status).encode()
+        writer.write(_http_head(status, "application/json", len(payload)))
+        writer.write(payload)
+        await writer.drain()
+
+    # ------------------------------------------------------------------
+    # completions
+
+    async def _completions(self, body: bytes, reader, writer) -> None:
+        try:
+            creq = protocol.parse_completion(body)
+        except protocol.ProtocolError as e:
+            await self._error(writer, e.status, str(e))
+            return
+        if not self._driver.alive:
+            await self._error(writer, 503, "server is shutting down")
+            return
+        sink = _AsyncSink(asyncio.get_running_loop())
+        try:
+            rid = self._driver.submit(creq.prompt, creq.max_tokens,
+                                      sampling=creq.sampling, sink=sink)
+        except ValueError as e:
+            await self._error(writer, 400, str(e))
+            return
+        if rid is None:
+            await self._error(writer, 429,
+                              "engine at capacity, retry with backoff")
+            return
+        if creq.stream:
+            await self._stream(rid, creq, sink, reader, writer)
+        else:
+            await self._unary(rid, creq, sink, reader, writer)
+
+    async def _events(self, rid: int, sink: _AsyncSink, reader):
+        """Yield the request's sink events; EOF on the request socket
+        (client went away) aborts the request and ends the iteration —
+        both response modes must free the slot and KV pages mid-flight."""
+        disconnect = asyncio.ensure_future(reader.read())
+        try:
+            while True:
+                getter = asyncio.ensure_future(sink.queue.get())
+                done, _ = await asyncio.wait(
+                    {getter, disconnect},
+                    return_when=asyncio.FIRST_COMPLETED)
+                if getter not in done:
+                    getter.cancel()
+                    self._driver.abort(rid)
+                    return
+                event = getter.result()
+                yield event
+                if event[0] != "token":
+                    return
+        finally:
+            if not disconnect.done():
+                disconnect.cancel()
+            elif not disconnect.cancelled():
+                # a hard reset (RST, not FIN) parks an exception on the
+                # watch future; retrieve it or asyncio logs a warning
+                disconnect.exception()
+
+    async def _unary(self, rid: int, creq, sink: _AsyncSink,
+                     reader, writer) -> None:
+        tokens, reason = [], None
+        async for event in self._events(rid, sink, reader):
+            if event[0] == "token":
+                tokens.append(event[1])
+            else:
+                reason = event[1]
+                if event[2] is not None:
+                    tokens = event[2]
+        if reason is None:
+            return  # client disconnected; request aborted, nothing to say
+        status = 500 if reason == "error" else 200
+        payload = protocol.completion_body(
+            rid, self._model, len(creq.prompt), tokens, reason).encode()
+        writer.write(_http_head(status, "application/json", len(payload)))
+        writer.write(payload)
+        await writer.drain()
+
+    async def _stream(self, rid: int, creq, sink: _AsyncSink,
+                      reader, writer) -> None:
+        writer.write(_http_head(200, "text/event-stream"))
+        await writer.drain()
+        try:
+            async for event in self._events(rid, sink, reader):
+                if event[0] == "token":
+                    writer.write(sse.encode_event(protocol.chunk_body(
+                        rid, self._model, [event[1]])))
+                    await writer.drain()
+                else:
+                    writer.write(sse.encode_event(protocol.chunk_body(
+                        rid, self._model, [], finish_reason=event[1])))
+                    writer.write(sse.encode_event(sse.DONE))
+                    await writer.drain()
+        except (ConnectionError, OSError):
+            self._driver.abort(rid)

@@ -1,0 +1,260 @@
+"""Engine driver thread: the bridge between the asyncio gateway and the
+synchronous continuous-batching engine.
+
+The engine is single-threaded by construction (jit caches, host-side slot
+mirrors), so exactly one thread may touch it. ``EngineDriver`` owns that
+thread and exposes a thread-safe surface:
+
+- ``submit()`` / ``abort()`` post commands to a FIFO **mailbox**; the
+  driver drains it between engine steps, so commands land at step
+  granularity (an abort can catch a request mid-queue, mid-prefill —
+  admitted but not yet decoded — or mid-decode).
+- **admission control**: at most ``max_inflight`` requests may be live
+  (queued + running). ``submit()`` refuses above that watermark and the
+  gateway answers 429 — the mailbox never becomes an unbounded buffer in
+  front of the bounded engine queue.
+- **streaming**: the engine's ``token_sink`` / ``finish_sink`` fire inside
+  the driver thread; the driver routes them to the per-request ``sink``
+  callables handed to ``submit()``. Sinks must be thread-safe (the
+  gateway uses ``loop.call_soon_threadsafe`` into per-request asyncio
+  queues) and fast — they run on the decode hot path.
+- ``stats()`` returns a snapshot (occupancy counters + the rolling
+  latency summary) refreshed once per loop iteration.
+
+Events a sink receives: ``("token", tok)`` per generated token and one
+terminal ``("finish", reason, token_list | None)`` with reason in
+``{"stop", "length", "capacity", "aborted", "error"}``.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Optional, Sequence
+
+from repro.serving.engine import Engine
+from repro.serving.metrics import summarize
+from repro.serving.request import Request
+from repro.server.sampling import SamplingParams
+
+__all__ = ["EngineDriver"]
+
+Sink = Callable[[tuple], None]
+
+
+class EngineDriver:
+    def __init__(self, engine: Engine, *, max_inflight: int = 64,
+                 poll_s: float = 0.02, metrics_window: int = 4096):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self._engine = engine
+        self._max_inflight = max_inflight
+        self._poll_s = poll_s
+        self._mail: "queue.Queue[tuple]" = queue.Queue()
+        self._sinks: Dict[int, Sink] = {}      # driver thread only
+        self._lock = threading.Lock()
+        self._rids = itertools.count()
+        self._inflight = 0
+        self._aborted_total = 0
+        self._errors = 0
+        self._metrics = deque(maxlen=metrics_window)
+        self._stats: Dict[str, Any] = {}
+        self._t_start = time.monotonic()
+        self._stopping = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name="engine-driver", daemon=True)
+        engine.token_sink = self._on_token
+        engine.finish_sink = self._on_finish
+        # seed the snapshot so stats() is complete before the loop's
+        # first iteration (a /metrics probe can land that early)
+        self._refresh_stats()
+
+    # ------------------------------------------------------------------
+    # public surface (any thread)
+
+    def start(self) -> "EngineDriver":
+        self._thread.start()
+        return self
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive() and not self._stopping.is_set()
+
+    def submit(self, prompt: Sequence, max_new_tokens: int, *,
+               sampling: Optional[SamplingParams] = None,
+               eos_id=None, sink: Sink) -> Optional[int]:
+        """Enqueue a request; returns its rid, or None when the inflight
+        watermark is hit (gateway backpressure — answer 429).
+
+        Raises ValueError for requests the engine can never host (prompt
+        longer than the cache / page pool) — a 400, not backpressure."""
+        eng = self._engine
+        eng.validate(len(prompt), max_new_tokens)
+        if not self.alive:
+            return None
+        with self._lock:
+            if self._inflight >= self._max_inflight:
+                return None
+            self._inflight += 1
+            rid = next(self._rids)
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                      arrival=eng.now(), eos_id=eos_id, sampling=sampling)
+        self._mail.put(("submit", req, sink))
+        if not self._thread.is_alive():
+            # raced shutdown: the put may have landed after the loop's
+            # (and shutdown's) final drain — nobody will read it now, so
+            # fail it here rather than hang the connection (idempotent:
+            # whichever drain got the command first fires the sink)
+            self._fail_pending()
+        return rid
+
+    def abort(self, rid: int) -> None:
+        """Request cancellation; resolved in the driver thread at the next
+        step boundary (idempotent, unknown rids ignored)."""
+        self._mail.put(("abort", rid))
+
+    def stats(self) -> Dict[str, Any]:
+        """Latest per-loop snapshot + rolling latency summary."""
+        with self._lock:
+            out = dict(self._stats)
+            mets = list(self._metrics)
+            out["inflight"] = self._inflight
+            out["aborted_total"] = self._aborted_total
+            out["errors"] = self._errors
+        wall = time.monotonic() - self._t_start
+        out.update(summarize(mets, wall))
+        return out
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Stop the loop: live requests are aborted (sinks get their
+        terminal event), then the thread exits."""
+        if not self._thread.is_alive():
+            return
+        self._stopping.set()
+        self._mail.put(("stop",))
+        self._thread.join(timeout)
+        # a submit() that passed the alive check concurrently with the
+        # stop may have mailed after the loop's final drain — fail it
+        # here (the thread is dead, nobody else reads the mailbox)
+        self._fail_pending()
+
+    def _fail_pending(self) -> None:
+        """Drain the mailbox, terminating any un-processed submits so no
+        connection hangs on a request that will never run."""
+        while True:
+            try:
+                cmd = self._mail.get_nowait()
+            except queue.Empty:
+                return
+            if cmd[0] == "submit":
+                _, req, sink = cmd
+                with self._lock:
+                    self._inflight -= 1
+                    self._errors += 1
+                sink(("finish", "error", None))
+
+    # ------------------------------------------------------------------
+    # engine callbacks (driver thread)
+
+    def _on_token(self, rid: int, tok) -> None:
+        sink = self._sinks.get(rid)
+        if sink is not None:
+            sink(("token", tok))
+
+    def _on_finish(self, rid: int, reason: str, rs) -> None:
+        sink = self._sinks.pop(rid, None)
+        with self._lock:
+            self._inflight -= 1
+            if reason == "aborted":
+                self._aborted_total += 1
+        if sink is not None:
+            sink(("finish", reason, list(rs.generated) if rs else None))
+
+    # ------------------------------------------------------------------
+    # driver thread
+
+    def _handle(self, cmd: tuple) -> None:
+        kind = cmd[0]
+        if kind == "submit":
+            _, req, sink = cmd
+            self._sinks[req.rid] = sink
+            try:
+                self._engine.submit(req)
+            except Exception as e:  # safety net — submit() prevalidates
+                self._sinks.pop(req.rid, None)
+                with self._lock:
+                    self._inflight -= 1
+                    self._errors += 1
+                sink(("finish", "error", None))
+                _ = e
+        elif kind == "abort":
+            self._engine.abort(cmd[1])
+
+    def _loop(self) -> None:
+        eng = self._engine
+        while True:
+            busy = bool(eng.scheduler.running) or bool(eng.queue)
+            cmds = []
+            try:
+                if not busy:  # idle: sleep on the mailbox
+                    cmds.append(self._mail.get(timeout=self._poll_s))
+                while True:
+                    cmds.append(self._mail.get_nowait())
+            except queue.Empty:
+                pass
+            stop = any(c[0] == "stop" for c in cmds)
+            for cmd in cmds:
+                if cmd[0] != "stop":
+                    self._handle(cmd)
+            if stop or self._stopping.is_set():
+                self._stopping.set()
+                for rid in list(self._sinks):
+                    eng.abort(rid)
+                self._fail_pending()
+                self._refresh_stats()
+                return
+            try:
+                eng.step()
+            except Exception:
+                # a dying engine must not leave streams hanging: every
+                # live sink gets a terminal event, /health flips to 503
+                self._stopping.set()
+                for rid, sink in list(self._sinks.items()):
+                    sink(("finish", "error", None))
+                    self._sinks.pop(rid, None)
+                    with self._lock:
+                        self._inflight -= 1
+                        self._errors += 1
+                self._fail_pending()  # submits mailed during the fatal step
+                self._refresh_stats()
+                raise
+            # archive completions and keep the engine's retained state
+            # bounded (token lists already reached the sinks)
+            if eng.completed:
+                with self._lock:
+                    self._metrics.extend(eng.completed)
+            if eng.finished or eng.aborted:
+                eng.drain_finished()
+            self._refresh_stats()
+
+    def _refresh_stats(self) -> None:
+        eng = self._engine
+        snap = {
+            "running": len(eng.scheduler.running),
+            "queued": len(eng.queue),
+            "free_slots": eng.scheduler.free_slots,
+            "num_slots": eng.num_slots,
+            "max_inflight": self._max_inflight,
+            "decode_steps": eng.decode_steps,
+            "prefills": eng.prefills,
+            "decode_compiles": eng.decode_compiles,
+            "prefill_compiles": eng.prefill_compiles,
+        }
+        if eng.page_size:
+            snap["kv_pages_available"] = eng.allocator.available
+            snap["kv_pages_total"] = eng.num_pages
+            snap["prefix_hits"] = eng.prefix_hits
+        with self._lock:
+            self._stats = snap

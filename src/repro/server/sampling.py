@@ -1,0 +1,166 @@
+"""Per-request sampling parameters and the on-device batch sampler.
+
+``SamplingParams`` is the wire-level contract of the gateway (temperature /
+top-k / top-p / seed / stop-token set); ``sample_logits`` is the jit-safe
+sampler the engine fuses into its decode step. Every parameter is a
+**per-slot batch input** — a ``(B,)`` array, never a Python constant baked
+into the trace — so a request with new sampling settings reuses the
+compiled decode step instead of triggering a recompile.
+
+Determinism: the PRNG key for a sample event is
+``fold_in(fold_in(PRNGKey(seed), step), codebook)`` where ``step`` counts
+the tokens the request has produced so far (prefill sample = step 0).
+The chain depends only on the request's seed and its own progress — not
+on the slot it landed in, the co-batched requests, or wall-clock time —
+so a seeded request replays token-for-token on any engine.
+
+``temperature == 0`` is exact greedy (argmax over the raw logits, first
+maximum wins — bit-identical to the host-side ``np.argmax`` the engine
+used before sampling moved on device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "GREEDY", "sample_logits", "sampling_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into a token.
+
+    temperature: 0 => greedy argmax; > 0 => softmax sampling.
+    top_k:       keep the k highest logits (0 => disabled).
+    top_p:       keep the smallest prefix of the sorted distribution with
+                 cumulative probability >= top_p (1.0 => disabled).
+    seed:        per-request PRNG seed (folded with the token index, so
+                 equal seeds replay token-for-token).
+    stop:        extra stop-token ids, unioned with ``Request.eos_id``.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop: FrozenSet[int] = frozenset()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not isinstance(self.stop, frozenset):
+            object.__setattr__(self, "stop", frozenset(int(t) for t in self.stop))
+        # PRNGKey consumes 32 bits; normalize so any int seed round-trips
+        object.__setattr__(self, "seed", int(self.seed) & 0xFFFFFFFF)
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+# dtype layout of the per-slot parameter arrays the engine feeds the
+# jitted sampler ("step" is the per-request sample-event counter)
+ROW_DTYPES = {"temp": np.float32, "top_k": np.int32, "top_p": np.float32,
+              "seed": np.uint32, "step": np.int32}
+
+
+def sampling_rows(batch: int) -> Dict[str, np.ndarray]:
+    """Host-side per-slot sampling state, initialized to greedy."""
+    rows = {k: np.zeros((batch,), dt) for k, dt in ROW_DTYPES.items()}
+    rows["top_p"][:] = 1.0
+    return rows
+
+
+def set_row(rows: Dict[str, np.ndarray], slot: int,
+            sp: Optional[SamplingParams]) -> None:
+    """Bind slot ``slot`` to ``sp`` (None => greedy), step reset to 0."""
+    sp = sp or GREEDY
+    rows["temp"][slot] = sp.temperature
+    rows["top_k"][slot] = sp.top_k
+    rows["top_p"][slot] = sp.top_p
+    rows["seed"][slot] = sp.seed
+    rows["step"][slot] = 0
+
+
+def _mask_sample(scaled: jax.Array, top_k: jax.Array, top_p: jax.Array,
+                 gumbel: jax.Array) -> jax.Array:
+    """Top-k / top-p masked gumbel-argmax for one row ``(V,)``. The
+    gumbel noise is indexed by *token id* (gathered through the sort
+    order), so a row with ``k=0, p=1`` draws exactly what the sort-free
+    path would — a request's tokens never depend on whether a neighbour
+    in the batch forced the masked branch."""
+    v = scaled.shape[-1]
+    order = jnp.argsort(-scaled)                 # descending, stable
+    ranked = scaled[order]
+    k_eff = jnp.where(top_k <= 0, v, jnp.minimum(top_k, v))
+    ranked = jnp.where(jnp.arange(v) < k_eff, ranked, -jnp.inf)
+    probs = jax.nn.softmax(ranked)
+    # nucleus: keep ranks whose *exclusive* cumulative mass is < top_p —
+    # at least the top token always survives
+    keep_p = (jnp.cumsum(probs) - probs) < top_p
+    ranked = jnp.where(keep_p, ranked, -jnp.inf)
+    return order[jnp.argmax(ranked + gumbel[order])].astype(jnp.int32)
+
+
+def _row_key(seed: jax.Array, step: jax.Array, codebook) -> jax.Array:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.fold_in(key, codebook)
+
+
+def _batch_sample(lg, temp, top_k, top_p, seed, step, codebook) -> jax.Array:
+    """Sample one batch of rows ``(B, V)`` -> ``(B,)`` int32.
+
+    Layered fast paths (``lax.cond`` on runtime params, shapes fixed, so
+    none of this recompiles): an all-greedy batch pays one argmax and
+    never touches the PRNG; a temperature-only batch adds gumbel noise
+    but skips the sort (XLA's CPU sort is ~15x an argmax); only batches
+    with an active top-k / top-p row pay for the per-row sort."""
+    v = lg.shape[-1]
+    lg = lg.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def sampled():
+        keys = jax.vmap(lambda s, st: _row_key(s, st, codebook))(seed, step)
+        gumbel = jax.vmap(
+            lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
+        scaled = lg / jnp.maximum(temp, 1e-6)[:, None]
+        toks = jax.lax.cond(
+            jnp.any((top_k > 0) | (top_p < 1.0)),
+            lambda: jax.vmap(_mask_sample)(scaled, top_k, top_p, gumbel),
+            lambda: jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32))
+        return jnp.where(temp > 0.0, toks, greedy)
+
+    return jax.lax.cond(jnp.any(temp > 0.0), sampled, lambda: greedy)
+
+
+def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
+                  num_codebooks: int = 0,
+                  vocab_size: Optional[int] = None) -> jax.Array:
+    """Batch sampler: ``logits (B, V)`` (or ``(B, K*V)`` for codebook
+    stacks) + per-slot parameter arrays -> token ids ``(B,)`` / ``(B, K)``.
+
+    Safe to run over idle slots (the engine resets them to greedy); only
+    shapes are traced, so admissions never recompile the decode step.
+    """
+    temp, top_k = rows["temp"], rows["top_k"]
+    top_p, seed, step = rows["top_p"], rows["seed"], rows["step"]
+    if num_codebooks:
+        b = logits.shape[0]
+        lg = logits.reshape(b, num_codebooks, vocab_size)
+        # static python loop: each codebook keeps its own lax.cond fast
+        # path (a vmap over the batch would lower cond to select and
+        # make every batch pay the masked-sort branch)
+        cols = [_batch_sample(lg[:, j], temp, top_k, top_p, seed, step, j)
+                for j in range(num_codebooks)]
+        return jnp.stack(cols, axis=1)
+    return _batch_sample(logits, temp, top_k, top_p, seed, step, 0)

@@ -38,6 +38,15 @@ whole request lifetime: routed GEMMs decode tile-locally through
 the engine never materializes the tree and loads training checkpoints
 with zero re-encoding (same bytes on disk, in the train state, and here).
 
+Online serving: sampling runs **on device inside the jitted decode step**
+— temperature / top-k / top-p / seed are per-slot ``(B,)`` batch inputs
+(``repro.server.sampling``), so per-request settings never recompile and
+only the sampled token ids cross to the host. Each appended token fires
+``token_sink`` and each terminal transition fires ``finish_sink`` (the
+gateway's stream hooks), ``abort()`` cancels a request mid-queue or
+mid-flight (slot + KV pages released, co-batched rows undisturbed), and
+``drain_finished()`` bounds the archives for long-lived callers.
+
 Padding-safety: right-padded prefill is exact for *dense* attention caches
 (the padded keys sit beyond the rewound cursor, masked and later
 overwritten) and for *paged* pools (pad writes past a slot's page span are
@@ -50,7 +59,7 @@ correctness first, one extra compile per distinct length second.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +69,7 @@ from repro.core.quantizer import QuantConfig
 from repro.models.common import ArchConfig
 from repro.models.model import forward, init_caches
 from repro.optim.madam import MadamConfig
+from repro.server.sampling import sample_logits, sampling_rows, set_row
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
 from repro.serving.scheduler import BlockAllocator, Scheduler
@@ -137,9 +147,22 @@ class Engine:
             self.num_pages = 0
             self._prefix_ok = False
 
-        self._decode_fn = jax.jit(
-            build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll),
-            donate_argnums=(1,))
+        decode = build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll)
+
+        def decode_sample(params, caches, batch, pos, samp):
+            # sampling fused into the decode jit: logits never leave the
+            # device, only the (B,)/(B, K) token ids transfer
+            logits, caches = decode(params, caches, batch, pos)
+            return self._sample_impl(logits, samp), caches
+
+        self._decode_fn = jax.jit(decode_sample, donate_argnums=(1,))
+        self._sample_fn = jax.jit(self._sample_impl)  # prefill logits
+        # per-token / terminal event hooks (the gateway driver's taps);
+        # called synchronously from step()/_admit() with (rid, token) and
+        # (rid, reason, RequestState | None)
+        self.token_sink: Optional[Callable[[int, Any], None]] = None
+        self.finish_sink: Optional[
+            Callable[[int, str, Optional[RequestState]], None]] = None
         # one fused call per admission: batch-1 prefill through the decode
         # path + scatter of the produced rows into the engine cache
         impl = self._prefill_paged_impl if self._paged else self._prefill_impl
@@ -169,15 +192,21 @@ class Engine:
         self._slot_len = np.zeros((self.num_slots,), np.int64)
         tok_width = (cfg.num_codebooks,) if cfg.num_codebooks else ()
         self._last_tok = np.zeros((self.num_slots,) + tok_width, np.int32)
+        # per-slot sampling params + sample-event counters (batch inputs
+        # of the fused decode step; idle slots park at greedy)
+        self._samp = sampling_rows(self.num_slots)
         self.completed: List[RequestMetrics] = []
         self.finished: List[RequestState] = []  # keeps generated tokens
+        self.aborted: List[RequestState] = []   # cancelled mid-flight
         self._run_sink: Optional[List[RequestMetrics]] = None
         self.decode_steps = 0
         self.prefills = 0
         self.prefill_tokens = 0          # padded tokens actually prefilled
         self.prefix_hits = 0             # admissions that reused pages
         self.prefix_reused_tokens = 0    # prompt tokens skipped via reuse
-        self._t0: Optional[float] = None
+        # eager epoch: now() is read from other threads (online arrival
+        # stamps) — lazy init would race the first step()'s _now()
+        self._t0: Optional[float] = time.monotonic()
 
     @property
     def allocator(self) -> Optional[BlockAllocator]:
@@ -299,17 +328,27 @@ class Engine:
         reset engine re-runs a trace with warm jit caches (benchmarks)."""
         self._reset_state()
 
+    def validate(self, prompt_len: int, max_new_tokens: int = 0) -> None:
+        """Raise ValueError if a request of this shape can *never* be
+        hosted (prompt beyond the cache, page demand beyond the pool) —
+        the one admission formula, shared by ``submit()`` and the online
+        gateway's pre-flight check (a 400, not backpressure)."""
+        if prompt_len > self.max_len:
+            raise ValueError(f"prompt len {prompt_len} exceeds engine "
+                             f"max_len {self.max_len}")
+        if self._paged:
+            need = self._pages_for(prompt_len, max_new_tokens)
+            if need > self.num_pages:
+                raise ValueError(f"needs {need} KV pages, pool holds "
+                                 f"{self.num_pages}")
+
     def submit(self, req: Request) -> None:
         # reject before any slot is bound: failing later (inside _admit)
         # would leak the already-occupied slot and wedge the engine
-        if req.prompt_len > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt len {req.prompt_len} exceeds "
-                f"engine max_len {self.max_len}")
-        if self._paged and self._pages_needed(req) > self.num_pages:
-            raise ValueError(
-                f"request {req.rid}: needs {self._pages_needed(req)} KV "
-                f"pages, pool holds {self.num_pages}")
+        try:
+            self.validate(req.prompt_len, req.max_new_tokens)
+        except ValueError as e:
+            raise ValueError(f"request {req.rid}: {e}") from None
         self.queue.push(req)
 
     def _now(self) -> float:
@@ -317,22 +356,35 @@ class Engine:
             self._t0 = time.monotonic()
         return time.monotonic() - self._t0
 
-    def _greedy(self, logits) -> np.ndarray:
-        lg = np.asarray(logits, np.float32)
-        if self.cfg.num_codebooks:
-            lg = lg.reshape(lg.shape[0], self.cfg.num_codebooks,
-                            self.cfg.vocab_size)
-        return np.argmax(lg, axis=-1).astype(np.int32)
+    def now(self) -> float:
+        """Engine-clock timestamp (seconds since first use) — online
+        callers stamp ``Request.arrival`` with this so queue-wait and
+        TTFT share the engine's timebase."""
+        return self._now()
+
+    def _sample_impl(self, logits, samp):
+        """On-device sampler body (jitted standalone for prefill logits,
+        inlined into the decode jit for the hot loop)."""
+        return sample_logits(logits, samp,
+                             num_codebooks=self.cfg.num_codebooks,
+                             vocab_size=self.cfg.vocab_size)
+
+    def _samp_row(self, slot: int) -> Dict[str, jax.Array]:
+        """Batch-1 view of one slot's sampling params (prefill sample)."""
+        return {k: jnp.asarray(v[slot:slot + 1])
+                for k, v in self._samp.items()}
 
     # ------------------------------------------------------------------
     # paged admission bookkeeping (host side)
 
-    def _pages_needed(self, req: Request) -> int:
+    def _pages_for(self, prompt_len: int, max_new_tokens: int) -> int:
         """Worst-case pages a request holds: its prompt plus the budget's
         decode writes (the final token is returned but never cached)."""
-        n_pos = min(req.prompt_len + max(req.max_new_tokens - 1, 0),
-                    self.max_len)
+        n_pos = min(prompt_len + max(max_new_tokens - 1, 0), self.max_len)
         return -(-n_pos // self.page_size)
+
+    def _pages_needed(self, req: Request) -> int:
+        return self._pages_for(req.prompt_len, req.max_new_tokens)
 
     def _reserve_pages(self, req: Request) -> Optional[Dict[str, Any]]:
         """Match the prompt's cached prefix and reserve this request's
@@ -440,13 +492,17 @@ class Engine:
                 jnp.asarray(tokens), jnp.asarray(plen, jnp.int32),
                 jnp.asarray(rs.slot, jnp.int32))
 
-        tok = self._greedy(logits)[0]
+        set_row(self._samp, rs.slot, req.sampling)  # sample event 0
+        tok = np.asarray(self._sample_fn(logits, self._samp_row(rs.slot)))[0]
+        self._samp["step"][rs.slot] = 1
         self.prefills += 1
         self.prefill_tokens += bucket
         self._slot_len[rs.slot] = plen
         self._last_tok[rs.slot] = tok
         rs.generated.append(tok.tolist() if tok.ndim else int(tok))
         rs.t_first_token = clock()
+        if self.token_sink is not None:
+            self.token_sink(req.rid, rs.generated[-1])
         self._maybe_finish(rs, clock)
 
     def _maybe_finish(self, rs: RequestState, clock) -> None:
@@ -455,21 +511,58 @@ class Engine:
         # itself is usable — finishing one step earlier wasted it)
         full = self._slot_len[rs.slot] >= self.max_len
         if rs.done or full:
-            rs.t_finish = clock()
-            self.scheduler.release(rs.slot)
-            if self._paged:
-                pages = self._slot_pages[rs.slot]
-                if pages:
-                    self.allocator.release(pages)
-                self._slot_pages[rs.slot] = None
-                # stale decode writes from the recycled row must land in
-                # the null page, never in someone else's live pages
-                self._block_tables[rs.slot] = self._null_page
+            budget = len(rs.generated) >= rs.request.max_new_tokens
+            reason = ("stop" if rs.hit_stop else
+                      "length" if budget else "capacity")
+            self._finish(rs, clock, reason)
+
+    def _finish(self, rs: RequestState, clock, reason: str) -> None:
+        """Terminal transition: stamp the state, release the slot and its
+        KV pages, archive, and fire ``finish_sink``."""
+        rs.t_finish = clock()
+        rs.finish_reason = reason
+        self.scheduler.release(rs.slot)
+        set_row(self._samp, rs.slot, None)  # idle slots sample greedy
+        if self._paged:
+            pages = self._slot_pages[rs.slot]
+            if pages:
+                self.allocator.release(pages)
+            self._slot_pages[rs.slot] = None
+            # stale decode writes from the recycled row must land in
+            # the null page, never in someone else's live pages
+            self._block_tables[rs.slot] = self._null_page
+        if reason == "aborted":
+            self.aborted.append(rs)
+        else:
             self.finished.append(rs)
-            m = RequestMetrics.from_state(rs, truncated=not rs.done and full)
+            m = RequestMetrics.from_state(rs, truncated=reason == "capacity")
             self.completed.append(m)
             if self._run_sink is not None:
                 self._run_sink.append(m)
+        if self.finish_sink is not None:
+            self.finish_sink(rs.request.rid, reason, rs)
+
+    def abort(self, rid: int, now: Optional[float] = None) -> bool:
+        """Cancel a request mid-queue, mid-prefill, or mid-decode.
+
+        A queued request is simply dropped; a running one releases its
+        slot and (paged mode) its KV pages immediately — refcounts return
+        to baseline and the co-batched rows never see a perturbation
+        (their cache rows, cursors, and sampling chains are untouched).
+        Returns False if ``rid`` is not live here (already finished or
+        never submitted) — aborts are naturally racy, callers shouldn't
+        treat that as an error."""
+        clock = self._now if now is None else (lambda: now)
+        req = self.queue.remove(rid)
+        if req is not None:
+            if self.finish_sink is not None:
+                self.finish_sink(rid, "aborted", None)
+            return True
+        for rs in self.scheduler.running.values():
+            if rs.request.rid == rid:
+                self._finish(rs, clock, "aborted")
+                return True
+        return False
 
     def step(self, now: Optional[float] = None) -> bool:
         """Admit ready requests, then advance every occupied slot one
@@ -499,15 +592,21 @@ class Engine:
         batch = {"tokens": jnp.asarray(tokens)}
         if self._paged:
             batch["block_tables"] = jnp.asarray(self._block_tables)
-        logits, self.caches = self._decode_fn(
-            self.params, self.caches, batch, pos)
-        toks = self._greedy(logits)
+        samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
+        toks_dev, self.caches = self._decode_fn(
+            self.params, self.caches, batch, pos, samp)
+        # token ids only — logits stay on device (np.asarray of a jax
+        # array is a read-only view; copy so _last_tok stays writable)
+        toks = np.array(toks_dev)
         self.decode_steps += 1
         self._slot_len += 1  # every row's in-graph cursor advanced by 1
+        self._samp["step"] += 1
         self._last_tok = toks
         for slot, rs in list(self.scheduler.running.items()):
             t = toks[slot]
             rs.generated.append(t.tolist() if t.ndim else int(t))
+            if self.token_sink is not None:
+                self.token_sink(rs.request.rid, rs.generated[-1])
             self._maybe_finish(rs, clock)
         return True
 
@@ -519,6 +618,7 @@ class Engine:
         completions in a run-local sink, not by slicing ``completed``."""
         out, self.finished = self.finished, []
         self.completed = []
+        self.aborted = []
         return out
 
     def run(self, requests: Sequence[Request] = ()) -> Dict[str, float]:

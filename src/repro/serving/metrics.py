@@ -20,7 +20,8 @@ class RequestMetrics:
     prompt_len: int
     new_tokens: int
     # capacity-truncated: the slot ran out of cache positions before the
-    # request reached EOS or its token budget — not a normal completion
+    # request reached a stop token or its token budget — not a normal
+    # completion
     truncated: bool = False
 
     @property
@@ -29,8 +30,21 @@ class RequestMetrics:
         return self.t_first_token - self.arrival
 
     @property
+    def queued_s(self) -> float:
+        """Time spent waiting for a slot (arrival -> admission)."""
+        return self.t_admit - self.arrival
+
+    @property
     def latency(self) -> float:
         return self.t_finish - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the decode phase (first token ->
+        finish); None for single-token requests."""
+        if self.new_tokens < 2 or self.t_finish <= self.t_first_token:
+            return None
+        return (self.t_finish - self.t_first_token) / (self.new_tokens - 1)
 
     @property
     def decode_tps(self) -> Optional[float]:
@@ -61,6 +75,8 @@ def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
     total_new = sum(m.new_tokens for m in metrics)
     ttfts = sorted(m.ttft for m in metrics)
     lats = sorted(m.latency for m in metrics)
+    queued = sorted(m.queued_s for m in metrics)
+    tpots = sorted(m.tpot for m in metrics if m.tpot is not None)
     return {
         "completed": float(len(metrics)),
         "truncated": float(sum(m.truncated for m in metrics)),
@@ -71,4 +87,8 @@ def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
         "ttft_p95_s": _pct(ttfts, 0.95),
         "latency_p50_s": _pct(lats, 0.50),
         "latency_p95_s": _pct(lats, 0.95),
+        "queued_p50_s": _pct(queued, 0.50),
+        "queued_p95_s": _pct(queued, 0.95),
+        "tpot_p50_s": _pct(tpots, 0.50),
+        "tpot_p95_s": _pct(tpots, 0.95),
     }

@@ -9,3 +9,21 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def smoke_serving_setup():
+    """One smollm-smoke packed-LNS param tree shared by the serving-layer
+    test modules (engine construction stays per-test; params init is the
+    expensive part)."""
+    from repro.configs import get_smoke_config
+    from repro.core.lns import LNSFormat
+    from repro.core.quantizer import QuantConfig
+    from repro.optim.madam import MadamConfig
+    from repro.training import init_train_state
+
+    cfg = get_smoke_config("smollm-135m")
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    return cfg, qcfg, mcfg, params

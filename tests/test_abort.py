@@ -1,0 +1,118 @@
+"""Mid-flight cancellation: abort a request mid-queue, mid-prefill, and
+mid-decode on both the dense and the paged engine. Slots must recycle,
+the page allocator must return to its free-page baseline, and surviving
+co-batched requests must produce token-for-token identical output to an
+abort-free run."""
+import numpy as np
+import pytest
+
+from repro.serving import Engine, Request
+
+pytestmark = pytest.mark.parametrize(
+    "page_size", [None, 4], ids=["dense", "paged"])
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (n,), dtype=np.int32).tolist()
+
+
+def _mk_engine(setup, page_size, **kw):
+    cfg, qcfg, mcfg, params = setup
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    return Engine(cfg, qcfg, mcfg, params, page_size=page_size, **kw)
+
+
+def _baseline(eng):
+    return eng.allocator.available if eng.page_size else None
+
+
+def _assert_allocator_at_baseline(eng, baseline):
+    if eng.page_size:
+        assert eng.allocator.available == baseline
+        assert not eng.allocator._ref     # every refcount returned to 0
+
+
+def test_abort_mid_queue(smoke_serving_setup, page_size):
+    cfg = smoke_serving_setup[0]
+    eng = _mk_engine(smoke_serving_setup, page_size, num_slots=1)
+    base = _baseline(eng)
+    events = []
+    eng.finish_sink = lambda rid, reason, rs: events.append((rid, reason))
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 8), max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=_prompt(cfg, 8, 1), max_new_tokens=4))
+    eng.step()                       # admits rid 0 only (one slot)
+    assert len(eng.queue) == 1
+    assert eng.abort(1)              # still queued: dropped, no slot bound
+    assert not eng.queue
+    while eng.scheduler.running:
+        eng.step()
+    assert [rs.request.rid for rs in eng.finished] == [0]
+    assert len(eng.finished[0].generated) == 4
+    assert (1, "aborted") in events and (0, "length") in events
+    _assert_allocator_at_baseline(eng, base)
+
+
+def test_abort_mid_prefill(smoke_serving_setup, page_size):
+    """Cancel right after admission (prefill done, no decode yet): the
+    slot and its pages must free, and the engine must admit a fresh
+    request into the recycled slot."""
+    cfg = smoke_serving_setup[0]
+    eng = _mk_engine(smoke_serving_setup, page_size, num_slots=1)
+    base = _baseline(eng)
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 8), max_new_tokens=8))
+    eng.step()                       # admission + first decode
+    rs0 = next(iter(eng.scheduler.running.values()))
+    assert rs0.request.rid == 0 and len(rs0.generated) >= 1
+    assert eng.abort(0)
+    assert not eng.scheduler.running and eng.scheduler.free_slots == 1
+    _assert_allocator_at_baseline(eng, base)
+    assert eng.aborted[0].finish_reason == "aborted"
+
+    eng.run([Request(rid=1, prompt=_prompt(cfg, 8), max_new_tokens=3)])
+    assert len(eng.finished) == 1 and eng.finished[0].slot == 0
+
+
+def test_abort_mid_decode_survivors_unperturbed(smoke_serving_setup,
+                                                page_size):
+    """The acceptance-criterion scenario: cancel one of two co-batched
+    streams mid-decode; the survivor's tokens must equal an abort-free
+    run and the allocator must return to baseline."""
+    cfg = smoke_serving_setup[0]
+    doomed = lambda: Request(rid=1, prompt=_prompt(cfg, 7, 1),
+                             max_new_tokens=10)
+
+    ref = _mk_engine(smoke_serving_setup, page_size)
+    ref.run([Request(rid=0, prompt=_prompt(cfg, 9), max_new_tokens=10)])
+    want = ref.finished[0].generated
+
+    eng = _mk_engine(smoke_serving_setup, page_size)
+    base = _baseline(eng)
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, 9), max_new_tokens=10))
+    eng.submit(doomed())
+    for _ in range(4):               # both admitted + a few decode steps
+        eng.step()
+    assert len(eng.scheduler.running) == 2
+    assert eng.abort(1)
+    assert len(eng.scheduler.running) == 1
+    while eng.scheduler.running:
+        eng.step()
+    assert eng.finished[0].request.rid == 0
+    assert eng.finished[0].generated == want
+    aborted = eng.aborted[0]
+    assert aborted.request.rid == 1 and 0 < len(aborted.generated) < 10
+    _assert_allocator_at_baseline(eng, base)
+    # the freed slot is admissible again
+    eng.run([Request(rid=2, prompt=_prompt(cfg, 5, 2), max_new_tokens=2)])
+    assert len(eng.finished) == 2
+
+
+def test_abort_unknown_or_finished_rid_is_noop(smoke_serving_setup,
+                                               page_size):
+    cfg = smoke_serving_setup[0]
+    eng = _mk_engine(smoke_serving_setup, page_size, num_slots=1)
+    eng.run([Request(rid=0, prompt=_prompt(cfg, 6), max_new_tokens=2)])
+    assert not eng.abort(0)          # already finished
+    assert not eng.abort(123)        # never submitted
+    assert len(eng.finished) == 1 and not eng.aborted

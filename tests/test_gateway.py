@@ -1,0 +1,349 @@
+"""End-to-end gateway tests: real sockets against the asyncio HTTP/SSE
+front-end over a live engine driver — streaming, per-request sampling,
+mid-flight cancellation (DELETE and client disconnect), backpressure, and
+protocol validation."""
+import asyncio
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import Engine
+from repro.server import protocol
+from repro.server.app import Gateway
+from repro.server.driver import EngineDriver
+from repro.server.sse import DONE, SSEParser
+
+
+# ---------------------------------------------------------------------------
+# protocol unit tests (no sockets)
+
+
+def test_parse_completion_validates():
+    ok = protocol.parse_completion(
+        b'{"prompt": [1,2,3], "max_tokens": 4, "temperature": 0.5,'
+        b' "top_k": 10, "seed": 9, "stop": 7, "stream": true}')
+    assert ok.prompt == [1, 2, 3] and ok.max_tokens == 4 and ok.stream
+    assert ok.sampling.temperature == 0.5 and ok.sampling.stop == {7}
+
+    bad = [b"", b"[]", b'{"prompt": []}', b'{"prompt": "hi"}',
+           b'{"prompt": [1], "max_tokens": 0}',
+           b'{"prompt": [1], "temperature": -1}',
+           b'{"prompt": [1], "top_p": 0}',
+           b'{"prompt": [1], "stream": "yes"}',
+           b'{"prompt": [1], "stop": ["x"]}',
+           b'{"prompt": [[1,2],[3]]}']
+    for body in bad:
+        with pytest.raises(protocol.ProtocolError):
+            protocol.parse_completion(body)
+
+
+def test_parse_completion_codebook_rows():
+    ok = protocol.parse_completion(b'{"prompt": [[1,2],[3,4]]}')
+    assert ok.prompt == [[1, 2], [3, 4]]
+
+
+def test_sse_parser_framing():
+    p = SSEParser()
+    # byte-at-a-time chunking reassembles events
+    out = []
+    for i in range(len(b"data: hello\n\ndata: [DONE]\n\n")):
+        out += p.feed(b"data: hello\n\ndata: [DONE]\n\n"[i:i + 1])
+    assert out == ["hello", "[DONE]"]
+    # mixed CRLF/LF framing stays two distinct events, and a CR-split
+    # across chunks doesn't drop a line
+    p = SSEParser()
+    assert p.feed(b"data: a\r\n\r\ndata: b\n\n") == ["a", "b"]
+    p = SSEParser()
+    assert p.feed(b"data: c\r") == []
+    assert p.feed(b"\n\r\ndata: d\n\r\n") == ["c", "d"]
+    # multi-line data joins; comment/event fields are ignored
+    p = SSEParser()
+    assert p.feed(b": ping\nevent: x\ndata: 1\ndata: 2\n\n") == ["1\n2"]
+
+
+# ---------------------------------------------------------------------------
+# live-gateway fixture
+
+SLOTS, MAX_LEN, PAGE = 2, 48, 4
+
+
+@pytest.fixture(scope="module")
+def live_gateway(smoke_serving_setup):
+    """(engine, driver, host, port) with the gateway running on a
+    background event-loop thread for the whole module."""
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    engine = Engine(cfg, qcfg, mcfg, params, num_slots=SLOTS,
+                    max_len=MAX_LEN, page_size=PAGE)
+    driver = EngineDriver(engine, max_inflight=SLOTS + 2).start()
+
+    import threading
+    loop = asyncio.new_event_loop()
+    started = {}
+
+    def run_loop():
+        asyncio.set_event_loop(loop)
+        gw = loop.run_until_complete(
+            Gateway(driver, port=0, model=cfg.name).start())
+        started["gw"] = gw
+        started["addr"] = gw.address
+        loop.run_forever()
+
+    t = threading.Thread(target=run_loop, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10
+    while "addr" not in started and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert "addr" in started, "gateway failed to start"
+    host, port = started["addr"]
+    yield engine, driver, host, port
+    asyncio.run_coroutine_threadsafe(started["gw"].stop(), loop).result(5)
+    loop.call_soon_threadsafe(loop.stop)
+    t.join(5)
+    driver.shutdown()
+    assert not driver.alive
+
+
+# small blocking client helpers (tests run in the main thread; the
+# gateway loop lives on its own thread, so plain sockets are fine)
+
+
+def _client(fn):
+    return asyncio.run(fn)
+
+
+async def _http(host, port, method, path, body=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                 + payload)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, data = raw.partition(b"\r\n\r\n")
+    status = int(head.split()[1])
+    return status, json.loads(data) if data else {}
+
+
+async def _stream(host, port, body, *, cancel_after=None, delete_via=None):
+    """Returns (status, frames, frame_times, finish_reason)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = json.dumps({**body, "stream": True}).encode()
+    writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                 + payload)
+    await writer.drain()
+    head = b""
+    while b"\r\n\r\n" not in head:
+        chunk = await reader.read(1)
+        assert chunk, "connection closed before response head"
+        head += chunk
+    status = int(head.split()[1])
+    parser, tokens, times, reason, rid = SSEParser(), [], [], None, None
+    if status != 200:
+        writer.close()
+        return status, tokens, times, reason
+    while True:
+        chunk = await reader.read(4096)
+        if not chunk:
+            break
+        done = False
+        for ev in parser.feed(chunk):
+            if ev == DONE:
+                done = True
+                break
+            obj = json.loads(ev)
+            rid = rid or obj["id"]
+            choice = obj["choices"][0]
+            if choice["delta"]["token_ids"]:
+                tokens.extend(choice["delta"]["token_ids"])
+                times.append(time.monotonic())
+            if choice["finish_reason"]:
+                reason = choice["finish_reason"]
+        if done:
+            break
+        if cancel_after is not None and len(tokens) >= cancel_after:
+            break  # close the socket mid-stream (client disconnect)
+        if delete_via is not None and len(tokens) >= 1 and rid:
+            await _http(host, port, "DELETE", f"/v1/requests/{rid}")
+            delete_via = None  # fire once, keep consuming the stream
+    writer.close()
+    return status, tokens, times, reason
+
+
+def _prompt(cfg_vocab, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg_vocab, (n,), dtype=np.int32).tolist()
+
+
+# ---------------------------------------------------------------------------
+# e2e
+
+
+def test_health_and_metrics(live_gateway):
+    _, _, host, port = live_gateway
+    status, obj = _client(_http(host, port, "GET", "/health"))
+    assert status == 200 and obj["status"] == "ok"
+    status, obj = _client(_http(host, port, "GET", "/metrics"))
+    assert status == 200
+    for key in ("running", "queued", "inflight", "decode_steps",
+                "queued_p50_s", "tpot_p50_s", "kv_pages_available"):
+        assert key in obj
+
+
+def test_unary_completion(live_gateway):
+    engine, _, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    status, obj = _client(_http(
+        host, port, "POST", "/v1/completions",
+        {"prompt": _prompt(vocab, 6), "max_tokens": 4}))
+    assert status == 200
+    choice = obj["choices"][0]
+    assert len(choice["token_ids"]) == 4
+    assert choice["finish_reason"] == "length"
+    assert obj["usage"]["completion_tokens"] == 4
+
+
+def test_streaming_is_incremental_and_seed_reproducible(live_gateway):
+    engine, _, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    body = {"prompt": _prompt(vocab, 8), "max_tokens": 6,
+            "temperature": 0.8, "top_k": 50, "seed": 77}
+    status, toks_a, times, reason = _client(_stream(host, port, body))
+    assert status == 200 and reason == "length"
+    assert len(toks_a) == 6 and len(times) == 6
+    assert times[-1] > times[0], "frames did not arrive incrementally"
+    status, toks_b, _, _ = _client(_stream(host, port, body))
+    assert toks_a == toks_b
+    status, toks_c, _, _ = _client(_stream(host, port,
+                                           {**body, "seed": 78}))
+    assert toks_a != toks_c
+
+
+def test_delete_aborts_streaming_request(live_gateway):
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    status, toks, _, reason = _client(_stream(
+        host, port, {"prompt": _prompt(vocab, 6), "max_tokens": 40},
+        delete_via=True))
+    assert status == 200
+    assert reason == "aborted"
+    assert 1 <= len(toks) < 40
+
+
+def test_client_disconnect_frees_slot_and_pages(live_gateway):
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    baseline = engine.allocator.available
+    status, toks, _, _ = _client(_stream(
+        host, port, {"prompt": _prompt(vocab, 6), "max_tokens": 40},
+        cancel_after=2))
+    assert status == 200 and len(toks) >= 2
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:
+        if not engine.scheduler.running \
+                and engine.allocator.available >= baseline:
+            break
+        time.sleep(0.05)
+    assert not engine.scheduler.running, "abort did not release the slot"
+    assert engine.allocator.available >= baseline, "KV pages leaked"
+    assert driver.stats()["aborted_total"] >= 1
+
+
+def test_unary_disconnect_aborts_request(live_gateway):
+    """A non-streaming client that drops its connection must not keep a
+    slot and KV pages pinned until the token budget runs out."""
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    aborted0 = driver.stats()["aborted_total"]
+
+    async def drop_unary():
+        reader, writer = await asyncio.open_connection(host, port)
+        payload = json.dumps({"prompt": _prompt(vocab, 6),
+                              "max_tokens": 4000}).encode()
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload)
+        await writer.drain()
+        writer.close()          # walk away before any response
+
+    _client(drop_unary())
+    deadline = time.monotonic() + 15
+    while time.monotonic() < deadline:
+        if driver.stats()["aborted_total"] > aborted0 \
+                and not engine.scheduler.running:
+            break
+        time.sleep(0.05)
+    assert driver.stats()["aborted_total"] > aborted0, \
+        "unary disconnect did not abort the request"
+    assert not engine.scheduler.running
+
+
+def test_backpressure_429_then_drains(live_gateway):
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+
+    async def scenario():
+        # saturate the inflight watermark with slow streams...
+        max_inflight = driver._max_inflight
+        streams = [asyncio.ensure_future(_stream(
+            host, port, {"prompt": _prompt(vocab, 4, seed=i),
+                         "max_tokens": 30}))
+            for i in range(max_inflight)]
+        # ...wait until all are live server-side, then one more must 429
+        deadline = time.monotonic() + 15
+        while time.monotonic() < deadline:
+            if driver.stats()["inflight"] >= max_inflight:
+                break
+            await asyncio.sleep(0.02)
+        status, obj = await _http(
+            host, port, "POST", "/v1/completions",
+            {"prompt": _prompt(vocab, 4), "max_tokens": 2})
+        results = await asyncio.gather(*streams)
+        return status, obj, results
+
+    status, obj, results = _client(scenario())
+    assert status == 429
+    assert obj["error"]["type"] == "rate_limit_exceeded"
+    assert all(r[3] == "length" for r in results)  # saturators finish
+    # and the system drains: a fresh request succeeds afterwards
+    status, obj = _client(_http(host, port, "POST", "/v1/completions",
+                                {"prompt": _prompt(vocab, 4),
+                                 "max_tokens": 2}))
+    assert status == 200
+
+
+def test_bad_requests_get_400_not_a_wedged_slot(live_gateway):
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    status, obj = _client(_http(host, port, "POST", "/v1/completions",
+                                {"prompt": "not tokens"}))
+    assert status == 400
+    # over-capacity prompt is a 400 (engine can never host it), not 429
+    status, obj = _client(_http(
+        host, port, "POST", "/v1/completions",
+        {"prompt": _prompt(vocab, MAX_LEN + 1), "max_tokens": 2}))
+    assert status == 400
+    status, _ = _client(_http(host, port, "GET", "/nope"))
+    assert status == 404
+    # engine still fully serviceable
+    status, obj = _client(_http(host, port, "POST", "/v1/completions",
+                                {"prompt": _prompt(vocab, 4),
+                                 "max_tokens": 2}))
+    assert status == 200
+
+
+def test_stop_token_finishes_stream_with_reason_stop(live_gateway):
+    engine, _, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    probe = _client(_http(host, port, "POST", "/v1/completions",
+                          {"prompt": _prompt(vocab, 7), "max_tokens": 5}))
+    toks = probe[1]["choices"][0]["token_ids"]
+    status, got, _, reason = _client(_stream(
+        host, port, {"prompt": _prompt(vocab, 7), "max_tokens": 5,
+                     "stop": [toks[1]]}))
+    assert status == 200
+    assert got == toks[:2]
+    assert reason == "stop"

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Tuple
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import write_bench_json  # noqa: E402
+from repro.serving.metrics import percentile  # noqa: E402
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -149,14 +150,6 @@ async def stream_completion(host: str, port: int, body: dict, *,
 # load generation
 
 
-def _pct(vals: List[float], q: float) -> float:
-    if not vals:
-        return float("nan")
-    vals = sorted(vals)
-    i = min(len(vals) - 1, int(q * (len(vals) - 1) + 0.5))
-    return vals[i]
-
-
 async def run_load(host: str, port: int, *, requests: int, rate: float,
                    prompt_len: int, gen_len: int, vocab: int, seed: int,
                    temperature: float) -> Tuple[List[StreamResult], float]:
@@ -195,10 +188,10 @@ def percentiles(results: List[StreamResult]) -> Dict[str, float]:
             sum((r.finish_reason or "").startswith("http_")
                 for r in results)),
         "gateway_tokens": float(toks),
-        "gateway_ttft_p50_s": _pct(ttfts, 0.50),
-        "gateway_ttft_p95_s": _pct(ttfts, 0.95),
-        "gateway_tpot_p50_s": _pct(tpots, 0.50),
-        "gateway_tpot_p95_s": _pct(tpots, 0.95),
+        "gateway_ttft_p50_s": percentile(ttfts, 0.50),
+        "gateway_ttft_p95_s": percentile(ttfts, 0.95),
+        "gateway_tpot_p50_s": percentile(tpots, 0.50),
+        "gateway_tpot_p95_s": percentile(tpots, 0.95),
     }
 
 
@@ -266,11 +259,14 @@ async def _amain(args) -> Dict[str, float]:
         out["gateway_offered_rps"] = args.rate
 
         # queue wait is a server-side number: admission timestamps live in
-        # the engine clock, so read it off /metrics
+        # the engine clock, so read it off /metrics. The gateway maps NaN
+        # percentiles (no completion yet) to JSON null — coerce back to
+        # NaN so arithmetic and the summary print stay number-safe.
         status, stats = await request_json(host, port, "GET", "/metrics")
         assert status == 200, f"/metrics failed: {status}"
-        out["gateway_queued_p50_s"] = stats.get("queued_p50_s", float("nan"))
-        out["gateway_queued_p95_s"] = stats.get("queued_p95_s", float("nan"))
+        for key in ("queued_p50_s", "queued_p95_s"):
+            v = stats.get(key)
+            out[f"gateway_{key}"] = float("nan") if v is None else float(v)
 
         if args.smoke:
             await _smoke_asserts(host, port, results, stats, engine)

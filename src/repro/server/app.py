@@ -31,8 +31,32 @@ from repro.server.driver import EngineDriver
 __all__ = ["Gateway"]
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            429: "Too Many Requests", 500: "Internal Server Error",
-            503: "Service Unavailable"}
+            413: "Payload Too Large", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+
+# request-parse hard limits: the prompt is token ids, so even generous
+# bodies are small — anything bigger is a client bug or abuse, refused
+# before it is buffered
+_MAX_BODY_BYTES = 8 << 20
+_MAX_HEADERS = 128
+# response-phase bounds: a client that stops reading (zero TCP window)
+# must not pin writer.drain() — and with it the handler task, socket,
+# and request — forever; and the disconnect watcher must not sink an
+# endless post-body byte stream at full socket speed
+_DRAIN_TIMEOUT_S = 60.0
+_MAX_TRAILING_BYTES = 64 << 10
+
+
+async def _drain(writer) -> None:
+    await asyncio.wait_for(writer.drain(), timeout=_DRAIN_TIMEOUT_S)
+
+
+class _BadRequest(Exception):
+    """Malformed request head/body -> an HTTP error, not a dropped task."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
 
 
 def _http_head(status: int, content_type: str,
@@ -95,10 +119,19 @@ class Gateway:
     async def _handle_conn(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
         try:
-            # one deadline over the whole request parse — a half-sent
-            # head or short body must not pin the connection forever
-            method, path, body = await asyncio.wait_for(
-                self._read_request(reader), timeout=30.0)
+            try:
+                # one deadline over the whole request parse — a half-sent
+                # head or short body must not pin the connection forever
+                method, path, body = await asyncio.wait_for(
+                    self._read_request(reader), timeout=30.0)
+            except _BadRequest as e:
+                await self._error(writer, e.status, str(e))
+                await self._discard(reader)
+                return
+            except ValueError:  # StreamReader limit: oversized line
+                await self._error(writer, 400, "request line too long")
+                await self._discard(reader)
+                return
             if method is None:
                 return
             await self._route(method, path, body, reader, writer)
@@ -113,6 +146,28 @@ class Gateway:
                 pass
 
     @staticmethod
+    async def _discard(reader) -> None:
+        """Bounded drain of request bytes still in flight after a
+        refusal: closing with unread bytes in the kernel buffer sends
+        RST and can discard the queued 4xx before the client reads it.
+        A short per-read grace plus one overall deadline — a headers-only
+        refusal costs one idle read, an actively-streaming body drains up
+        to the trailing budget, and a byte-at-a-time trickler cannot pin
+        the handler task past the deadline."""
+        async def drain() -> None:
+            budget = _MAX_TRAILING_BYTES
+            while budget > 0:
+                chunk = await asyncio.wait_for(reader.read(4096),
+                                               timeout=0.25)
+                if not chunk:
+                    return
+                budget -= len(chunk)
+        try:
+            await asyncio.wait_for(drain(), timeout=2.0)
+        except (asyncio.TimeoutError, ConnectionError, OSError):
+            pass
+
+    @staticmethod
     async def _read_request(reader: asyncio.StreamReader):
         """Parse request line, headers, and Content-Length body; returns
         (None, None, None) on a malformed request line."""
@@ -121,15 +176,28 @@ class Gateway:
         if len(parts) < 2:
             return None, None, None
         method, path = parts[0].upper(), parts[1]
-        headers = {}
+        headers, header_lines = {}, 0
         while True:
             line = await reader.readline()
             if line in (b"\r\n", b"\n", b""):
                 break
+            header_lines += 1  # count lines, not names: duplicate-name
+            if header_lines > _MAX_HEADERS:  # headers must not bypass
+                raise _BadRequest(400, "too many headers")
             k, _, v = line.decode("latin-1").partition(":")
             headers[k.strip().lower()] = v.strip()
         body = b""
-        n = int(headers.get("content-length", 0) or 0)
+        raw_n = headers.get("content-length", "0") or "0"
+        try:
+            n = int(raw_n)
+        except ValueError:
+            raise _BadRequest(
+                400, f"malformed Content-Length {raw_n!r}") from None
+        if n < 0:
+            raise _BadRequest(400, f"negative Content-Length {n}")
+        if n > _MAX_BODY_BYTES:
+            raise _BadRequest(413, f"body of {n} bytes exceeds the "
+                                   f"{_MAX_BODY_BYTES}-byte limit")
         if n:
             body = await reader.readexactly(n)
         return method, path, body
@@ -165,13 +233,13 @@ class Gateway:
         payload = json.dumps(obj, allow_nan=False).encode()
         writer.write(_http_head(status, "application/json", len(payload)))
         writer.write(payload)
-        await writer.drain()
+        await _drain(writer)
 
     async def _error(self, writer, status: int, message: str) -> None:
         payload = protocol.error_body(message, status).encode()
         writer.write(_http_head(status, "application/json", len(payload)))
         writer.write(payload)
-        await writer.drain()
+        await _drain(writer)
 
     # ------------------------------------------------------------------
     # completions
@@ -201,11 +269,26 @@ class Gateway:
         else:
             await self._unary(rid, creq, sink, reader, writer)
 
+    @staticmethod
+    async def _watch_eof(reader) -> None:
+        """Resolve only on EOF. Stray bytes after the body (a pipelined
+        request, a trailing CRLF) are drained and ignored — treating any
+        readable bytes as a disconnect would silently abort a healthy
+        request. A client that floods more than ``_MAX_TRAILING_BYTES``
+        is treated as gone instead: we will not sink an arbitrary byte
+        stream for the lifetime of the request."""
+        budget = _MAX_TRAILING_BYTES
+        while budget > 0:
+            chunk = await reader.read(4096)
+            if not chunk:
+                return
+            budget -= len(chunk)
+
     async def _events(self, rid: int, sink: _AsyncSink, reader):
         """Yield the request's sink events; EOF on the request socket
         (client went away) aborts the request and ends the iteration —
         both response modes must free the slot and KV pages mid-flight."""
-        disconnect = asyncio.ensure_future(reader.read())
+        disconnect = asyncio.ensure_future(self._watch_eof(reader))
         try:
             while True:
                 getter = asyncio.ensure_future(sink.queue.get())
@@ -245,22 +328,27 @@ class Gateway:
             rid, self._model, len(creq.prompt), tokens, reason).encode()
         writer.write(_http_head(status, "application/json", len(payload)))
         writer.write(payload)
-        await writer.drain()
+        await _drain(writer)
 
     async def _stream(self, rid: int, creq, sink: _AsyncSink,
                       reader, writer) -> None:
-        writer.write(_http_head(200, "text/event-stream"))
-        await writer.drain()
         try:
+            # head write inside the guard: a client that resets before
+            # the head flushes must abort the request, not leak it to
+            # run its full token budget against a gone socket
+            writer.write(_http_head(200, "text/event-stream"))
+            await _drain(writer)
             async for event in self._events(rid, sink, reader):
                 if event[0] == "token":
                     writer.write(sse.encode_event(protocol.chunk_body(
                         rid, self._model, [event[1]])))
-                    await writer.drain()
+                    await _drain(writer)
                 else:
                     writer.write(sse.encode_event(protocol.chunk_body(
                         rid, self._model, [], finish_reason=event[1])))
                     writer.write(sse.encode_event(sse.DONE))
-                    await writer.drain()
-        except (ConnectionError, OSError):
+                    await _drain(writer)
+        except (ConnectionError, OSError, asyncio.TimeoutError):
+            # broken socket, or a reader that stalled past the drain
+            # deadline — either way the client is gone
             self._driver.abort(rid)

@@ -58,6 +58,7 @@ class EngineDriver:
         self._rids = itertools.count()
         self._inflight = 0
         self._aborted_total = 0
+        self._completed_total = 0
         self._errors = 0
         self._metrics = deque(maxlen=metrics_window)
         self._stats: Dict[str, Any] = {}
@@ -89,9 +90,10 @@ class EngineDriver:
         watermark is hit (gateway backpressure — answer 429).
 
         Raises ValueError for requests the engine can never host (prompt
-        longer than the cache / page pool) — a 400, not backpressure."""
+        longer than the cache / page pool, or a prompt whose rank / row
+        width doesn't fit the model) — a 400, not backpressure."""
         eng = self._engine
-        eng.validate(len(prompt), max_new_tokens)
+        eng.validate(prompt, max_new_tokens)
         if not self.alive:
             return None
         with self._lock:
@@ -101,11 +103,15 @@ class EngineDriver:
             rid = next(self._rids)
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
                       arrival=eng.now(), eos_id=eos_id, sampling=sampling)
+        req._prevalidated = True  # validated above; skip the re-scan
         self._mail.put(("submit", req, sink))
-        if not self._thread.is_alive():
-            # raced shutdown: the put may have landed after the loop's
-            # (and shutdown's) final drain — nobody will read it now, so
-            # fail it here rather than hang the connection (idempotent:
+        if not self.alive:
+            # raced death: the put may have landed after the loop's (or
+            # shutdown's) final drain — on both the shutdown() path and
+            # the fatal-step path _stopping is set before that drain, so
+            # re-checking alive here catches every ordering. Nobody else
+            # will read the mailbox now; fail the submit rather than
+            # hang the connection (idempotent: queue.get is atomic, so
             # whichever drain got the command first fires the sink)
             self._fail_pending()
         return rid
@@ -116,14 +122,23 @@ class EngineDriver:
         self._mail.put(("abort", rid))
 
     def stats(self) -> Dict[str, Any]:
-        """Latest per-loop snapshot + rolling latency summary."""
+        """Latest per-loop snapshot + rolling latency summary. The
+        summary covers the metrics *window*, so its rate denominators use
+        the window's own span (engine clock) — dividing window tokens by
+        process lifetime would decay tokens_per_s toward zero on a
+        long-running server. Lifetime totals are separate counters."""
         with self._lock:
             out = dict(self._stats)
             mets = list(self._metrics)
             out["inflight"] = self._inflight
             out["aborted_total"] = self._aborted_total
+            out["completed_total"] = self._completed_total
             out["errors"] = self._errors
-        wall = time.monotonic() - self._t_start
+        if mets:
+            wall = (max(m.t_finish for m in mets)
+                    - min(m.arrival for m in mets))
+        else:
+            wall = time.monotonic() - self._t_start
         out.update(summarize(mets, wall))
         return out
 
@@ -169,6 +184,8 @@ class EngineDriver:
             self._inflight -= 1
             if reason == "aborted":
                 self._aborted_total += 1
+            elif reason == "error":
+                self._errors += 1
         if sink is not None:
             sink(("finish", reason, list(rs.generated) if rs else None))
 
@@ -235,6 +252,7 @@ class EngineDriver:
             if eng.completed:
                 with self._lock:
                     self._metrics.extend(eng.completed)
+                    self._completed_total += len(eng.completed)
             if eng.finished or eng.aborted:
                 eng.drain_finished()
             self._refresh_stats()
@@ -249,6 +267,7 @@ class EngineDriver:
             "max_inflight": self._max_inflight,
             "decode_steps": eng.decode_steps,
             "prefills": eng.prefills,
+            "admit_failures": eng.admit_failures,
             "decode_compiles": eng.decode_compiles,
             "prefill_compiles": eng.prefill_compiles,
         }

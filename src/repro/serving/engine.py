@@ -75,9 +75,16 @@ from repro.serving.request import Request, RequestQueue, RequestState
 from repro.serving.scheduler import BlockAllocator, Scheduler
 from repro.training.steps import build_decode_step
 
-__all__ = ["Engine", "DEFAULT_BUCKETS"]
+__all__ = ["Engine", "DEFAULT_BUCKETS", "ADMIT_FAIL_TRIP"]
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+# consecutive admission failures after which step() stops isolating them
+# and re-raises: one malformed request failing alone is serving as
+# intended, but *every* admission failing means the engine itself is
+# broken (device OOM, poisoned params) and masking that would keep
+# /health green on a node that can no longer serve anything
+ADMIT_FAIL_TRIP = 8
 
 # layer kinds whose KV can live in a block-paged pool (full-context,
 # non-MLA attention); everything else keeps the dense per-slot layout
@@ -201,6 +208,8 @@ class Engine:
         self._run_sink: Optional[List[RequestMetrics]] = None
         self.decode_steps = 0
         self.prefills = 0
+        self.admit_failures = 0          # requests that blew up in _admit
+        self._admit_fail_streak = 0      # consecutive; trips the engine
         self.prefill_tokens = 0          # padded tokens actually prefilled
         self.prefix_hits = 0             # admissions that reused pages
         self.prefix_reused_tokens = 0    # prompt tokens skipped via reuse
@@ -328,11 +337,39 @@ class Engine:
         reset engine re-runs a trace with warm jit caches (benchmarks)."""
         self._reset_state()
 
-    def validate(self, prompt_len: int, max_new_tokens: int = 0) -> None:
-        """Raise ValueError if a request of this shape can *never* be
-        hosted (prompt beyond the cache, page demand beyond the pool) —
-        the one admission formula, shared by ``submit()`` and the online
-        gateway's pre-flight check (a 400, not backpressure)."""
+    def validate(self, prompt: Sequence, max_new_tokens: int = 0) -> None:
+        """Raise ValueError if this request can *never* be hosted: prompt
+        beyond the cache, page demand beyond the pool, or a prompt whose
+        shape doesn't fit the model (flat ids vs per-codebook rows, wrong
+        row width — those would otherwise blow up inside the prefill jit
+        at admission time). The one admission formula, shared by
+        ``submit()`` and the online gateway's pre-flight check (a 400,
+        not backpressure)."""
+        try:
+            arr = np.asarray(prompt)
+        except ValueError:
+            raise ValueError("prompt rows must share one shape") from None
+        if arr.size and not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"prompt must hold integer token ids, got "
+                             f"dtype {arr.dtype}")
+        k = self.cfg.num_codebooks
+        if k:
+            if arr.ndim != 2 or arr.shape[1] != k:
+                raise ValueError(f"model expects prompt shape (len, {k}) — "
+                                 f"one id row per codebook — got "
+                                 f"{arr.shape}")
+        elif arr.ndim != 1:
+            raise ValueError(f"model expects a flat list of token ids, got "
+                             f"shape {arr.shape}")
+        prompt_len = arr.shape[0]
+        if prompt_len < 1:
+            raise ValueError("prompt must hold at least one token")
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            # without this, out-of-range ids are silently clamped by the
+            # embedding gather under jit and decode 200s with garbage
+            raise ValueError(f"prompt token ids must be in [0, "
+                             f"{self.cfg.vocab_size}), got [{lo}, {hi}]")
         if prompt_len > self.max_len:
             raise ValueError(f"prompt len {prompt_len} exceeds engine "
                              f"max_len {self.max_len}")
@@ -344,11 +381,14 @@ class Engine:
 
     def submit(self, req: Request) -> None:
         # reject before any slot is bound: failing later (inside _admit)
-        # would leak the already-occupied slot and wedge the engine
-        try:
-            self.validate(req.prompt_len, req.max_new_tokens)
-        except ValueError as e:
-            raise ValueError(f"request {req.rid}: {e}") from None
+        # would leak the already-occupied slot and wedge the engine.
+        # The online driver validates at its pre-flight (same formula)
+        # and marks the request, so the O(prompt) scan isn't paid twice
+        if not getattr(req, "_prevalidated", False):
+            try:
+                self.validate(req.prompt, req.max_new_tokens)
+            except ValueError as e:
+                raise ValueError(f"request {req.rid}: {e}") from None
         self.queue.push(req)
 
     def _now(self) -> float:
@@ -475,6 +515,7 @@ class Engine:
                 jnp.asarray(rs.slot, jnp.int32))
             if resv["cow"] is not None:  # content copied; drop the hold
                 self.allocator.release([resv["cow"]])
+                resv["cow"] = None  # a later unwind must not re-release
             if self._prefix_ok:  # publish this prompt's full pages
                 for i in range(plen // self.page_size):
                     self.allocator.register(resv["keys"][i], int(bt[i]))
@@ -516,11 +557,9 @@ class Engine:
                       "length" if budget else "capacity")
             self._finish(rs, clock, reason)
 
-    def _finish(self, rs: RequestState, clock, reason: str) -> None:
-        """Terminal transition: stamp the state, release the slot and its
-        KV pages, archive, and fire ``finish_sink``."""
-        rs.t_finish = clock()
-        rs.finish_reason = reason
+    def _release_slot(self, rs: RequestState) -> None:
+        """Free a terminal request's slot, sampler row, and (paged) the
+        pages recorded on the slot."""
         self.scheduler.release(rs.slot)
         set_row(self._samp, rs.slot, None)  # idle slots sample greedy
         if self._paged:
@@ -531,6 +570,13 @@ class Engine:
             # stale decode writes from the recycled row must land in
             # the null page, never in someone else's live pages
             self._block_tables[rs.slot] = self._null_page
+
+    def _finish(self, rs: RequestState, clock, reason: str) -> None:
+        """Terminal transition: stamp the state, release the slot and its
+        KV pages, archive, and fire ``finish_sink``."""
+        rs.t_finish = clock()
+        rs.finish_reason = reason
+        self._release_slot(rs)
         if reason == "aborted":
             self.aborted.append(rs)
         else:
@@ -541,6 +587,40 @@ class Engine:
                 self._run_sink.append(m)
         if self.finish_sink is not None:
             self.finish_sink(rs.request.rid, reason, rs)
+
+    def _cache_poisoned(self) -> bool:
+        """True when a failed donated call consumed the cache buffers."""
+        return any(getattr(leaf, "is_deleted", None) and leaf.is_deleted()
+                   for leaf in jax.tree.leaves(self.caches))
+
+    def _archive_error(self, rs: RequestState) -> None:
+        """Shared tail of both admission-failure paths: stamp, count,
+        archive, and fire the terminal event. Slot/page unwinding stays
+        caller-side — the reservation path never bound a slot."""
+        rs.finish_reason = "error"
+        self.admit_failures += 1
+        self._admit_fail_streak += 1
+        self.aborted.append(rs)
+        if self.finish_sink is not None:
+            self.finish_sink(rs.request.rid, "error", rs)
+
+    def _fail_admission(self, rs: RequestState, resv: Optional[Dict],
+                        clock) -> None:
+        """Unwind a failed ``_admit``: free the slot, return the page
+        reservation (wherever the failure left it), archive the state
+        with reason "error", and fire ``finish_sink`` so an online
+        caller's stream terminates instead of hanging."""
+        rs.t_finish = clock()
+        # pages recorded on the slot (failure after _admit's bookkeeping,
+        # cow already dropped) are released by the shared teardown; a
+        # failure before that point leaves the reservation ours to return
+        recorded = self._paged and self._slot_pages[rs.slot] is not None
+        self._release_slot(rs)
+        if self._paged and not recorded and resv is not None:
+            self.allocator.release(resv["shared"] + resv["fresh"])
+            if resv["cow"] is not None:
+                self.allocator.release([resv["cow"]])
+        self._archive_error(rs)
 
     def abort(self, rid: int, now: Optional[float] = None) -> bool:
         """Cancel a request mid-queue, mid-prefill, or mid-decode.
@@ -579,11 +659,57 @@ class Engine:
                 break
             resv = None
             if self._paged:
-                resv = self._reserve_pages(req)
+                try:
+                    resv = self._reserve_pages(req)
+                except Exception:
+                    # a prompt the reservation can't even hash (slipped
+                    # past validate()) fails alone, before slot binding;
+                    # archive an "error" state (slot -1: never bound) so
+                    # offline callers' accounting still balances
+                    rs = RequestState(request=req, slot=-1,
+                                      t_admit=clock())
+                    rs.t_finish = clock()
+                    self._archive_error(rs)
+                    if self._admit_fail_streak >= ADMIT_FAIL_TRIP:
+                        raise
+                    continue
                 if resv is None:  # pool exhausted: wait for a release
                     self.queue.requeue(req)
                     break
-            self._admit(self.scheduler.admit(req, clock()), clock, resv)
+            rs = self.scheduler.admit(req, clock())
+            try:
+                self._admit(rs, clock, resv)
+                self._admit_fail_streak = 0
+            except Exception:
+                # a request that blows up inside admission (a shape that
+                # slipped past validate(), a prefill-time failure) must
+                # fail alone: release its slot and reservation, fire its
+                # terminal event, and keep serving the co-batched rows —
+                # one malformed request must not take down the engine.
+                # Unless *every* admission is failing: then the engine
+                # itself is broken and the fault must propagate (503),
+                # not hide behind per-request errors.
+                if rs.finish_reason is not None:
+                    # the request already reached its terminal transition
+                    # inside _admit (1-token / instant-stop finish) and
+                    # the raise came *after* it (e.g. a sink tap) —
+                    # teardown already ran, unwinding again would
+                    # double-release pages held by live neighbours
+                    raise
+                if self._cache_poisoned():
+                    # the prefill jit donates self.caches: an
+                    # *execution*-time failure (device OOM on an
+                    # accelerator) consumed the donated buffers, so the
+                    # co-batched rows are gone too — isolation would be
+                    # a lie and the next decode step would die with a
+                    # confusing "Array deleted"; fail now, with the
+                    # real cause (trace-time failures — the bad-shape
+                    # class — never execute, so the cache stays live
+                    # and those are genuinely isolated)
+                    raise
+                self._fail_admission(rs, resv, clock)
+                if self._admit_fail_streak >= ADMIT_FAIL_TRIP:
+                    raise
         if not self.scheduler.running:
             return False
 
@@ -595,6 +721,11 @@ class Engine:
         samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
         toks_dev, self.caches = self._decode_fn(
             self.params, self.caches, batch, pos, samp)
+        # a successful decode proves the engine itself is healthy, so
+        # keep isolating whatever admissions are failing — the trip is
+        # for a broken engine, not a kill switch one bad client can pull
+        # while co-batched traffic is being served fine
+        self._admit_fail_streak = 0
         # token ids only — logits stay on device (np.asarray of a jax
         # array is a read-only view; copy so _last_tok stays writable)
         toks = np.array(toks_dev)

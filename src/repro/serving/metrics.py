@@ -6,7 +6,7 @@ from typing import Dict, List, Optional
 
 from repro.serving.request import RequestState
 
-__all__ = ["RequestMetrics", "summarize"]
+__all__ = ["RequestMetrics", "summarize", "percentile"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,20 +63,23 @@ class RequestMetrics:
                    new_tokens=len(rs.generated), truncated=truncated)
 
 
-def _pct(sorted_vals: List[float], q: float) -> float:
-    if not sorted_vals:
+def percentile(vals: List[float], q: float) -> float:
+    """Nearest-rank percentile (NaN when empty); sorts internally —
+    shared by summarize() and the gateway benchmark."""
+    if not vals:
         return float("nan")
-    i = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
-    return sorted_vals[i]
+    vals = sorted(vals)
+    i = min(len(vals) - 1, int(q * (len(vals) - 1) + 0.5))
+    return vals[i]
 
 
 def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
     """Aggregate a finished run: goodput and latency percentiles."""
     total_new = sum(m.new_tokens for m in metrics)
-    ttfts = sorted(m.ttft for m in metrics)
-    lats = sorted(m.latency for m in metrics)
-    queued = sorted(m.queued_s for m in metrics)
-    tpots = sorted(m.tpot for m in metrics if m.tpot is not None)
+    ttfts = [m.ttft for m in metrics]
+    lats = [m.latency for m in metrics]
+    queued = [m.queued_s for m in metrics]
+    tpots = [m.tpot for m in metrics if m.tpot is not None]
     return {
         "completed": float(len(metrics)),
         "truncated": float(sum(m.truncated for m in metrics)),
@@ -84,11 +87,11 @@ def summarize(metrics: List[RequestMetrics], wall: float) -> Dict[str, float]:
         "generated_tokens": float(total_new),
         "tokens_per_s": total_new / wall if wall > 0 else float("nan"),
         "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
-        "ttft_p95_s": _pct(ttfts, 0.95),
-        "latency_p50_s": _pct(lats, 0.50),
-        "latency_p95_s": _pct(lats, 0.95),
-        "queued_p50_s": _pct(queued, 0.50),
-        "queued_p95_s": _pct(queued, 0.95),
-        "tpot_p50_s": _pct(tpots, 0.50),
-        "tpot_p95_s": _pct(tpots, 0.95),
+        "ttft_p95_s": percentile(ttfts, 0.95),
+        "latency_p50_s": percentile(lats, 0.50),
+        "latency_p95_s": percentile(lats, 0.95),
+        "queued_p50_s": percentile(queued, 0.50),
+        "queued_p95_s": percentile(queued, 0.95),
+        "tpot_p50_s": percentile(tpots, 0.50),
+        "tpot_p95_s": percentile(tpots, 0.95),
     }

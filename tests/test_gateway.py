@@ -321,6 +321,10 @@ def test_bad_requests_get_400_not_a_wedged_slot(live_gateway):
     status, obj = _client(_http(host, port, "POST", "/v1/completions",
                                 {"prompt": "not tokens"}))
     assert status == 400
+    # out-of-vocab ids would be silently clamped by the embedding gather
+    status, obj = _client(_http(host, port, "POST", "/v1/completions",
+                                {"prompt": [-1, 5], "max_tokens": 2}))
+    assert status == 400 and "token ids must be in" in obj["error"]["message"]
     # over-capacity prompt is a 400 (engine can never host it), not 429
     status, obj = _client(_http(
         host, port, "POST", "/v1/completions",
@@ -333,6 +337,112 @@ def test_bad_requests_get_400_not_a_wedged_slot(live_gateway):
                                 {"prompt": _prompt(vocab, 4),
                                  "max_tokens": 2}))
     assert status == 200
+
+
+def test_shape_mismatched_prompt_is_400_not_engine_death(live_gateway):
+    """Codebook-style rows into a flat-vocab model pass the protocol
+    layer but can never run — the pre-flight must turn them into a 400;
+    the old behaviour was a crash inside step() that killed the driver
+    thread and flipped /health to 503 for everyone (remote DoS)."""
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    status, obj = _client(_http(host, port, "POST", "/v1/completions",
+                                {"prompt": [[1, 2], [3, 4]],
+                                 "max_tokens": 2}))
+    assert status == 400
+    assert "flat list" in obj["error"]["message"]
+    assert driver.alive
+    status, _ = _client(_http(host, port, "GET", "/health"))
+    assert status == 200
+    status, _ = _client(_http(host, port, "POST", "/v1/completions",
+                              {"prompt": _prompt(vocab, 4),
+                               "max_tokens": 2}))
+    assert status == 200
+
+
+def test_content_length_abuse_gets_clean_http_errors(live_gateway):
+    """Malformed / oversized / negative Content-Length must produce a
+    400/413 response, not an unhandled exception or an unbounded body
+    buffer."""
+    _, _, host, port = live_gateway
+
+    async def raw_status(head: bytes) -> int:
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(head)
+        await writer.drain()
+        data = await reader.read()
+        writer.close()
+        return int(data.split()[1])
+
+    base = b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+    assert _client(raw_status(
+        base + b"Content-Length: banana\r\n\r\n")) == 400
+    assert _client(raw_status(
+        base + b"Content-Length: 999999999999\r\n\r\n")) == 413
+    assert _client(raw_status(
+        base + b"Content-Length: -5\r\n\r\n")) == 400
+    many = b"".join(b"X-H%d: v\r\n" % i for i in range(200))
+    assert _client(raw_status(base + many + b"\r\n")) == 400
+    # duplicate-name headers count as lines, not dict keys
+    dupes = b"X-Same: v\r\n" * 200
+    assert _client(raw_status(base + dupes + b"\r\n")) == 400
+
+
+def test_trailing_bytes_after_body_are_not_a_disconnect(live_gateway):
+    """Stray bytes after the body (a pipelined request, a trailing CRLF)
+    must not trip the disconnect watcher — only EOF (or exhausting the
+    trailing-bytes budget, tested below) means the client is gone."""
+    engine, _, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+
+    async def run():
+        reader, writer = await asyncio.open_connection(host, port)
+        payload = json.dumps({"prompt": _prompt(vocab, 4),
+                              "max_tokens": 2}).encode()
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload + b"\r\n\r\n")  # stray pipelined bytes
+        await writer.drain()
+        raw = await reader.read()
+        writer.close()
+        return raw
+
+    raw = _client(run())
+    head, _, data = raw.partition(b"\r\n\r\n")
+    assert int(head.split()[1]) == 200
+    assert len(json.loads(data)["choices"][0]["token_ids"]) == 2
+
+
+def test_trailing_byte_flood_aborts_the_request(live_gateway):
+    """Past the watcher's trailing-bytes budget the peer is treated as
+    gone: the request is aborted (no response) instead of the server
+    sinking an arbitrary byte stream for the request's lifetime."""
+    engine, driver, host, port = live_gateway
+    vocab = engine.cfg.vocab_size
+    aborted0 = driver.stats()["aborted_total"]
+
+    async def run():
+        reader, writer = await asyncio.open_connection(host, port)
+        payload = json.dumps({"prompt": _prompt(vocab, 6),
+                              "max_tokens": 4000}).encode()
+        writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload + b"X" * (80 << 10))  # flood past 64 KB
+        await writer.drain()
+        raw = await asyncio.wait_for(reader.read(), timeout=30)
+        writer.close()
+        return raw
+
+    assert _client(run()) == b""  # aborted server-side: no response
+    deadline = time.monotonic() + 15
+    while time.monotonic() < deadline:
+        if driver.stats()["aborted_total"] > aborted0 \
+                and not engine.scheduler.running:
+            break
+        time.sleep(0.05)
+    assert driver.stats()["aborted_total"] > aborted0, \
+        "trailing-byte flood did not abort the request"
+    assert not engine.scheduler.running
 
 
 def test_stop_token_finishes_stream_with_reason_stop(live_gateway):

@@ -236,6 +236,109 @@ def test_oversized_prompt_rejected_before_slot_binding(serve_setup):
     assert len(eng.finished) == 1 and len(eng.finished[0].generated) == 2
 
 
+def test_shape_mismatched_prompt_rejected_at_submit(serve_setup):
+    """validate() checks prompt rank/row-width against the model, not
+    just length — codebook rows into a flat-vocab model must be a
+    submit-time ValueError (the gateway's 400), never a step() crash."""
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=16)
+    bad = [[[1, 2], [3, 4]],      # codebook rows, flat-vocab model
+           [[1, 2], [3]],         # ragged rows
+           [1.5, 2.5],            # non-integer ids
+           [-1, 2],               # negative id
+           [1, cfg.vocab_size],   # id beyond the vocab (gather clamps!)
+           []]                    # empty prompt
+    for prompt in bad:
+        with pytest.raises(ValueError):
+            eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    assert eng.scheduler.free_slots == 1 and not eng.queue
+
+
+def test_admission_failure_fails_only_offending_request(serve_setup):
+    """A malformed request that slips past validate() (pushed straight
+    into the queue) must error out alone: the engine keeps stepping and
+    the co-submitted request completes normally."""
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32)
+    events = []
+    eng.finish_sink = lambda rid, reason, rs: events.append((rid, reason))
+    eng.submit(Request(rid=0, prompt=_prompts(cfg, 1, 8)[0].tolist(),
+                       max_new_tokens=4))
+    eng.queue.push(Request(rid=1, prompt=[[1, 2], [3]],  # bypass submit()
+                           max_new_tokens=4))
+    while eng.queue or eng.scheduler.running:
+        eng.step()
+    assert eng.admit_failures == 1
+    assert (1, "error") in events and (0, "length") in events
+    assert len(eng.finished) == 1
+    assert len(eng.finished[0].generated) == 4
+    assert eng.scheduler.free_slots == 2
+
+
+def test_admission_failure_releases_page_reservation(serve_setup):
+    """When _admit blows up after pages were reserved, the reservation
+    must return to the pool and the slot must free — and the engine
+    stays serviceable."""
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32,
+                 page_size=4)
+    baseline = eng.allocator.available
+    events = []
+    eng.finish_sink = lambda rid, reason, rs: events.append((rid, reason))
+    real_prefill = eng._prefill_fn
+
+    def boom(*a, **k):
+        raise RuntimeError("prefill exploded")
+
+    eng._prefill_fn = boom
+    eng.submit(Request(rid=0, prompt=list(range(1, 9)), max_new_tokens=4))
+    eng.step()
+    assert eng.admit_failures == 1 and (0, "error") in events
+    assert eng.allocator.available == baseline, "reservation leaked"
+    assert eng.scheduler.free_slots == 2
+    eng._prefill_fn = real_prefill
+    eng.run([Request(rid=1, prompt=list(range(1, 9)), max_new_tokens=2)])
+    assert len(eng.finished) == 1 and len(eng.finished[0].generated) == 2
+    # a reservation-time failure (ragged prompt the chain hash can't
+    # even convert) archives an "error" state too — slot never bound —
+    # so offline callers' finished+aborted accounting still balances
+    events.clear()
+    eng.queue.push(Request(rid=2, prompt=[[1, 2], [3]], max_new_tokens=2))
+    eng.step()
+    assert (2, "error") in events
+    assert eng.aborted and eng.aborted[-1].slot == -1
+    assert eng.allocator.available == baseline
+
+
+def test_persistent_admission_failure_trips_the_engine(serve_setup):
+    """Per-request fault isolation must not mask a broken engine: once
+    every admission fails ADMIT_FAIL_TRIP times in a row, step()
+    re-raises so the driver dies and /health goes 503 (a load balancer
+    can eject the node). A success in between resets the streak."""
+    from repro.serving.engine import ADMIT_FAIL_TRIP
+    cfg, qcfg, mcfg, params = serve_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32)
+
+    def boom(*a, **k):
+        raise RuntimeError("prefill exploded")
+
+    real_prefill, eng._prefill_fn = eng._prefill_fn, boom
+    for i in range(ADMIT_FAIL_TRIP - 1):
+        eng.queue.push(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.step()  # one below the trip: all isolated, engine survives
+    assert eng.admit_failures == ADMIT_FAIL_TRIP - 1
+    eng._prefill_fn = real_prefill
+    eng.run([Request(rid=100, prompt=[1, 2, 3], max_new_tokens=2)])
+    assert eng._admit_fail_streak == 0  # success resets the streak
+    eng._prefill_fn = boom
+    for i in range(ADMIT_FAIL_TRIP):
+        eng.queue.push(Request(rid=200 + i, prompt=[1, 2, 3],
+                               max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="prefill exploded"):
+        eng.step()
+    assert eng.admit_failures == ADMIT_FAIL_TRIP * 2 - 1
+
+
 def test_slot_fills_every_cache_position(serve_setup):
     """Capacity regression: a budget larger than the cache must truncate
     only after position max_len - 1 was written — the old boundary

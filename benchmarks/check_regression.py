@@ -1,0 +1,180 @@
+"""Perf-regression gate over the BENCH_*.json trajectories.
+
+Two kinds of checks, run after the CI smoke benchmarks have appended the
+current commit's entry:
+
+* **Invariants** — machine-independent claims that must hold in the
+  freshest entry itself, whatever hardware produced it. Today:
+  ``paged_vs_dense_tok_ratio >= 1.0`` (the paged serving path must not be
+  slower than dense on the same trace — the ISSUE-6 acceptance bar) and
+  ``fwd_weight_bytes_ratio`` staying well under 1.0 (the dispatch path
+  must never silently re-densify the weights).
+
+* **Trends** — the freshest entry vs the last entry from a *different*
+  commit. Deterministic counters (prefill token counts, byte ratios) get
+  a tight tolerance; wall-clock-derived metrics (tok/s, speedups) get a
+  wide one, because trajectory entries may come from different machines.
+
+Waiving: an intentional baseline change passes ``--waive`` (or puts
+``[bench-baseline]`` in the HEAD commit message) — the gate then reports
+trend failures but exits 0. Invariant failures are never waivable by the
+marker alone; they need ``--waive`` explicitly.
+
+Exit status: 0 green / waived, 1 regression, 2 missing trajectory data.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import read_bench  # noqa: E402
+
+# relative drop tolerances per metric class
+TOL_TIGHT = 0.01   # deterministic counters: must reproduce exactly-ish
+TOL_RATIO = 0.25   # dimensionless speedups/ratios: jitter-tolerant
+TOL_WALL = 0.50    # raw wall-clock rates: machines differ wildly
+
+# (suite, metric name) -> (tolerance, higher_is_better)
+TRACKED = {
+    ("serving", "paged_vs_dense_tok_ratio"): (TOL_RATIO, True),
+    ("serving", "engine_speedup_vs_lockstep"): (TOL_RATIO, True),
+    ("serving", "dense_tok_s"): (TOL_WALL, True),
+    ("serving", "paged_tok_s"): (TOL_WALL, True),
+    ("serving", "prefix_tok_s"): (TOL_WALL, True),
+    ("serving", "prefix_prefill_tokens"): (TOL_TIGHT, False),
+    ("serving", "prefix_reused_tokens"): (TOL_TIGHT, True),
+    ("train_step", "fwd_weight_bytes_ratio"): (TOL_TIGHT, False),
+    ("train_step", "speedup"): (TOL_RATIO, True),
+}
+
+# invariants evaluated on the freshest entry alone:
+# (suite, name) -> (min_allowed, max_allowed)
+INVARIANTS = {
+    ("serving", "paged_vs_dense_tok_ratio"): (1.0, None),
+    ("train_step", "fwd_weight_bytes_ratio"): (None, 0.9),
+}
+
+
+def _latest_two(doc) -> (Optional[Dict], Optional[Dict]):
+    """(freshest entry, last entry from a different sha)."""
+    traj = doc.get("trajectory", [])
+    if not traj:
+        return None, None
+    head = traj[-1]
+    for entry in reversed(traj[:-1]):
+        if entry.get("sha") != head.get("sha"):
+            return head, entry
+    return head, None
+
+
+def _values(entry) -> Dict[str, float]:
+    return {r["name"]: r["value"] for r in entry.get("records", [])}
+
+
+def _head_commit_waives(root: str) -> bool:
+    try:
+        out = subprocess.run(["git", "log", "-1", "--format=%B"], cwd=root,
+                             capture_output=True, text=True, timeout=10)
+        return out.returncode == 0 and "[bench-baseline]" in out.stdout
+    except (OSError, subprocess.SubprocessError):
+        return False
+
+
+def check(root: Optional[str] = None, *, suites=("serving", "train_step"),
+          waive: bool = False) -> int:
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    invariant_fails: List[str] = []
+    trend_fails: List[str] = []
+    missing: List[str] = []
+
+    docs = {s: read_bench(s, root=root) for s in suites}
+    for suite, doc in docs.items():
+        head, prev = _latest_two(doc)
+        if head is None:
+            missing.append(suite)
+            continue
+        vals = _values(head)
+
+        for (s, name), (lo, hi) in INVARIANTS.items():
+            if s != suite or name not in vals:
+                continue
+            v = vals[name]
+            if lo is not None and v < lo:
+                invariant_fails.append(
+                    f"{suite}:{name} = {v:.4f} < required {lo}")
+            if hi is not None and v > hi:
+                invariant_fails.append(
+                    f"{suite}:{name} = {v:.4f} > allowed {hi}")
+
+        if prev is None:
+            print(f"[gate] {suite}: first trajectory entry "
+                  f"({head.get('sha', '?')[:10]}) — trend check bootstraps")
+            continue
+        base = _values(prev)
+        for (s, name), (tol, up) in TRACKED.items():
+            if s != suite or name not in vals or name not in base:
+                continue
+            new, old = vals[name], base[name]
+            if old == 0:
+                continue
+            # regression = the tracked direction got worse beyond tol
+            change = (new - old) / abs(old)
+            worse = -change if up else change
+            if worse > tol:
+                trend_fails.append(
+                    f"{suite}:{name} {old:.4f} -> {new:.4f} "
+                    f"({'-' if up else '+'}{worse * 100:.1f}% vs "
+                    f"tol {tol * 100:.0f}%, "
+                    f"baseline sha {prev.get('sha', '?')[:10]})")
+            else:
+                print(f"[gate] ok {suite}:{name} {old:.4f} -> {new:.4f}")
+
+    if missing:
+        print(f"[gate] no trajectory entries for: {', '.join(missing)} — "
+              f"run `python benchmarks/run.py --smoke` first")
+        return 2
+
+    waived = waive or _head_commit_waives(root)
+    status = 0
+    if invariant_fails:
+        print("[gate] INVARIANT FAILURES (the claim the repo commits to):")
+        for f in invariant_fails:
+            print(f"  {f}")
+        status = 1
+    if trend_fails:
+        print("[gate] trend regressions vs committed trajectory:")
+        for f in trend_fails:
+            print(f"  {f}")
+        if status == 0:
+            status = 1
+    if status and waived:
+        if invariant_fails and not waive:
+            print("[gate] [bench-baseline] marker does not waive "
+                  "invariants — pass --waive explicitly")
+            return 1
+        print("[gate] regressions WAIVED (baseline update)")
+        return 0
+    if status == 0:
+        print("[gate] green")
+    return status
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="directory holding BENCH_*.json (default: repo root)")
+    ap.add_argument("--suites", default="serving,train_step")
+    ap.add_argument("--waive", action="store_true",
+                    help="report regressions but exit 0 (baseline update)")
+    args = ap.parse_args()
+    sys.exit(check(args.root, suites=tuple(args.suites.split(",")),
+                   waive=args.waive))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,27 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities and the versioned BenchRecord
+contract.
+
+Every suite emits :class:`BenchRecord` rows (``record(...)``; the
+historical ``csv_row`` constructor is a deprecated alias that now also
+returns a record). ``emit_bench`` appends one entry per commit to
+``BENCH_<suite>.json`` — an **append-only trajectory** keyed by git sha
+with a flat ``latest`` name->value view for existing consumers (the
+gateway merge, CI artifact upload, the regression gate). Re-runs on the
+same sha merge by record name instead of appending, so one CI job's
+serving + gateway passes land in a single entry.
+
+``kernel_roofline`` attaches bytes/FLOP estimates (from
+``repro.launch.roofline`` hardware constants) to kernel records so
+measured-vs-roofline gaps stay visible next to the wall-clock numbers.
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import subprocess
 import time
-from typing import Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,10 +32,84 @@ from repro.optim.madam import MadamConfig
 from repro.training import build_train_step, init_train_state
 from repro.training.data import SyntheticLM
 
-__all__ = ["timed", "train_tiny_lm", "csv_row", "write_bench_json"]
+__all__ = ["BenchRecord", "SCHEMA_VERSION", "record", "csv_row",
+           "kernel_roofline", "timed", "train_tiny_lm",
+           "emit_bench", "read_bench", "write_bench_json"]
 
 # repo root — benchmark JSON artifacts land here so CI can glob them
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_VERSION = 1
+
+# append-only, but bounded: one entry per commit, oldest dropped past this
+_MAX_TRAJECTORY = 200
+
+
+@dataclasses.dataclass
+class BenchRecord:
+    """One measured benchmark quantity — the contract every suite emits.
+
+    ``unit`` says what ``value`` means (``us_per_call`` for wall times,
+    ``tok_s``, ``ratio``, ``bytes``, ``count`` ...); ``derived`` keeps the
+    human-facing annotation string from the CSV era; ``extra`` holds
+    structured attachments (e.g. the roofline dict). Backend/interpret/sha
+    are stamped per *trajectory entry* by ``emit_bench``, not per record.
+    """
+
+    name: str
+    value: float
+    unit: str = "us_per_call"
+    derived: str = ""
+    extra: Optional[Dict[str, Any]] = None
+
+    def __str__(self) -> str:  # the runner's CSV line
+        return f"{self.name},{self.value:.1f},{self.unit},{self.derived}"
+
+    def to_json(self) -> Dict[str, Any]:
+        d = {"name": self.name, "value": float(self.value),
+             "unit": self.unit}
+        if self.derived:
+            d["derived"] = self.derived
+        if self.extra is not None:
+            d["extra"] = self.extra
+        return d
+
+
+def record(name: str, value: float, *, unit: str = "us_per_call",
+           derived: str = "", extra: Optional[Dict[str, Any]] = None
+           ) -> BenchRecord:
+    """Constructor sugar for :class:`BenchRecord`."""
+    return BenchRecord(name=name, value=float(value), unit=unit,
+                       derived=derived, extra=extra)
+
+
+def csv_row(name: str, us: float, derived: str) -> BenchRecord:
+    """Deprecated: historical ``name,us,derived`` row constructor — now
+    returns a :class:`BenchRecord` (unit ``us_per_call``). New code should
+    call :func:`record` with an explicit unit."""
+    return record(name, us, derived=derived)
+
+
+def kernel_roofline(flops: float, hbm_bytes: float) -> Dict[str, Any]:
+    """Roofline estimate for one kernel record's ``extra`` attachment.
+
+    Uses the TPU-class constants from ``repro.launch.roofline`` (197
+    TFLOP/s, 819 GB/s HBM): ideal compute/memory time, arithmetic
+    intensity, and which wall the kernel sits against — so the measured
+    time can be read as a multiple of its ideal.
+    """
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm_bytes),
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "arithmetic_intensity": flops / hbm_bytes if hbm_bytes else 0.0,
+        "bound": "memory" if t_m >= t_c else "compute",
+        "ideal_us": max(t_c, t_m) * 1e6,
+    }
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -77,16 +168,110 @@ def train_tiny_lm(qcfg: QuantConfig, *, optimizer="madam", steps=60,
     return losses
 
 
-def csv_row(name: str, us: float, derived: str) -> str:
-    return f"{name},{us:.1f},{derived}"
+# ---------------------------------------------------------------------------
+# trajectory persistence
+
+
+def _git_sha(root: str) -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=root,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _bench_path(suite: str, root: Optional[str]) -> str:
+    return os.path.join(root or _ROOT, f"BENCH_{suite}.json")
+
+
+def _migrate(doc: Any, suite: str) -> Dict[str, Any]:
+    """Lift any prior on-disk shape into the trajectory schema.
+
+    Legacy files were one flat ``{name: value}`` snapshot (overwritten in
+    place per run); they become a single synthetic trajectory entry with
+    ``sha: "legacy"`` so history starts from what was actually recorded.
+    """
+    if isinstance(doc, dict) and "trajectory" in doc:
+        doc.setdefault("schema_version", SCHEMA_VERSION)
+        doc.setdefault("suite", suite)
+        doc.setdefault("latest", {})
+        return doc
+    traj = []
+    if isinstance(doc, dict) and doc:
+        recs = [record(k, v, unit="value").to_json()
+                for k, v in sorted(doc.items())
+                if isinstance(v, (int, float)) and not isinstance(v, bool)]
+        if recs:
+            traj = [{"sha": "legacy", "records": recs}]
+    return {"schema_version": SCHEMA_VERSION, "suite": suite,
+            "latest": {}, "trajectory": traj}
+
+
+def read_bench(suite: str, *, root: Optional[str] = None) -> Dict[str, Any]:
+    """Load (and schema-migrate, in memory) one suite's trajectory doc."""
+    path = _bench_path(suite, root)
+    if not os.path.exists(path):
+        return {"schema_version": SCHEMA_VERSION, "suite": suite,
+                "latest": {}, "trajectory": []}
+    with open(path) as f:
+        return _migrate(json.load(f), suite)
+
+
+def _rebuild_latest(traj: List[Dict[str, Any]]) -> Dict[str, float]:
+    """Flat name->value view, last entry wins per name (union across
+    entries, so a same-sha gateway pass extends the serving entry's keys
+    without erasing them)."""
+    latest: Dict[str, float] = {}
+    for entry in traj:
+        for r in entry.get("records", []):
+            latest[r["name"]] = r["value"]
+    return latest
+
+
+def emit_bench(suite: str, records: List[BenchRecord], *,
+               root: Optional[str] = None,
+               sha: Optional[str] = None) -> str:
+    """Append one per-commit entry of ``records`` to the suite trajectory.
+
+    An existing entry for the same sha is merged record-by-name (later
+    values replace earlier ones — the CI job runs serving then gateway
+    against one checkout) rather than duplicated. Returns the path.
+    """
+    from repro.kernels.dispatch import resolve_backend, resolve_interpret
+    doc = read_bench(suite, root=root)
+    sha = sha or _git_sha(root or _ROOT)
+    entry = None
+    if doc["trajectory"] and doc["trajectory"][-1].get("sha") == sha:
+        entry = doc["trajectory"][-1]
+    if entry is None:
+        entry = {"sha": sha, "records": []}
+        doc["trajectory"].append(entry)
+    entry["time"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    entry["backend"] = resolve_backend(None)
+    entry["interpret"] = resolve_interpret(None)
+    by_name = {r["name"]: i for i, r in enumerate(entry["records"])}
+    for rec in records:
+        j = rec.to_json()
+        if rec.name in by_name:
+            entry["records"][by_name[rec.name]] = j
+        else:
+            by_name[rec.name] = len(entry["records"])
+            entry["records"].append(j)
+    doc["trajectory"] = doc["trajectory"][-_MAX_TRAJECTORY:]
+    doc["latest"] = _rebuild_latest(doc["trajectory"])
+    path = _bench_path(suite, root)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def write_bench_json(suite: str, payload: Dict) -> str:
-    """Write ``BENCH_<suite>.json`` at the repo root (machine-readable
-    perf trajectory — CI uploads these from the smoke job). Returns the
-    path. Values should be plain floats/ints/strings."""
-    path = os.path.join(_ROOT, f"BENCH_{suite}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
+    """Deprecated shim for the flat-snapshot era: converts ``payload`` to
+    records (unit ``value``) and appends through :func:`emit_bench`."""
+    recs = [record(k, v, unit="value") for k, v in payload.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)]
+    return emit_bench(suite, recs)

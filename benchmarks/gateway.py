@@ -28,10 +28,8 @@ from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import write_bench_json  # noqa: E402
+from benchmarks.common import emit_bench, record  # noqa: E402
 from repro.serving.metrics import percentile  # noqa: E402
-
-_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ---------------------------------------------------------------------------
@@ -344,24 +342,22 @@ def main() -> None:
 
     out = asyncio.run(_amain(args))
 
-    # merge into the offline serving trajectory (benchmarks/serving.py
-    # writes the same file earlier in the CI job — keep its keys)
-    path = os.path.join(_ROOT, "BENCH_serving.json")
-    merged: Dict[str, float] = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            merged = json.load(f)
-    merged.update(out)
-    write_bench_json("serving", merged)
+    # append into the offline serving trajectory: emit_bench merges these
+    # gateway_* records into the same-sha entry benchmarks/serving.py
+    # wrote earlier in the CI job, keeping its records intact
+    emit_bench("serving", [
+        record(k, v, unit="s" if k.endswith("_s") else "count")
+        for k, v in out.items()
+        if isinstance(v, (int, float)) and not isinstance(v, bool)])
 
-    print("name,us_per_call,derived")
+    print("name,value,unit,derived")
     print(f"gateway_ttft_p50,{out['gateway_ttft_p50_s'] * 1e6:.1f},"
-          f"p95={out['gateway_ttft_p95_s']:.3f}s")
+          f"us_per_call,p95={out['gateway_ttft_p95_s']:.3f}s")
     print(f"gateway_tpot_p50,{out['gateway_tpot_p50_s'] * 1e6:.1f},"
-          f"p95={out['gateway_tpot_p95_s']:.3f}s")
+          f"us_per_call,p95={out['gateway_tpot_p95_s']:.3f}s")
     print(f"gateway_queued_p50,{out['gateway_queued_p50_s'] * 1e6:.1f},"
-          f"p95={out['gateway_queued_p95_s']:.3f}s")
-    print(f"gateway_wall,{out['gateway_wall_s'] * 1e6:.1f},"
+          f"us_per_call,p95={out['gateway_queued_p95_s']:.3f}s")
+    print(f"gateway_wall,{out['gateway_wall_s'] * 1e6:.1f},us_per_call,"
           f"completed={int(out['gateway_completed'])}/"
           f"{args.requests} rejected={int(out['gateway_rejected'])} "
           f"tokens={int(out['gateway_tokens'])}")

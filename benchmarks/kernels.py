@@ -1,20 +1,25 @@
 """Kernel micro-benchmarks (interpret mode): wall time is NOT TPU-meaningful
 on CPU; the derived columns report the *structural* numbers that matter —
-bytes moved per element (the LNS bandwidth win) and accuracy vs fp32."""
+bytes moved per element (the LNS bandwidth win) and accuracy vs fp32 — and
+each record carries a ``kernel_roofline`` extra (ideal compute/memory time
+at TPU-class constants) so measured-vs-roofline gaps land in the
+trajectory next to the wall clock."""
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, timed
+from benchmarks.common import kernel_roofline, record, timed
 from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
 from repro.kernels import (lns_qmatmul, madam_step, madam_step_packed,
                            quantize_pack)
+from repro.kernels.dispatch import fused_sample, paged_attend
 
 FMT = LNSFormat(bits=8, gamma=8)
 
 
-def run() -> list[str]:
+def run() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
     M = K = N = 256
@@ -29,12 +34,18 @@ def run() -> list[str]:
     rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))
     us = timed(lambda: lns_qmatmul(pa, pb, FMT, sa, sb), iters=2)
     hbm_ratio = (pa.size + pb.size) / ((a.size + b.size) * 2)  # vs bf16
-    rows.append(csv_row("qmatmul_256", us,
-                        f"rel_err={rel:.4f} operand_bytes_vs_bf16={hbm_ratio:.2f}"))
+    rows.append(record(
+        "qmatmul_256", us,
+        derived=f"rel_err={rel:.4f} operand_bytes_vs_bf16={hbm_ratio:.2f}",
+        extra=kernel_roofline(2.0 * M * K * N,
+                              pa.size + pb.size + out.size * 4)))
 
     x = jax.random.normal(key, (512, 512))
     us = timed(lambda: quantize_pack(x, FMT, scale_axis=0), iters=2)
-    rows.append(csv_row("quantize_pack_512", us, "bytes_out_per_elem=1"))
+    rows.append(record("quantize_pack_512", us,
+                       derived="bytes_out_per_elem=1",
+                       extra=kernel_roofline(4.0 * x.size,
+                                             x.size * 4 + x.size)))
 
     code = jnp.zeros((512, 512), jnp.int16)
     sign = jnp.ones((512, 512), jnp.int8)
@@ -43,12 +54,73 @@ def run() -> list[str]:
     ufmt = LNSFormat(bits=16, gamma=2048)
     us = timed(lambda: madam_step(code, sign, g, v, jnp.asarray(1), ufmt,
                                   lr=2.0 ** -7), iters=2)
-    rows.append(csv_row("madam_step_512", us,
-                        "hbm_per_param_bytes=3r+8rw (code+sign+g+v)"))
+    rows.append(record(
+        "madam_step_512", us,
+        derived="hbm_per_param_bytes=3r+8rw (code+sign+g+v)",
+        extra=kernel_roofline(10.0 * g.size, 11 * g.size)))
 
     packed = lns_pack(sign, code, ufmt)
     us = timed(lambda: madam_step_packed(packed, g, v, jnp.asarray(1), ufmt,
                                          lr=2.0 ** -7), iters=2)
-    rows.append(csv_row("madam_step_packed_512", us,
-                        "hbm_per_param_bytes=2r+6rw (word+g+v, sign in-word)"))
+    rows.append(record(
+        "madam_step_packed_512", us,
+        derived="hbm_per_param_bytes=2r+6rw (word+g+v, sign in-word)",
+        extra=kernel_roofline(10.0 * g.size, 8 * g.size)))
+
+    rows += _paged_attend_bench()
+    rows += _fused_sample_bench()
     return rows
+
+
+def _paged_attend_bench() -> list:
+    """Fused paged-attend kernel (interpret) vs the jnp reference on one
+    decode-shaped batch — the CSV reports both, the roofline extra gives
+    the DMA-bound ideal (KV page reads dominate)."""
+    rng = np.random.default_rng(0)
+    B, h, kv, hd, page, mp = 4, 8, 2, 64, 16, 8
+    P = B * mp
+    q = jnp.asarray(rng.normal(size=(B, 1, h, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P + 1, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P + 1, page, kv, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, P, (B, mp)), jnp.int32)
+    lengths = jnp.full((B,), mp * page, jnp.int32)
+
+    def call(backend):
+        return paged_attend(q, kp, vp, None, None, tbl, lengths,
+                            fmt=None, softcap=None, sm_scale=0.125,
+                            backend=backend, interpret=True)
+
+    cap = mp * page
+    flops = 4.0 * B * h * hd * cap          # qk + pv
+    kv_bytes = 2.0 * B * cap * kv * hd * 4  # the gathered pages (f32 here)
+    roof = kernel_roofline(flops, kv_bytes + q.size * 4)
+    us_ref = timed(lambda: call("reference"), iters=2)
+    us_ker = timed(lambda: call("pallas"), iters=2)
+    return [
+        record("paged_attend_ref", us_ref,
+               derived=f"B={B} pages={mp} page={page}", extra=roof),
+        record("paged_attend_kernel_interp", us_ker,
+               derived="interpret-mode wall time (not TPU-meaningful)",
+               extra=roof),
+    ]
+
+
+def _fused_sample_bench() -> list:
+    """Fused sampler epilogue (greedy + temperature legs), kernel vs jnp."""
+    rng = np.random.default_rng(1)
+    B, V = 8, 2048
+    lg = jnp.asarray(rng.normal(size=(B, V)), jnp.float32)
+    gum = jnp.asarray(rng.gumbel(size=(B, V)), jnp.float32)
+    temp = jnp.asarray(rng.uniform(0.2, 1.2, (B,)), jnp.float32)
+    roof = kernel_roofline(3.0 * B * V, B * V * 8)  # lg + gumbel reads
+    us_ref = timed(lambda: fused_sample(lg, gum, temp,
+                                        backend="reference"), iters=2)
+    us_ker = timed(lambda: fused_sample(lg, gum, temp, backend="pallas",
+                                        interpret=True), iters=2)
+    return [
+        record("fused_sample_ref", us_ref, derived=f"B={B} V={V}",
+               extra=roof),
+        record("fused_sample_kernel_interp", us_ker,
+               derived="interpret-mode wall time (not TPU-meaningful)",
+               extra=roof),
+    ]

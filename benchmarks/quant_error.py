@@ -46,6 +46,7 @@ def run(trials: int = 24, d: int = 2048) -> list[str]:
         rows.append(csv_row(f"fig4_gamma_2^{int(np.log2(gamma))}", 0.0, derived))
 
     us = (time.monotonic() - t0) * 1e6 / max(len(rows), 1)
-    rows = [r.replace(",0.0,", f",{us:.1f},", 1) for r in rows]
+    for r in rows:  # backfill the shared per-row wall time
+        r.value = us
     # headline check: multiplicative << GD at every setting
     return rows

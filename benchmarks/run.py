@@ -1,7 +1,9 @@
 """Benchmark runner — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Fast subset by default; pass
-``--full`` for the longer training sweeps used in EXPERIMENTS.md.
+Prints ``name,value,unit,derived`` CSV and appends each suite's records
+to its ``BENCH_<suite>.json`` trajectory (one entry per commit — see
+``benchmarks/common.py``). Fast subset by default; pass ``--full`` for
+the longer training sweeps used in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
@@ -62,19 +64,29 @@ def main() -> None:
         "serving": lambda: serving.run(sweep=args.full),
     }
     if args.only:
-        keep = set(args.only.split(","))
-        suites = {k: v for k, v in suites.items() if k in keep}
+        keep = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(keep) - set(suites))
+        if unknown or not keep:
+            # an unmatched filter used to silently run *nothing* and exit 0
+            ap.error(f"--only: unknown suite(s) {unknown or args.only!r}; "
+                     f"valid names: {', '.join(suites)}")
+        suites = {k: suites[k] for k in suites if k in keep}
 
-    print("name,us_per_call,derived")
+    from benchmarks.common import BenchRecord, emit_bench
+
+    print("name,value,unit,derived")
     failed = 0
     for name, fn in suites.items():
         try:
-            for row in fn():
+            rows = fn()
+            for row in rows:
                 print(row, flush=True)
+            emit_bench(name, [r for r in rows
+                              if isinstance(r, BenchRecord)])
         except Exception:
             failed += 1
             traceback.print_exc()
-            print(f"{name},NaN,SUITE FAILED", flush=True)
+            print(f"{name},NaN,,SUITE FAILED", flush=True)
     sys.exit(1 if failed else 0)
 
 

@@ -10,17 +10,27 @@ packed-LNS weights and decode step:
   engine   — ``repro.serving.Engine``: a finished sequence frees its slot
     and cache rows immediately and the next request is admitted mid-decode.
   paged    — the engine over a block-paged KV pool holding the *same* KV
-    memory as the dense engine but serving **2x the slots**: a request
-    only pins ``ceil((prompt+budget)/page_size)`` pages, so concurrency is
-    bounded by actual usage, not worst-case context. The reported peak
-    concurrency is measured from the admit/finish intervals.
+    memory as the dense engine but serving **2x the slots**, with the
+    ``ondemand`` allocation policy: a request pins only its prompt's
+    pages at admission and grows one page per ``page_size`` decoded
+    tokens, preempting the youngest request by recompute when the pool
+    runs dry — concurrency is bounded by tokens actually resident, not
+    worst-case context. A ``reserve``-policy row (worst-case pages up
+    front) is recorded alongside to keep the policy gap on the
+    trajectory. Peak concurrency is measured from admit/finish intervals.
   prefix   — a shared-prefix trace through the paged engine with and
     without prefix caching: hits map resident pages into the block table
     and prefill only the suffix (fewer prefill tokens, same output).
 
-All timed paths are run once to warm the jit caches and timed on a second
-replay; results also land in ``BENCH_serving.json`` at the repo root.
-``--full`` adds an offered-load sweep (arrival rate -> goodput).
+All timed paths are run once to warm the jit caches and then timed over
+``REPLAYS`` replays, keeping each harness's best. The engine harnesses
+replay **interleaved** (round-robin, one replay each per round): host
+noise on shared CPU arrives in multi-second windows, so consecutive
+replays of one harness can all land in the same slow window and skew a
+cross-harness ratio — interleaving gives every harness a shot at every
+window and the per-harness best tracks capability, not the host's mood.
+Results also land in ``BENCH_serving.json`` at the repo root. ``--full``
+adds an offered-load sweep (arrival rate -> goodput).
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, write_bench_json
+from benchmarks.common import csv_row, emit_bench, kernel_roofline, record
 from repro.configs import get_smoke_config
 from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig
@@ -39,6 +49,27 @@ from repro.models.model import init_caches
 from repro.optim.madam import MadamConfig
 from repro.serving import Engine, Request, max_trace_len, synthetic_trace
 from repro.training import build_decode_step, init_train_state
+
+
+REPLAYS = 5  # timed replays per harness; the best one is recorded
+
+
+def _interleaved_best(engines, trace):
+    """Replay ``trace`` through every (already warm) engine, round-robin,
+    ``REPLAYS`` rounds; return each harness's fastest replay as
+    ``{name: (agg, peak_concurrency, preemptions, decode_page_allocs)}``
+    (counters captured at that replay, since a later one overwrites the
+    engine's own state)."""
+    best = {}
+    for _ in range(REPLAYS):
+        for name, eng in engines.items():
+            eng.reset()
+            agg = eng.run(trace)
+            cur = best.get(name)
+            if cur is None or agg["tokens_per_s"] > cur[0]["tokens_per_s"]:
+                best[name] = (agg, _peak_concurrency(eng.completed),
+                              eng.preemptions, eng.decode_page_allocs)
+    return best
 
 
 def _peak_concurrency(metrics) -> int:
@@ -116,40 +147,54 @@ def run(requests: int = 24, slots: int = 4, prompt_len: int = 16,
     decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
     run_lockstep(cfg, qcfg, mcfg, params, trace, slots=slots,
                  max_len=max_len, decode=decode)  # warm-up: compiles
-    useful, wall = run_lockstep(cfg, qcfg, mcfg, params, trace, slots=slots,
-                                max_len=max_len, decode=decode)
+    wall = min(run_lockstep(cfg, qcfg, mcfg, params, trace, slots=slots,
+                            max_len=max_len, decode=decode)[1]
+               for _ in range(REPLAYS))
+    useful = sum(r.max_new_tokens for r in trace)
     tps_lock = useful / wall
     rows.append(csv_row("serving_lockstep", wall * 1e6,
                         f"tok_s={tps_lock:.1f} requests={requests} "
                         f"slots={slots}"))
 
-    engine = Engine(cfg, qcfg, mcfg, params, num_slots=slots,
-                    max_len=max_len)
-    engine.run(trace)      # warm-up: compiles every prefill bucket
-    engine.reset()
-    agg = engine.run(trace)
+    # ---- dense engine + the two paged policies, timed interleaved.
+    # The paged pool holds the same KV memory as the dense engine with 2x
+    # the slots; ondemand allocation is the headline paged row (pages
+    # track tokens actually resident), the reserve policy rides along so
+    # the trajectory keeps the cost of worst-case reservation visible.
+    page = 16
+    num_pages = slots * max_len // page  # dense-equivalent KV positions
+    engines = {
+        "dense": Engine(cfg, qcfg, mcfg, params, num_slots=slots,
+                        max_len=max_len),
+        "ondemand": Engine(cfg, qcfg, mcfg, params, num_slots=2 * slots,
+                           max_len=max_len, page_size=page,
+                           num_pages=num_pages, prefix_cache=False,
+                           alloc_policy="ondemand"),
+        "reserve": Engine(cfg, qcfg, mcfg, params, num_slots=2 * slots,
+                          max_len=max_len, page_size=page,
+                          num_pages=num_pages, prefix_cache=False,
+                          alloc_policy="reserve"),
+    }
+    for eng in engines.values():
+        eng.run(trace)     # warm-up: compiles every prefill bucket
+    best = _interleaved_best(engines, trace)
+    engine = engines["dense"]  # the --full sweep reuses this harness
+    agg, dense_peak, _, _ = best["dense"]
     tps_eng = agg["tokens_per_s"]
-    dense_peak = _peak_concurrency(engine.completed)
     rows.append(csv_row(
         "serving_engine", agg["wall_s"] * 1e6,
         f"tok_s={tps_eng:.1f} speedup_vs_lockstep={tps_eng / tps_lock:.2f} "
         f"ttft_p95_s={agg['ttft_p95_s']:.3f}"))
 
-    # ---- paged pool: same KV memory as the dense engine, 2x the slots
-    page = 16
-    num_pages = slots * max_len // page  # dense-equivalent KV positions
-    paged = Engine(cfg, qcfg, mcfg, params, num_slots=2 * slots,
-                   max_len=max_len, page_size=page, num_pages=num_pages,
-                   prefix_cache=False)
-    paged.run(trace)
-    paged.reset()
-    agg_p = paged.run(trace)
-    paged_peak = _peak_concurrency(paged.completed)
+    agg_p, paged_peak, preempts, page_allocs = best["ondemand"]
+    agg_r = best["reserve"][0]
     rows.append(csv_row(
         "serving_paged", agg_p["wall_s"] * 1e6,
         f"tok_s={agg_p['tokens_per_s']:.1f} slots={2 * slots} "
         f"kv_pages={num_pages} peak_concurrency={paged_peak} "
-        f"(dense peak {dense_peak} at equal KV memory)"))
+        f"preemptions={preempts} "
+        f"(dense peak {dense_peak} at equal KV memory; reserve policy "
+        f"tok_s={agg_r['tokens_per_s']:.1f})"))
 
     # ---- prefix caching: shared system prompt, suffix-only prefill
     fine = (8, 16, 32, 64, 128, 256)
@@ -174,26 +219,46 @@ def run(requests: int = 24, slots: int = 4, prompt_len: int = 16,
         f"hits={hits} reused_tokens={reused} "
         f"tok_s={agg_on['tokens_per_s']:.1f}"))
 
-    write_bench_json("serving", {
-        "lockstep_tok_s": tps_lock,
-        "engine_tok_s": tps_eng,
-        "engine_speedup_vs_lockstep": tps_eng / tps_lock,
-        "engine_ttft_p95_s": agg["ttft_p95_s"],
-        "dense_slots": slots,
-        "dense_peak_concurrency": dense_peak,
-        "paged_tok_s": agg_p["tokens_per_s"],
-        "paged_slots": 2 * slots,
-        "paged_kv_pages": num_pages,
-        "paged_page_size": page,
-        "paged_peak_concurrency": paged_peak,
-        "prefix_prefill_tokens": pt_on,
-        "prefix_prefill_tokens_uncached": pt_off,
-        "prefix_hits": hits,
-        "prefix_reused_tokens": reused,
-        "prefix_tok_s": agg_on["tokens_per_s"],
-        "noprefix_tok_s": agg_off["tokens_per_s"],
-        "requests": requests,
-    })
+    # per-decode-token roofline estimate (TPU-class constants): 2N FLOPs
+    # against packed 1 B/param weight reads plus the slot's KV page reads
+    n_params = cfg.active_params_count()
+    kv_layers = cfg.num_layers
+    kv_bytes = (kv_layers * (max_len // 2) * cfg.num_kv_heads
+                * cfg.head_dim * 2)  # k+v, ~1 B/elem packed, half-full row
+    tok_roofline = kernel_roofline(2.0 * n_params, n_params + kv_bytes)
+
+    tps_paged = agg_p["tokens_per_s"]
+    emit_bench("serving", [
+        record("lockstep_tok_s", tps_lock, unit="tok_s"),
+        record("engine_tok_s", tps_eng, unit="tok_s"),
+        # dense_tok_s is the regression gate's canonical name for the
+        # dense-cache engine on this same trace (== engine_tok_s)
+        record("dense_tok_s", tps_eng, unit="tok_s", extra=tok_roofline),
+        record("engine_speedup_vs_lockstep", tps_eng / tps_lock,
+               unit="ratio"),
+        record("engine_ttft_p95_s", agg["ttft_p95_s"], unit="s"),
+        record("dense_slots", slots, unit="count"),
+        record("dense_peak_concurrency", dense_peak, unit="count"),
+        record("paged_tok_s", tps_paged, unit="tok_s", extra=tok_roofline),
+        # the machine-independent acceptance metric: paged >= dense
+        record("paged_vs_dense_tok_ratio", tps_paged / tps_eng,
+               unit="ratio",
+               derived=f"paged={tps_paged:.1f} dense={tps_eng:.1f}"),
+        record("paged_reserve_tok_s", agg_r["tokens_per_s"], unit="tok_s"),
+        record("paged_slots", 2 * slots, unit="count"),
+        record("paged_kv_pages", num_pages, unit="count"),
+        record("paged_page_size", page, unit="count"),
+        record("paged_peak_concurrency", paged_peak, unit="count"),
+        record("paged_preemptions", preempts, unit="count"),
+        record("paged_decode_page_allocs", page_allocs, unit="count"),
+        record("prefix_prefill_tokens", pt_on, unit="count"),
+        record("prefix_prefill_tokens_uncached", pt_off, unit="count"),
+        record("prefix_hits", hits, unit="count"),
+        record("prefix_reused_tokens", reused, unit="count"),
+        record("prefix_tok_s", agg_on["tokens_per_s"], unit="tok_s"),
+        record("noprefix_tok_s", agg_off["tokens_per_s"], unit="tok_s"),
+        record("requests", requests, unit="count"),
+    ])
 
     if sweep:  # offered load -> goodput curve
         for rate in (2.0, 4.0, 8.0, 16.0):

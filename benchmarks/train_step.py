@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, timed, write_bench_json
+from benchmarks.common import csv_row, emit_bench, record, timed
 from repro.configs import get_smoke_config
 from repro.core.lns import LNSFormat, is_lns_weight
 from repro.core.quantizer import QuantConfig, quantize_grads
@@ -83,13 +83,16 @@ def run(steps: int = 3) -> list[str]:
         "train_step_dispatch", us_b,
         f"fwd_weight_bytes={packed_bytes} "
         f"ratio={packed_bytes / unfused_fwd:.2f} speedup={us_a / us_b:.2f}x"))
-    write_bench_json("train_step", {
-        "unfused_us_per_step": us_a,
-        "dispatch_us_per_step": us_b,
-        "speedup": us_a / us_b,
-        "unfused_fwd_weight_bytes": unfused_fwd,
-        "dispatch_fwd_weight_bytes": packed_bytes,
-        "fwd_weight_bytes_ratio": packed_bytes / unfused_fwd,
-        "steps": steps,
-    })
+    emit_bench("train_step", [
+        record("unfused_us_per_step", us_a),
+        record("dispatch_us_per_step", us_b),
+        record("speedup", us_a / us_b, unit="ratio"),
+        record("unfused_fwd_weight_bytes", unfused_fwd, unit="bytes"),
+        record("dispatch_fwd_weight_bytes", packed_bytes, unit="bytes"),
+        # deterministic structural metric: the dispatch path must never
+        # silently re-densify the weights (ratio would snap to ~1.0)
+        record("fwd_weight_bytes_ratio", packed_bytes / unfused_fwd,
+               unit="ratio"),
+        record("steps", steps, unit="count"),
+    ])
     return rows

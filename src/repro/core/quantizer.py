@@ -115,8 +115,12 @@ class QuantConfig:
     # Hybrid conversion-approximation simulation (paper App. B / Table 10):
     # number of LUT entries; None = exact accumulation.
     approx_lut: Optional[int] = None
-    # Kernel backend for routed packed-LNS GEMMs ("pallas"/"reference";
-    # None = platform default — see repro.kernels.dispatch).
+    # DEPRECATED: kernel backend for routed packed-LNS GEMMs
+    # ("pallas"/"reference"; None = resolve through the dispatch layers).
+    # Prefer ``repro.kernels.dispatch.configure()`` / ``configured()`` —
+    # one process-level knob instead of per-config duplicates. This field
+    # is kept as a per-call override (precedence layer 2) for existing
+    # configs and will be removed once callers migrate.
     backend: Optional[str] = None
 
     @classmethod

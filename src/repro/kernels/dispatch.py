@@ -10,18 +10,29 @@ instead of importing a kernel directly (DESIGN.md §4). Two backends:
   on CPU, where interpret-mode Pallas is a ~100x slowdown; also the
   equivalence anchor the tests pin the kernels against.
 
-Selection order: explicit ``backend=`` argument > ``REPRO_KERNEL_BACKEND``
-env var > platform default. ``interpret`` resolves the same way via
-``REPRO_KERNEL_INTERPRET`` (``auto``/``0``/``1``), defaulting to interpret
-mode on anything that is not a real TPU — compiled Mosaic is never silently
-replaced by the interpreter on hardware, and the interpreter is never
-accidentally shipped to a TPU job. Both env vars are read at trace time
-(set them before the first jit of a step function).
+Selection precedence (one rule for every op, highest first):
+
+1. :func:`configure` / the :func:`configured` context manager — the
+   process-level override an application sets once at startup.
+2. The explicit per-call ``backend=`` / ``interpret=`` argument — this is
+   the channel config fields (``QuantConfig.backend`` et al.) thread
+   through, so a config field behaves as a per-call argument.
+3. ``REPRO_KERNEL_BACKEND`` / ``REPRO_KERNEL_INTERPRET`` env vars — the
+   ambient outermost layer (CI legs, one-off shell runs).
+4. Platform auto-detection: pallas+compiled on TPU/GPU, reference (and
+   interpret-mode Pallas where explicitly requested) elsewhere — compiled
+   Mosaic is never silently replaced by the interpreter on hardware, and
+   the interpreter is never accidentally shipped to a TPU job.
+
+Env vars and :func:`configure` state are read at trace time — set them
+before the first jit of a step function.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import os
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +44,9 @@ __all__ = [
     "BACKENDS",
     "ENV_BACKEND",
     "ENV_INTERPRET",
+    "configure",
+    "configured",
+    "get_configured",
     "default_backend",
     "resolve_backend",
     "resolve_interpret",
@@ -40,16 +54,74 @@ __all__ = [
     "encode_pack",
     "madam_step",
     "paged_attend",
+    "fused_sample",
 ]
 
 BACKENDS = ("pallas", "reference")
 ENV_BACKEND = "REPRO_KERNEL_BACKEND"
 ENV_INTERPRET = "REPRO_KERNEL_INTERPRET"
 
+_UNSET = object()  # configure() sentinel: "leave this layer untouched"
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """The process-level override layer (precedence layer 1). ``None``
+    fields fall through to the per-call argument / env / auto layers."""
+
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
+
+
+_configured = DispatchConfig()
+
+
+def configure(*, backend=_UNSET, interpret=_UNSET) -> DispatchConfig:
+    """Set the process-level kernel dispatch override.
+
+    ``configure(backend="reference")`` pins every dispatched op to the
+    jnp oracle regardless of per-call arguments or env vars; ``None``
+    clears a field back to the lower layers. Omitted fields are left
+    untouched. Returns the new state. Applies at trace time — call it
+    before the first jit of a step function.
+    """
+    global _configured
+    kw = {}
+    if backend is not _UNSET:
+        if backend is not None and backend not in BACKENDS:
+            raise ValueError(
+                f"backend {backend!r}: expected one of {BACKENDS} or None")
+        kw["backend"] = backend
+    if interpret is not _UNSET:
+        kw["interpret"] = None if interpret is None else bool(interpret)
+    _configured = dataclasses.replace(_configured, **kw)
+    return _configured
+
+
+def get_configured() -> DispatchConfig:
+    """The current process-level override state (read-only snapshot)."""
+    return _configured
+
+
+@contextlib.contextmanager
+def configured(*, backend=_UNSET, interpret=_UNSET) -> Iterator[DispatchConfig]:
+    """Scoped :func:`configure`: apply overrides inside a ``with`` block,
+    restore the previous state on exit (exceptions included).
+
+    >>> with dispatch.configured(backend="reference"):
+    ...     engine.run(requests)   # every dispatched op hits the oracle
+    """
+    global _configured
+    prev = _configured
+    try:
+        yield configure(backend=backend, interpret=interpret)
+    finally:
+        _configured = prev
+
 
 def default_backend() -> str:
     """``REPRO_KERNEL_BACKEND`` if set, else pallas on TPU/GPU, reference
-    elsewhere."""
+    elsewhere. (Layers 3-4 only — :func:`resolve_backend` adds the rest.)"""
     env = os.environ.get(ENV_BACKEND, "").strip().lower()
     if env:
         if env not in BACKENDS:
@@ -60,6 +132,9 @@ def default_backend() -> str:
 
 
 def resolve_backend(backend: Optional[str] = None) -> str:
+    """Full precedence chain: configure() > per-call arg > env > auto."""
+    if _configured.backend is not None:
+        return _configured.backend
     if backend is None:
         return default_backend()
     if backend not in BACKENDS:
@@ -68,13 +143,15 @@ def resolve_backend(backend: Optional[str] = None) -> str:
 
 
 def resolve_interpret(interpret: Optional[bool] = None) -> bool:
-    """Platform auto-detection for Pallas interpret mode.
+    """Interpret-mode resolution: configure() > per-call arg > env > auto.
 
-    Compiled wherever the pallas backend is the default (TPU: Mosaic,
-    GPU: Triton), interpreter elsewhere — so the platforms that default to
-    ``"pallas"`` never silently run the ~100x interpreter. Overridable per
-    call or via ``REPRO_KERNEL_INTERPRET`` in {auto, 0, 1, false, true}.
+    Auto-detection: compiled wherever the pallas backend is the default
+    (TPU: Mosaic, GPU: Triton), interpreter elsewhere — so the platforms
+    that default to ``"pallas"`` never silently run the ~100x interpreter.
+    Env values: {auto, 0, 1, false, true}.
     """
+    if _configured.interpret is not None:
+        return _configured.interpret
     if interpret is not None:
         return bool(interpret)
     env = os.environ.get(ENV_INTERPRET, "auto").strip().lower()
@@ -183,25 +260,65 @@ def paged_attend(q: jax.Array, kp: jax.Array, vp: jax.Array,
     positions per slot *including* the S just written, so query s sits at
     absolute position ``lengths - S + s``. Returns f32 (B, S, H, hd).
 
-    The Pallas kernel serves the decode shape (S == 1) and gathers pages
-    tile-locally via scalar-prefetched block tables with in-kernel LNS
-    decode; S > 1 (the engine's batch-1 suffix prefill) and the reference
-    backend share the jnp gather implementation below.
+    The Pallas kernel serves decode (S == 1) *and* prefill-over-block-table
+    (S > 1, the engine's batch-1 suffix prefill) shapes: pages gather
+    tile-locally via scalar-prefetched block tables, double-buffered DMAs
+    and in-kernel LNS decode (see ``kernels/paged_attend.py``). The
+    reference backend is the jnp gather oracle below.
     """
-    if resolve_backend(backend) == "pallas" and q.shape[1] == 1:
-        from repro.kernels.ops import paged_attend_decode
-        return paged_attend_decode(q, kp, vp, k_scale, v_scale, block_table,
-                                   lengths, fmt=fmt, softcap=softcap,
-                                   sm_scale=sm_scale,
-                                   interpret=resolve_interpret(interpret))
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import paged_attend_blocktable
+        return paged_attend_blocktable(q, kp, vp, k_scale, v_scale,
+                                       block_table, lengths, fmt=fmt,
+                                       softcap=softcap, sm_scale=sm_scale,
+                                       interpret=resolve_interpret(interpret))
     return _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
                                    lengths, fmt=fmt, softcap=softcap,
                                    sm_scale=sm_scale)
 
 
+def fused_sample(logits: jax.Array, gumbel: Optional[jax.Array],
+                 temp: Optional[jax.Array], *,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Token selection epilogue: ``logits (B, V)`` -> ``(B,)`` int32.
+
+    ``gumbel is None`` is pure greedy (first-max-wins argmax over the raw
+    logits). Otherwise each row draws ``argmax(logits / max(temp, 1e-6)
+    + gumbel)`` when its ``temp > 0`` and falls back to greedy when not —
+    exactly the sort-free fast path of ``server.sampling``. The gumbel
+    noise is generated by the caller with ``jax.random`` (keys fold in the
+    request seed/step), so a seeded request replays token-for-token on
+    either backend; the kernel fuses only the scale/add/argmax epilogue.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import fused_sample as fused_sample_op
+        return fused_sample_op(logits, gumbel, temp,
+                               interpret=resolve_interpret(interpret))
+    return _fused_sample_reference(logits, gumbel, temp)
+
+
+def _fused_sample_reference(logits, gumbel, temp):
+    """jnp oracle for the fused sampler epilogue (first-max-wins argmax,
+    bit-identical to the host-side np.argmax the engine once used)."""
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    if gumbel is None:
+        return greedy
+    scaled = lg / jnp.maximum(temp, 1e-6)[:, None]
+    toks = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0.0, toks, greedy)
+
+
 def _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
                             lengths, *, fmt, softcap, sm_scale):
-    """jnp oracle: gather the slot's pages, decode, masked softmax."""
+    """jnp oracle: gather the slot's pages, decode, masked softmax.
+
+    GQA is grouped rather than materialized: q reshapes to
+    ``(B, S, kv, rep, hd)`` and the einsums carry the (group, repeat)
+    axes, so the gathered KV view is never ``jnp.repeat``-ed ``rep``-fold
+    — head ``h`` maps to group ``h // rep``, matching repeat semantics.
+    """
     B, S, h, hd = q.shape
     page, kv = kp.shape[1], kp.shape[2]
     mp = block_table.shape[1]
@@ -215,10 +332,11 @@ def _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
         return lns_decode_packed(x, fmt, jnp.float32) * s.astype(jnp.float32)
 
     rep = h // kv
-    kf = jnp.repeat(view(kp, k_scale), rep, axis=2)
-    vf = jnp.repeat(view(vp, v_scale), rep, axis=2)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf)
-    logits = logits * sm_scale
+    kf = view(kp, k_scale)                              # (B, cap, kv, hd)
+    vf = view(vp, v_scale)
+    qg = q.astype(jnp.float32).reshape(B, S, kv, rep, hd)
+    logits = jnp.einsum("bsgrd,bkgd->bgrsk", qg, kf)    # (B, kv, rep, S, cap)
+    logits = logits.reshape(B, h, S, cap) * sm_scale
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
     abs_pos = jnp.arange(cap)
@@ -226,7 +344,9 @@ def _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
     mask = abs_pos[None, None, :] <= q_pos[:, :, None]
     logits = jnp.where(mask[:, None], logits, -1e30)
     p_attn = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", p_attn, vf)
+    ctx = jnp.einsum("bgrsk,bkgd->bsgrd",
+                     p_attn.reshape(B, kv, rep, S, cap), vf)
+    return ctx.reshape(B, S, h, hd)
 
 
 def _madam_step_reference(packed, g, v, count, fmt: LNSFormat, *, lr, beta,

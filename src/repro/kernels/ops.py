@@ -28,7 +28,9 @@ __all__ = [
     "lns_qmatmul",
     "madam_step",
     "madam_step_packed",
+    "paged_attend_blocktable",
     "paged_attend_decode",
+    "fused_sample",
 ]
 
 
@@ -142,7 +144,7 @@ def lns_qmatmul(
     return out
 
 
-def paged_attend_decode(
+def paged_attend_blocktable(
     q: jax.Array,
     kp: jax.Array,
     vp: jax.Array,
@@ -156,7 +158,8 @@ def paged_attend_decode(
     sm_scale: float,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Decode-shape (S == 1) paged attention through the Pallas kernel.
+    """Paged attention through the fused Pallas kernel — decode (S == 1)
+    and prefill-over-block-table (S > 1) shapes alike.
 
     Thin pass-through today — serving head/page shapes are small and the
     CPU CI leg runs in interpret mode; real-TPU tile padding would live
@@ -166,6 +169,34 @@ def paged_attend_decode(
                                lengths, fmt=fmt, softcap=softcap,
                                sm_scale=sm_scale,
                                interpret=resolve_interpret(interpret))
+
+
+# historical name, from when the kernel served only the decode shape
+paged_attend_decode = paged_attend_blocktable
+
+
+def fused_sample(
+    logits: jax.Array,
+    gumbel: Optional[jax.Array],
+    temp: Optional[jax.Array],
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused sampler epilogue (kernel path): ``(B, V)`` -> ``(B,) int32``.
+
+    Pads V to a 128-lane multiple — pad logits are ``-1e30`` with zero
+    gumbel, so a padded column can never win the argmax (nor survive the
+    ``/ max(temp, 1e-6)`` scale within f32 range).
+    """
+    from repro.kernels.sampler import fused_sample_pallas
+    interpret = resolve_interpret(interpret)
+    V = logits.shape[-1]
+    pc = (-V) % 128
+    if pc:
+        logits = jnp.pad(logits, ((0, 0), (0, pc)), constant_values=-1e30)
+        if gumbel is not None:
+            gumbel = jnp.pad(gumbel, ((0, 0), (0, pc)))
+    return fused_sample_pallas(logits, gumbel, temp, interpret=interpret)
 
 
 def madam_step(

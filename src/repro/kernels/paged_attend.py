@@ -1,20 +1,36 @@
-"""Paged-attention decode kernel: block-table gather + tile-local LNS decode.
+"""Fused paged attention over a block-paged KV pool: double-buffered page
+DMAs, tile-local LNS decode, online softmax — decode *and* prefill shapes.
 
-One query token per slot (the serving decode shape) attends over the pages
-its block table names. The grid is (batch, max_pages) with pages innermost:
-each step DMAs one (page_size, KV, hd) K/V page — selected by the
-scalar-prefetched block table in the BlockSpec index map, so the gather
-never materializes a dense (B, max_len) view in HBM — decodes packed LNS
-words in the prologue (the shared ``core.lns.lns_decode_packed``, scales
-applied per position/head), and folds the page into a running
-online-softmax accumulator held in VMEM scratch. The last page of each row
-writes ``acc / l`` to the output.
+One kernel serves both serving shapes:
 
-Invalid tail positions (beyond the slot's length) are masked before the
-softmax, so block-table entries that point at the pool's null page are
-harmless. Head/page dims are used as-is — the serving shapes are small and
-CPU CI runs this kernel in interpret mode; real-TPU tiling pads would go in
-``ops.paged_attend_decode``.
+* **decode** — ``S == 1``: each slot's single query attends over the pages
+  its block table names.
+* **prefill over the block table** — ``S > 1``: the engine's batch-1
+  suffix prefill. Queries sit at absolute positions ``lengths - S + s``
+  (``pos_offset = n_cached`` for a prefix-cache hit), so the queries cover
+  only the *suffix* while the gathered pages include the cached prefix —
+  prefix-cached pages are attended but never recomputed, at kernel level
+  rather than by re-gathering them into a scratch pool.
+
+The KV pools stay in HBM (``memory_space=ANY``); the kernel drives its own
+gather: the block table and per-slot lengths are scalar-prefetched into
+SMEM, and a two-deep VMEM buffer ring overlaps the DMA of page ``i+1``
+with the attention math on page ``i`` (see DESIGN.md §10). Each grid step
+is one batch row and loops only over ``ceil(lengths[b] / page)`` resident
+pages — short rows do proportionally less work, where the previous
+``(B, max_pages)`` grid paid for the worst case in every row.
+
+Packed LNS pages decode tile-locally in VMEM through the one shared
+``core.lns.lns_decode_packed`` (scales applied per position/head), so the
+kernel cannot drift from the jnp oracle. The online-softmax accumulator
+``(m, l, acc)`` lives in loop carries; the full ``(S, positions)`` score
+row never materializes.
+
+Invalid tail positions (beyond a slot's length) are masked before the
+softmax, so block-table entries pointing at the pool's sacrificial null
+page are harmless. Head/page dims are used as-is — serving shapes are
+small and CPU CI runs this kernel in interpret mode; real-TPU tiling pads
+would go in ``ops.paged_attend_blocktable``.
 """
 from __future__ import annotations
 
@@ -29,59 +45,124 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.lns import LNSFormat, lns_decode_packed
 from repro.kernels.dispatch import resolve_interpret
 
-__all__ = ["paged_attend_pallas"]
+__all__ = ["paged_attend_pallas", "NUM_BUFFERS"]
+
+# depth of the VMEM page-buffer ring: 2 = classic double buffering
+# (prefetch page i+1 while attending page i)
+NUM_BUFFERS = 2
 
 
-def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest, fmt, softcap,
-            sm_scale, page, rep):
+def _kernel(tbl_ref, len_ref, q_ref, kp_hbm, vp_hbm, *rest, fmt, softcap,
+            sm_scale, page):
     if fmt is not None:
-        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_hbm, vs_hbm, o_ref = rest
     else:
-        o_ref, m_ref, l_ref, acc_ref = rest
-    b, p = pl.program_id(0), pl.program_id(1)
+        o_ref = rest[0]
+    b = pl.program_id(0)
+    _, S, h, hd = q_ref.shape
+    kv = kp_hbm.shape[-2]
+    rep = h // kv
+    ln = len_ref[b]
+    n_pages = (ln + page - 1) // page  # >= 1: the engine never serves an
+    # empty row (prompt >= 1 token and lengths include the token just
+    # written), so the warm-up DMA below is always valid. Bucket-padded
+    # prefill queries can push ln past the table span — clamp to the
+    # table width (their outputs are discarded by the caller anyway)
+    n_pages = jnp.minimum(n_pages, tbl_ref.shape[1])
 
-    @pl.when(p == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, -1e30)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    def body(kbuf, vbuf, sem, ksbuf=None, vsbuf=None):
+        def dma(slot, i):
+            """Async copies moving pool page ``tbl[b, i]`` into ring slot
+            ``slot`` — one per pool operand, each on its own semaphore."""
+            pg = tbl_ref[b, i]
+            cps = [
+                pltpu.make_async_copy(kp_hbm.at[pg], kbuf.at[slot],
+                                      sem.at[slot, 0]),
+                pltpu.make_async_copy(vp_hbm.at[pg], vbuf.at[slot],
+                                      sem.at[slot, 1]),
+            ]
+            if fmt is not None:
+                cps += [
+                    pltpu.make_async_copy(ks_hbm.at[pg], ksbuf.at[slot],
+                                          sem.at[slot, 2]),
+                    pltpu.make_async_copy(vs_hbm.at[pg], vsbuf.at[slot],
+                                          sem.at[slot, 3]),
+                ]
+            return cps
 
-    k = k_ref[0]  # (page, kv, hd)
-    v = v_ref[0]
+        for cp in dma(0, 0):  # warm-up: page 0 in flight before the loop
+            cp.start()
+
+        q = q_ref[0].astype(jnp.float32)              # (S, h, hd)
+        qg = q.reshape(S, kv, rep, hd)
+        q_pos = ln - S + jax.lax.broadcasted_iota(jnp.int32, (S, 1, 1), 0)
+
+        def step(i, carry):
+            m_prev, l_prev, acc = carry
+            cur = jax.lax.rem(i, NUM_BUFFERS)
+            nxt = jax.lax.rem(i + 1, NUM_BUFFERS)
+
+            @pl.when(i + 1 < n_pages)
+            def _prefetch():                 # overlap: next page's DMA
+                for cp in dma(nxt, i + 1):   # issues while this page's
+                    cp.start()               # attention math runs
+
+            for cp in dma(cur, i):
+                cp.wait()
+
+            k = kbuf[cur]                    # (page, kv, hd)
+            v = vbuf[cur]
+            if fmt is not None:
+                # tile-local unpack+decode through the one shared
+                # definition in core.lns — no drift from the jnp oracle
+                k = lns_decode_packed(k, fmt, jnp.float32) * \
+                    ksbuf[cur].astype(jnp.float32)
+                v = lns_decode_packed(v, fmt, jnp.float32) * \
+                    vsbuf[cur].astype(jnp.float32)
+            else:
+                k = k.astype(jnp.float32)
+                v = v.astype(jnp.float32)
+
+            logits = jnp.einsum("sgrd,pgd->sgrp", qg, k,
+                                preferred_element_type=jnp.float32)
+            logits = logits.reshape(S, h, page) * sm_scale
+            if softcap is not None:
+                logits = softcap * jnp.tanh(logits / softcap)
+            pos = i * page + jax.lax.broadcasted_iota(
+                jnp.int32, (S, 1, page), 2)
+            logits = jnp.where(pos <= q_pos, logits, -1e30)  # (S, h, page)
+
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(logits, axis=-1, keepdims=True))
+            pexp = jnp.exp(logits - m_new)            # (S, h, page)
+            corr = jnp.exp(m_prev - m_new)            # (S, h, 1)
+            l_new = corr * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
+            ctx = jnp.einsum("sgrp,pgd->sgrd",
+                             pexp.reshape(S, kv, rep, page), v,
+                             preferred_element_type=jnp.float32)
+            acc = corr * acc + ctx.reshape(S, h, hd)
+            return m_new, l_new, acc
+
+        init = (jnp.full((S, h, 1), -1e30, jnp.float32),
+                jnp.zeros((S, h, 1), jnp.float32),
+                jnp.zeros((S, h, hd), jnp.float32))
+        _, l, acc = jax.lax.fori_loop(0, n_pages, step, init)
+        o_ref[0] = acc / jnp.maximum(l, 1e-30)
+
+    kv_dt = kp_hbm.dtype
+    scratch = {
+        "kbuf": pltpu.VMEM((NUM_BUFFERS, page, kv, hd), kv_dt),
+        "vbuf": pltpu.VMEM((NUM_BUFFERS, page, kv, hd), kv_dt),
+    }
+    n_ops = 2
     if fmt is not None:
-        # tile-local unpack+decode through the one shared definition in
-        # core.lns, so the kernel cannot drift from the jnp oracle
-        k = lns_decode_packed(k, fmt, jnp.float32) * ks_ref[0].astype(
-            jnp.float32)
-        v = lns_decode_packed(v, fmt, jnp.float32) * vs_ref[0].astype(
-            jnp.float32)
-    else:
-        k = k.astype(jnp.float32)
-        v = v.astype(jnp.float32)
-
-    q = q_ref[0, 0].astype(jnp.float32)          # (h, hd)
-    h = q.shape[0]
-    kv = k.shape[1]
-    qg = q.reshape(kv, rep, q.shape[-1])         # GQA head groups
-    logits = jnp.einsum("krd,pkd->krp", qg, k).reshape(h, page) * sm_scale
-    if softcap is not None:
-        logits = softcap * jnp.tanh(logits / softcap)
-    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    logits = jnp.where(pos < len_ref[b], logits, -1e30)
-
-    m_prev, l_prev, acc = m_ref[...], l_ref[...], acc_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
-    pexp = jnp.exp(logits - m_new)               # (h, page)
-    corr = jnp.exp(m_prev - m_new)               # (h, 1)
-    l_new = corr * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
-    ctx = jnp.einsum("krp,pkd->krd", pexp.reshape(kv, rep, page), v)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
-    acc_ref[...] = corr * acc + ctx.reshape(h, -1)
-
-    @pl.when(p == pl.num_programs(1) - 1)
-    def _write():
-        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        scratch["ksbuf"] = pltpu.VMEM((NUM_BUFFERS, page, kv, 1),
+                                      ks_hbm.dtype)
+        scratch["vsbuf"] = pltpu.VMEM((NUM_BUFFERS, page, kv, 1),
+                                      vs_hbm.dtype)
+        n_ops = 4
+    scratch["sem"] = pltpu.SemaphoreType.DMA((NUM_BUFFERS, n_ops))
+    pl.run_scoped(body, **scratch)
 
 
 @functools.partial(
@@ -89,7 +170,7 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest, fmt, softcap,
     static_argnames=("fmt", "softcap", "sm_scale", "interpret"),
 )
 def paged_attend_pallas(
-    q: jax.Array,            # (B, 1, h, hd)
+    q: jax.Array,            # (B, S, h, hd)
     kp: jax.Array,           # (P, page, kv, hd) packed words or dense
     vp: jax.Array,
     k_scale: Optional[jax.Array],   # (P, page, kv, 1) when fmt is set
@@ -102,42 +183,37 @@ def paged_attend_pallas(
     sm_scale: float,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Decode-shape paged attention over a block-paged KV pool -> f32."""
+    """Paged attention over a block-paged KV pool -> f32 (B, S, h, hd).
+
+    ``lengths`` counts each slot's valid positions *including* the S just
+    written, so query ``s`` sits at absolute position ``lengths - S + s``
+    (matching ``dispatch._paged_attend_reference``). Must be >= 1 per row.
+    """
     interpret = resolve_interpret(interpret)
     B, S, h, hd = q.shape
-    assert S == 1, "the kernel serves the decode shape; S>1 is the reference"
     _, page, kv, _ = kp.shape
-    mp = block_table.shape[1]
-    rep = h // kv
 
-    qmap = lambda b, p, tbl, ln: (b, 0, 0, 0)
-    pgmap = lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)
     in_specs = [
-        pl.BlockSpec((1, 1, h, hd), qmap),
-        pl.BlockSpec((1, page, kv, hd), pgmap),
-        pl.BlockSpec((1, page, kv, hd), pgmap),
+        pl.BlockSpec((1, S, h, hd), lambda b, tbl, ln: (b, 0, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),   # KV pools stay in HBM;
+        pl.BlockSpec(memory_space=pltpu.ANY),   # the kernel DMAs pages
     ]
     args = [q, kp, vp]
     if fmt is not None:
-        in_specs += [pl.BlockSpec((1, page, kv, 1), pgmap)] * 2
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
         args += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, mp),
+        grid=(B,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, h, hd), qmap),
-        scratch_shapes=[
-            pltpu.VMEM((h, 1), jnp.float32),   # running max
-            pltpu.VMEM((h, 1), jnp.float32),   # running denominator
-            pltpu.VMEM((h, hd), jnp.float32),  # weighted-value accumulator
-        ],
+        out_specs=pl.BlockSpec((1, S, h, hd), lambda b, tbl, ln: (b, 0, 0, 0)),
     )
     kernel = functools.partial(_kernel, fmt=fmt, softcap=softcap,
-                               sm_scale=sm_scale, page=page, rep=rep)
+                               sm_scale=sm_scale, page=page)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, 1, h, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, S, h, hd), jnp.float32),
         interpret=interpret,
     )(block_table, lengths, *args)

@@ -1,0 +1,92 @@
+"""Fused on-device sampler epilogue: scale -> gumbel add -> argmax in one
+launch, one logits row per grid step.
+
+This is the kernel half of ``dispatch.fused_sample`` — the sort-free fast
+path of ``server.sampling`` (pure greedy and temperature-only batches; the
+rare top-k/top-p rows keep the jnp sort path). The gumbel noise comes in
+as an *input*: it is drawn host-side with ``jax.random`` keys that fold in
+the request seed and step, so a seeded request replays token-for-token
+whether this kernel or the jnp reference serves it. (In-kernel
+``pltpu.prng_*`` would also not be cross-backend reproducible, and is not
+available in interpret mode — the CPU CI leg.)
+
+Argmax is spelled manually as ``min(where(x == max(x), iota, V))`` —
+first-maximum-wins, bit-identical to ``jnp.argmax`` / the host-side
+``np.argmax`` the engine used before sampling moved on device, and it
+lowers on Mosaic where a fused ``argmax`` reduction may not.
+
+The caller (``ops.fused_sample``) pads V to a lane multiple with ``-1e30``
+logits and zero gumbel, so padded columns can never win either reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import resolve_interpret
+
+__all__ = ["fused_sample_pallas"]
+
+
+def _argmax_first(x: jax.Array) -> jax.Array:
+    """First-max-wins argmax over a (1, V) row -> int32 scalar."""
+    v = x.shape[-1]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    return jnp.min(jnp.where(x == m, idx, v)).astype(jnp.int32)
+
+
+def _kernel(temp_ref, lg_ref, *rest, with_gumbel):
+    if with_gumbel:
+        gum_ref, o_ref = rest
+    else:
+        o_ref = rest[0]
+    b = pl.program_id(0)
+    lg = lg_ref[...].astype(jnp.float32)            # (1, V)
+    greedy = _argmax_first(lg)
+    if with_gumbel:
+        t = temp_ref[b]
+        scaled = lg / jnp.maximum(t, 1e-6) + gum_ref[...].astype(jnp.float32)
+        tok = jnp.where(t > 0.0, _argmax_first(scaled), greedy)
+    else:
+        tok = greedy
+    o_ref[0, 0] = tok
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_sample_pallas(
+    logits: jax.Array,                 # (B, V) — V already lane-padded
+    gumbel: Optional[jax.Array],       # (B, V) or None for pure greedy
+    temp: Optional[jax.Array],         # (B,) f32, required with gumbel
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One launch per batch: returns sampled token ids ``(B,) int32``."""
+    interpret = resolve_interpret(interpret)
+    B, V = logits.shape
+    if gumbel is None:
+        temp = jnp.zeros((B,), jnp.float32)  # prefetched but unread
+    row = pl.BlockSpec((1, V), lambda b, t: (b, 0))
+    in_specs = [row]
+    args = [logits]
+    if gumbel is not None:
+        in_specs.append(pl.BlockSpec((1, V), lambda b, t: (b, 0)))
+        args.append(gumbel)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, with_gumbel=gumbel is not None),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(temp.astype(jnp.float32), *args)
+    return out[:, 0]

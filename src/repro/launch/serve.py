@@ -89,6 +89,12 @@ def main():
                          "slots * ceil(max_len / page_size))")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse")
+    ap.add_argument("--alloc-policy", default="reserve",
+                    choices=("reserve", "ondemand"),
+                    help="paged-KV page claiming: 'reserve' takes the "
+                         "worst case up front, 'ondemand' grows the block "
+                         "table as decode proceeds and preempts by "
+                         "recompute under pool pressure")
     ap.add_argument("--http", default=None, metavar="HOST:PORT",
                     help="serve online over HTTP/SSE instead of replaying "
                          "a synthetic trace (port 0 = ephemeral)")
@@ -120,7 +126,8 @@ def main():
         engine = Engine(cfg, qcfg, mcfg, state.params,
                         num_slots=args.slots, max_len=max_len,
                         page_size=args.page_size, num_pages=args.num_pages,
-                        prefix_cache=not args.no_prefix_cache)
+                        prefix_cache=not args.no_prefix_cache,
+                        alloc_policy=args.alloc_policy)
         if args.http:
             _serve_http(engine, args.http, cfg.name, args.max_queue)
             return
@@ -137,6 +144,8 @@ def main():
         if engine.page_size:
             print(f"paged KV: page_size={engine.page_size} "
                   f"pages={engine.num_pages} "
+                  f"alloc_policy={engine.alloc_policy} "
+                  f"preemptions={engine.preemptions} "
                   f"prefix_hits={engine.prefix_hits} "
                   f"reused_tokens={engine.prefix_reused_tokens}")
         print(f"completed {int(agg['completed'])} requests in "

@@ -55,9 +55,12 @@ class MadamConfig:
     makes optimizer state O(R+C) instead of O(R·C) (used by the trillion-
     parameter MoE configs; DESIGN.md §8).
 
-    ``backend`` overrides the kernel backend for the fused update
-    (``"pallas"`` / ``"reference"``; None = platform default, see
-    :mod:`repro.kernels.dispatch`).
+    ``backend`` (DEPRECATED) overrides the kernel backend for the fused
+    update (``"pallas"`` / ``"reference"``; None = resolve through the
+    dispatch layers). Prefer ``repro.kernels.dispatch.configure()`` /
+    ``configured()`` — one process-level knob instead of per-config
+    duplicates; this field stays as a per-call override (precedence
+    layer 2) until callers migrate.
     """
 
     lr: float = 2.0 ** -7

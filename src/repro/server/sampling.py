@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
+
 __all__ = ["SamplingParams", "GREEDY", "sample_logits", "sampling_rows"]
 
 
@@ -117,40 +119,54 @@ def _row_key(seed: jax.Array, step: jax.Array, codebook) -> jax.Array:
     return jax.random.fold_in(key, codebook)
 
 
-def _batch_sample(lg, temp, top_k, top_p, seed, step, codebook) -> jax.Array:
+def _batch_sample(lg, temp, top_k, top_p, seed, step, codebook,
+                  backend=None) -> jax.Array:
     """Sample one batch of rows ``(B, V)`` -> ``(B,)`` int32.
 
     Layered fast paths (``lax.cond`` on runtime params, shapes fixed, so
-    none of this recompiles): an all-greedy batch pays one argmax and
-    never touches the PRNG; a temperature-only batch adds gumbel noise
+    none of this recompiles): an all-greedy batch pays one fused argmax
+    and never touches the PRNG; a temperature-only batch adds gumbel noise
     but skips the sort (XLA's CPU sort is ~15x an argmax); only batches
-    with an active top-k / top-p row pay for the per-row sort."""
+    with an active top-k / top-p row pay for the per-row sort. The greedy
+    and temperature-only legs are the ``dispatch.fused_sample`` epilogue
+    (one Pallas launch on the kernel backend); gumbel noise stays a
+    ``jax.random`` input either way, so seeded replay is backend-exact."""
     v = lg.shape[-1]
     lg = lg.astype(jnp.float32)
-    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def greedy():
+        return dispatch.fused_sample(lg, None, None, backend=backend)
 
     def sampled():
         keys = jax.vmap(lambda s, st: _row_key(s, st, codebook))(seed, step)
         gumbel = jax.vmap(
             lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
-        scaled = lg / jnp.maximum(temp, 1e-6)[:, None]
-        toks = jax.lax.cond(
-            jnp.any((top_k > 0) | (top_p < 1.0)),
-            lambda: jax.vmap(_mask_sample)(scaled, top_k, top_p, gumbel),
-            lambda: jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32))
-        return jnp.where(temp > 0.0, toks, greedy)
 
-    return jax.lax.cond(jnp.any(temp > 0.0), sampled, lambda: greedy)
+        def masked():
+            scaled = lg / jnp.maximum(temp, 1e-6)[:, None]
+            toks = jax.vmap(_mask_sample)(scaled, top_k, top_p, gumbel)
+            return jnp.where(temp > 0.0, toks, greedy())
+
+        return jax.lax.cond(
+            jnp.any((top_k > 0) | (top_p < 1.0)),
+            masked,
+            lambda: dispatch.fused_sample(lg, gumbel, temp, backend=backend))
+
+    return jax.lax.cond(jnp.any(temp > 0.0), sampled, greedy)
 
 
 def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
                   num_codebooks: int = 0,
-                  vocab_size: Optional[int] = None) -> jax.Array:
+                  vocab_size: Optional[int] = None,
+                  backend: Optional[str] = None) -> jax.Array:
     """Batch sampler: ``logits (B, V)`` (or ``(B, K*V)`` for codebook
     stacks) + per-slot parameter arrays -> token ids ``(B,)`` / ``(B, K)``.
 
-    Safe to run over idle slots (the engine resets them to greedy); only
-    shapes are traced, so admissions never recompile the decode step.
+    ``backend`` picks the fused-epilogue implementation (threaded from the
+    engine's ``QuantConfig.backend``; None resolves through
+    ``kernels.dispatch``). Safe to run over idle slots (the engine resets
+    them to greedy); only shapes are traced, so admissions never recompile
+    the decode step.
     """
     temp, top_k = rows["temp"], rows["top_k"]
     top_p, seed, step = rows["top_p"], rows["seed"], rows["step"]
@@ -160,7 +176,9 @@ def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
         # static python loop: each codebook keeps its own lax.cond fast
         # path (a vmap over the batch would lower cond to select and
         # make every batch pay the masked-sort branch)
-        cols = [_batch_sample(lg[:, j], temp, top_k, top_p, seed, step, j)
+        cols = [_batch_sample(lg[:, j], temp, top_k, top_p, seed, step, j,
+                              backend=backend)
                 for j in range(num_codebooks)]
         return jnp.stack(cols, axis=1)
-    return _batch_sample(logits, temp, top_k, top_p, seed, step, 0)
+    return _batch_sample(logits, temp, top_k, top_p, seed, step, 0,
+                         backend=backend)

@@ -21,10 +21,21 @@ KV storage comes in two layouts (DESIGN.md §7.1):
   count is capped by worst-case context.
 - **paged** (``page_size=...``): full-context attention layers share one
   global pool of ``page_size``-token pages per layer plus per-slot block
-  tables; a request only holds ``ceil((prompt+budget)/page_size)`` pages,
-  so ``num_slots`` can exceed what dense allocation permits and admission
-  is gated by the ``BlockAllocator`` (pool exhausted -> the request waits
-  in the queue, nothing wedges). With ``prefix_cache`` the allocator keeps
+  tables; ``num_slots`` can exceed what dense allocation permits and
+  admission is gated by the ``BlockAllocator`` (pool exhausted -> the
+  request waits in the queue, nothing wedges). ``alloc_policy`` picks how
+  pages are claimed: ``"reserve"`` (default) takes the worst case
+  ``ceil((prompt+budget)/page_size)`` up front — no preemption, but long
+  budgets throttle concurrency; ``"ondemand"`` takes only the prompt's
+  pages and grows the block table page by page as decode proceeds,
+  preempting the *youngest* running request by recompute when the pool
+  runs dry (its tokens are kept; re-admission re-prefills prompt +
+  generated and resumes the sampling chain at the same event counter —
+  delivered tokens are never re-emitted or re-drawn, and the stream
+  stays identical up to float-level batch-composition effects: the
+  quantized decode path scales activations per *tensor*, so a different
+  set of co-resident rows can shift any row's logits by an ULP and flip
+  a greedy near-tie). With ``prefix_cache`` the allocator keeps
   a chain hash over page-aligned prompt prefixes: a hit maps the resident
   pages into the new slot's block table and prefills only the suffix
   (copy-on-write on a partially-reused boundary page). Sliding-window
@@ -129,7 +140,11 @@ class Engine:
         page_size: Optional[int] = None,
         num_pages: Optional[int] = None,
         prefix_cache: bool = True,
+        alloc_policy: str = "reserve",
     ):
+        if alloc_policy not in ("reserve", "ondemand"):
+            raise ValueError(f"alloc_policy must be 'reserve' or "
+                             f"'ondemand', got {alloc_policy!r}")
         self.cfg, self.qcfg, self.mcfg = cfg, qcfg, mcfg
         self.params = params
         self.num_slots, self.max_len = num_slots, max_len
@@ -153,6 +168,8 @@ class Engine:
         else:
             self.num_pages = 0
             self._prefix_ok = False
+        self.alloc_policy = alloc_policy if self._paged else None
+        self._ondemand = self._paged and alloc_policy == "ondemand"
 
         decode = build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll)
 
@@ -213,6 +230,11 @@ class Engine:
         self.prefill_tokens = 0          # padded tokens actually prefilled
         self.prefix_hits = 0             # admissions that reused pages
         self.prefix_reused_tokens = 0    # prompt tokens skipped via reuse
+        # on-demand paging: states parked by preemption (rid -> state,
+        # request itself waits at the queue head) and growth counters
+        self._preempted: Dict[int, RequestState] = {}
+        self.preemptions = 0             # recompute evictions under pressure
+        self.decode_page_allocs = 0      # pages mapped mid-decode (ondemand)
         # eager epoch: now() is read from other threads (online arrival
         # stamps) — lazy init would race the first step()'s _now()
         self._t0: Optional[float] = time.monotonic()
@@ -237,27 +259,37 @@ class Engine:
         return logits, jax.tree.map(upd, big, filled)
 
     def _prefill_paged_impl(self, params, big, tokens, n_new, n_cached,
-                            n_total, src_pages, dst_pages, slot):
-        """Paged admission: gather the slot's pages (``src_pages`` — the
-        matched prefix chain plus its fresh pages; on a copy-on-write
-        boundary the source is the *shared* page while the destination is
-        the fresh copy) into a local batch-1 pool, prefill the prompt
-        *suffix* at ``pos_offset=n_cached`` over it, rewind the cursor to
-        the true prompt length ``n_total``, and scatter the local pages
-        back to ``dst_pages`` plus the batch-1 rows of any dense layers
-        into row ``slot``. Unused *gather* entries point at the null page;
-        on the scatter side the shared prefix pages (content unchanged)
-        and the unused tail carry an out-of-range index and are dropped —
-        only the CoW copy and the fresh pages cost write bandwidth.
+                            n_total, table, cow_src, cow_dst, slot):
+        """Paged admission, *in place* over the global pool: the pool
+        leaves carry no batch axis, so the batch-1 suffix prefill attends
+        and writes through the slot's real block table (``table``,
+        (max_pages,) pool page ids) directly — prefix-cached pages are
+        read where they live, never re-gathered into a scratch pool, and
+        the fresh pages are written exactly once (the kernel's
+        prefill-over-block-table path).
+
+        The only page whose *content* must move is the copy-on-write
+        boundary: ``cow_src`` (the shared page) is copied onto ``cow_dst``
+        (the fresh copy, ``table[n_full]``) before the forward, so the
+        suffix writes land on a page already holding the shared prefix
+        tokens. Without a CoW boundary both ids name the null page — a
+        self-copy of the sacrificial page, free and harmless.
+
+        Suffix tokens prefill at ``pos_offset=n_cached``; bucket-padding
+        writes past the prompt land in the slot's own still-unused
+        positions or the null page (out-of-span writes drop). Dense
+        (non-paged) layer rows and the cursor scatter into row ``slot``;
+        the cursor rewinds to the true prompt length ``n_total``.
         Returns (last-real-position logits, updated cache)."""
-        mp = src_pages.shape[0]
 
         def mini_layer(c, stacked):
             if isinstance(c, dict) and "kp" in c:
                 out = {}
                 for k, v in c.items():
-                    if k in _POOL_KEYS:
-                        out[k] = v[:, src_pages] if stacked else v[src_pages]
+                    if k in _POOL_KEYS:  # shared leaf + the CoW page copy
+                        out[k] = (v.at[:, cow_dst].set(v[:, cow_src])
+                                  if stacked else
+                                  v.at[cow_dst].set(v[cow_src]))
                     else:  # "idx": suffix prefill resumes at n_cached
                         shape = (v.shape[0], 1) if stacked else (1,)
                         out[k] = jnp.full(shape, n_cached, v.dtype)
@@ -276,9 +308,8 @@ class Engine:
             return out
 
         mini = map_tree(big, mini_layer)
-        local_tables = jnp.arange(mp, dtype=jnp.int32)[None]  # identity
         out = forward(params, tokens, self.cfg, self.qcfg, caches=mini,
-                      pos_offset=n_cached, block_tables=local_tables)
+                      pos_offset=n_cached, block_tables=table[None])
         logits = jnp.take(out.logits, n_new - 1, axis=1)  # (1, V)
         filled = _set_cursor(out.caches, n_total)
 
@@ -287,10 +318,9 @@ class Engine:
                 out = {}
                 for k in b:
                     if k in _POOL_KEYS:
-                        val = m[k].astype(b[k].dtype)
-                        out[k] = (b[k].at[:, dst_pages].set(val, mode="drop")
-                                  if stacked else
-                                  b[k].at[dst_pages].set(val, mode="drop"))
+                        # the mini leaf IS the updated global pool (the
+                        # forward wrote through the real page ids)
+                        out[k] = m[k]
                     else:
                         out[k] = _slot_scatter(b[k], m[k], slot)
                 return out
@@ -407,7 +437,9 @@ class Engine:
         inlined into the decode jit for the hot loop)."""
         return sample_logits(logits, samp,
                              num_codebooks=self.cfg.num_codebooks,
-                             vocab_size=self.cfg.vocab_size)
+                             vocab_size=self.cfg.vocab_size,
+                             backend=self.qcfg.backend
+                             if self.qcfg is not None else None)
 
     def _samp_row(self, slot: int) -> Dict[str, jax.Array]:
         """Batch-1 view of one slot's sampling params (prefill sample)."""
@@ -426,9 +458,18 @@ class Engine:
     def _pages_needed(self, req: Request) -> int:
         return self._pages_for(req.prompt_len, req.max_new_tokens)
 
-    def _reserve_pages(self, req: Request) -> Optional[Dict[str, Any]]:
+    def _reserve_pages(self, req: Request,
+                       n_tokens: Optional[int] = None
+                       ) -> Optional[Dict[str, Any]]:
         """Match the prompt's cached prefix and reserve this request's
         pages; None (nothing held) if the pool can't host it right now.
+
+        ``n_tokens`` is the number of positions admission will prefill —
+        the prompt length, except when resuming a preempted request
+        (prompt plus the tokens generated before eviction). Under the
+        ``reserve`` policy the whole worst-case budget is taken up front;
+        under ``ondemand`` only the prefill's pages are taken and decode
+        grows the block table page by page (``_grow_decode_pages``).
 
         Under pressure the match degrades before the reservation fails:
         first the copy-on-write hold goes (it transiently pins one page
@@ -439,8 +480,9 @@ class Engine:
         accepted can always be hosted with zero reuse once slots drain)."""
         alloc = self.allocator
         page = self.page_size
-        plen = req.prompt_len
-        need = self._pages_needed(req)
+        plen = req.prompt_len if n_tokens is None else n_tokens
+        need = -(-plen // page) if self._ondemand \
+            else self._pages_needed(req)
         keys: List[bytes] = []
         matched: List[int] = []
         if self._prefix_ok:
@@ -478,13 +520,74 @@ class Engine:
                 "shared": shared, "fresh": fresh, "keys": keys}
 
     # ------------------------------------------------------------------
+    # on-demand paging: decode-time growth + preemption by recompute
+
+    @staticmethod
+    def _age(rs: RequestState):
+        """Total order on running requests, oldest first (victim choice
+        and growth priority must agree, or progress isn't guaranteed)."""
+        return (rs.t_admit, rs.request.arrival, rs.request.rid)
+
+    def _preempt(self, rs: RequestState) -> None:
+        """Evict a running request to reclaim its pages: slot, sampler
+        row, and pages are released; the state parks in ``_preempted``
+        and the request returns to the head of the queue. Re-admission
+        recomputes the evicted KV (``_admit`` resume path) — tokens
+        already delivered are never re-emitted or re-drawn."""
+        self.preemptions += 1
+        self._preempted[rs.request.rid] = rs
+        self._release_slot(rs)
+        self.queue.requeue(rs.request)
+
+    def _grow_decode_pages(self) -> None:
+        """Map one fresh page onto every running slot whose next decode
+        write crosses into unmapped territory (``ondemand`` policy: the
+        admission reservation covered only the prefill). Under pool
+        exhaustion the *youngest* running request yields (preemption by
+        recompute) until the allocation succeeds — the oldest running
+        request is never a victim, so FCFS progress is guaranteed."""
+        page = self.page_size
+        for rs in sorted(self.scheduler.running.values(), key=self._age):
+            if self.scheduler.running.get(rs.slot) is not rs:
+                continue  # evicted by an older slot's growth this step
+            pi = int(self._slot_len[rs.slot]) // page
+            bt = self._block_tables[rs.slot]
+            if pi >= self._max_pages or bt[pi] != self._null_page:
+                continue
+            got = self.allocator.alloc(1)
+            while got is None:
+                victim = max(
+                    (v for v in self.scheduler.running.values()
+                     if v is not rs), key=self._age, default=None)
+                if victim is None:
+                    victim = rs  # alone and still starved: yield fully
+                self._preempt(victim)
+                if victim is rs:
+                    break
+                got = self.allocator.alloc(1)
+            if got is None:
+                continue  # rs evicted itself; its row idles this step
+            bt[pi] = got[0]
+            self._slot_pages[rs.slot].append(got[0])
+            self.decode_page_allocs += 1
+
+    # ------------------------------------------------------------------
     # admission / decode
 
     def _admit(self, rs: RequestState, clock,
                resv: Optional[Dict[str, Any]] = None) -> None:
         req = rs.request
-        plen = req.prompt_len
         prompt = np.asarray(req.prompt, np.int32)
+        g = len(rs.generated)
+        if g:
+            # resuming a preempted request (ondemand policy): recompute
+            # the evicted KV by prefilling the prompt plus every already
+            # delivered token except the last (which seeds decoding and,
+            # like any fresh prefill's sampled token, is never cached)
+            tail = np.asarray(rs.generated[:-1],
+                              np.int32).reshape((-1,) + prompt.shape[1:])
+            prompt = np.concatenate([prompt, tail])
+        plen = len(prompt)
 
         if self._paged:
             n_cached = resv["n_cached"]
@@ -493,15 +596,13 @@ class Engine:
             bt = np.full((self._max_pages,), self._null_page, np.int32)
             bt[:resv["n_full"]] = resv["shared"]
             bt[resv["n_full"]:n_pages] = resv["fresh"]
-            src = bt.copy()
-            if resv["cow"] is not None:  # gather the shared boundary page,
-                src[resv["n_full"]] = resv["cow"]  # write back the copy
-            # scatter-back skips what didn't change: shared prefix pages
-            # and the unused tail go out of range and are dropped
-            oob = self.num_pages + 1
-            dst = bt.copy()
-            dst[:resv["n_full"]] = oob
-            dst[n_pages:] = oob
+            # copy-on-write boundary: the shared page's content is copied
+            # onto its fresh twin inside the prefill jit; null -> null
+            # (a free self-copy of the sacrificial page) when absent
+            if resv["cow"] is not None:
+                cow_src, cow_dst = resv["cow"], int(bt[resv["n_full"]])
+            else:
+                cow_src = cow_dst = self._null_page
             n_new = plen - n_cached
             bucket = self._bucket(n_new)
             tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
@@ -511,14 +612,17 @@ class Engine:
                 jnp.asarray(n_new, jnp.int32),
                 jnp.asarray(n_cached, jnp.int32),
                 jnp.asarray(plen, jnp.int32),
-                jnp.asarray(src), jnp.asarray(dst),
+                jnp.asarray(bt), jnp.asarray(cow_src, jnp.int32),
+                jnp.asarray(cow_dst, jnp.int32),
                 jnp.asarray(rs.slot, jnp.int32))
             if resv["cow"] is not None:  # content copied; drop the hold
                 self.allocator.release([resv["cow"]])
                 resv["cow"] = None  # a later unwind must not re-release
             if self._prefix_ok:  # publish this prompt's full pages
-                for i in range(plen // self.page_size):
-                    self.allocator.register(resv["keys"][i], int(bt[i]))
+                # keys cover the *original* prompt only — resumed tokens
+                # are generated content, never prefix-cache material
+                for i, key in enumerate(resv["keys"]):
+                    self.allocator.register(key, int(bt[i]))
             self._block_tables[rs.slot] = bt
             self._slot_pages[rs.slot] = held
             if n_cached:
@@ -534,16 +638,27 @@ class Engine:
                 jnp.asarray(rs.slot, jnp.int32))
 
         set_row(self._samp, rs.slot, req.sampling)  # sample event 0
-        tok = np.asarray(self._sample_fn(logits, self._samp_row(rs.slot)))[0]
-        self._samp["step"][rs.slot] = 1
+        if g:
+            # every emitted token was already delivered; the last one
+            # seeds decoding and the sampling chain resumes at event g —
+            # same seed, same counter, so no token is ever re-drawn
+            # (logits can still move by an ULP vs the unpreempted run:
+            # per-tensor activation scales couple co-resident rows)
+            tok = np.asarray(rs.generated[-1], np.int32)
+            self._samp["step"][rs.slot] = g
+        else:
+            tok = np.asarray(
+                self._sample_fn(logits, self._samp_row(rs.slot)))[0]
+            self._samp["step"][rs.slot] = 1
         self.prefills += 1
         self.prefill_tokens += bucket
         self._slot_len[rs.slot] = plen
         self._last_tok[rs.slot] = tok
-        rs.generated.append(tok.tolist() if tok.ndim else int(tok))
-        rs.t_first_token = clock()
-        if self.token_sink is not None:
-            self.token_sink(req.rid, rs.generated[-1])
+        if not g:
+            rs.generated.append(tok.tolist() if tok.ndim else int(tok))
+            rs.t_first_token = clock()
+            if self.token_sink is not None:
+                self.token_sink(req.rid, rs.generated[-1])
         self._maybe_finish(rs, clock)
 
     def _maybe_finish(self, rs: RequestState, clock) -> None:
@@ -635,8 +750,15 @@ class Engine:
         clock = self._now if now is None else (lambda: now)
         req = self.queue.remove(rid)
         if req is not None:
+            # a preempted request waits in the queue with its state
+            # parked; its pages were already released at eviction
+            rs = self._preempted.pop(rid, None)
+            if rs is not None:
+                rs.t_finish = clock()
+                rs.finish_reason = "aborted"
+                self.aborted.append(rs)
             if self.finish_sink is not None:
-                self.finish_sink(rid, "aborted", None)
+                self.finish_sink(rid, "aborted", rs)
             return True
         for rs in self.scheduler.running.values():
             if rs.request.rid == rid:
@@ -658,9 +780,13 @@ class Engine:
             if req is None:
                 break
             resv = None
+            resume = self._preempted.get(req.rid) if self._paged else None
             if self._paged:
+                n_tok = req.prompt_len
+                if resume is not None:
+                    n_tok += len(resume.generated) - 1
                 try:
-                    resv = self._reserve_pages(req)
+                    resv = self._reserve_pages(req, n_tok)
                 except Exception:
                     # a prompt the reservation can't even hash (slipped
                     # past validate()) fails alone, before slot binding;
@@ -677,6 +803,14 @@ class Engine:
                     self.queue.requeue(req)
                     break
             rs = self.scheduler.admit(req, clock())
+            if resume is not None:
+                # continuity across preemption: same token list (the
+                # resume prefill keys off it) and original timestamps,
+                # so TTFT/latency metrics span the whole request
+                del self._preempted[req.rid]
+                rs.generated = resume.generated
+                rs.t_admit = resume.t_admit
+                rs.t_first_token = resume.t_first_token
             try:
                 self._admit(rs, clock, resv)
                 self._admit_fail_streak = 0
@@ -710,6 +844,8 @@ class Engine:
                 self._fail_admission(rs, resv, clock)
                 if self._admit_fail_streak >= ADMIT_FAIL_TRIP:
                     raise
+        if self._ondemand:
+            self._grow_decode_pages()
         if not self.scheduler.running:
             return False
 

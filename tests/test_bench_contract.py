@@ -1,0 +1,154 @@
+"""The versioned BenchRecord contract and the perf-regression gate.
+
+These tests drive ``emit_bench``/``read_bench`` and ``check_regression``
+against a tmp root (the ``root=`` parameter exists for exactly this), so
+the repo's committed BENCH_*.json trajectories are never touched.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import (SCHEMA_VERSION, BenchRecord, csv_row,
+                               emit_bench, kernel_roofline, read_bench,
+                               record)
+from benchmarks.check_regression import check
+
+
+# ---------------------------------------------------------------------------
+# record contract
+
+
+def test_record_csv_line_and_json():
+    r = record("paged_tok_s", 1010.25, unit="tok_s", derived="smoke")
+    assert str(r) == "paged_tok_s,1010.2,tok_s,smoke"
+    assert r.to_json() == {"name": "paged_tok_s", "value": 1010.25,
+                           "unit": "tok_s", "derived": "smoke"}
+
+
+def test_csv_row_is_deprecated_record_alias():
+    r = csv_row("qmatmul_256", 12.5, "vs ref 1.0x")
+    assert isinstance(r, BenchRecord)
+    assert r.unit == "us_per_call" and r.derived == "vs ref 1.0x"
+
+
+def test_kernel_roofline_attachment():
+    rf = kernel_roofline(flops=2.0e12, hbm_bytes=1.0e9)
+    assert rf["bound"] in ("memory", "compute")
+    assert rf["arithmetic_intensity"] == pytest.approx(2000.0)
+    assert rf["ideal_us"] == pytest.approx(
+        max(rf["t_compute_s"], rf["t_memory_s"]) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# trajectory persistence
+
+
+def test_emit_appends_per_sha_and_merges_same_sha(tmp_path):
+    root = str(tmp_path)
+    emit_bench("serving", [record("a", 1.0)], root=root, sha="s1")
+    emit_bench("serving", [record("a", 2.0), record("b", 5.0)],
+               root=root, sha="s2")
+    # same sha again: merge by name, not a third entry
+    emit_bench("serving", [record("b", 6.0), record("c", 7.0)],
+               root=root, sha="s2")
+    doc = read_bench("serving", root=root)
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert [e["sha"] for e in doc["trajectory"]] == ["s1", "s2"]
+    s2 = {r["name"]: r["value"] for r in doc["trajectory"][-1]["records"]}
+    assert s2 == {"a": 2.0, "b": 6.0, "c": 7.0}
+    # latest = union across entries, last wins per name
+    assert doc["latest"] == {"a": 2.0, "b": 6.0, "c": 7.0}
+    assert doc["trajectory"][-1]["backend"] in ("pallas", "reference")
+
+
+def test_latest_unions_across_entries(tmp_path):
+    root = str(tmp_path)
+    emit_bench("serving", [record("only_old", 3.0)], root=root, sha="s1")
+    emit_bench("serving", [record("fresh", 4.0)], root=root, sha="s2")
+    doc = read_bench("serving", root=root)
+    assert doc["latest"] == {"only_old": 3.0, "fresh": 4.0}
+
+
+def test_legacy_flat_snapshot_migrates(tmp_path):
+    root = str(tmp_path)
+    with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
+        json.dump({"dense_tok_s": 900.0, "note": "not-a-number"}, f)
+    doc = read_bench("serving", root=root)
+    assert [e["sha"] for e in doc["trajectory"]] == ["legacy"]
+    # appending after migration keeps the legacy entry as history
+    emit_bench("serving", [record("dense_tok_s", 950.0, unit="tok_s")],
+               root=root, sha="s1")
+    doc = read_bench("serving", root=root)
+    assert [e["sha"] for e in doc["trajectory"]] == ["legacy", "s1"]
+    assert doc["latest"]["dense_tok_s"] == 950.0
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+
+
+def _seed_green(root, sha):
+    emit_bench("serving", [
+        record("paged_vs_dense_tok_ratio", 1.10, unit="ratio"),
+        record("dense_tok_s", 900.0, unit="tok_s"),
+        record("paged_tok_s", 990.0, unit="tok_s"),
+    ], root=root, sha=sha)
+    emit_bench("train_step", [
+        record("fwd_weight_bytes_ratio", 0.20, unit="ratio"),
+        record("speedup", 1.5, unit="ratio"),
+    ], root=root, sha=sha)
+
+
+def test_gate_bootstrap_and_green(tmp_path):
+    root = str(tmp_path)
+    assert check(root) == 2  # no trajectories at all
+    _seed_green(root, "s1")
+    assert check(root) == 0  # first entry: trend check bootstraps
+    _seed_green(root, "s2")
+    assert check(root) == 0  # identical numbers: green
+
+
+def test_gate_invariant_failure_not_marker_waivable(tmp_path):
+    root = str(tmp_path)
+    _seed_green(root, "s1")
+    emit_bench("serving", [
+        record("paged_vs_dense_tok_ratio", 0.91, unit="ratio"),
+    ], root=root, sha="s2")
+    assert check(root) == 1
+    # --waive is the only override for invariants
+    assert check(root, waive=True) == 0
+
+
+def test_gate_trend_regression_and_waive(tmp_path):
+    root = str(tmp_path)
+    _seed_green(root, "s1")
+    emit_bench("serving", [
+        record("paged_vs_dense_tok_ratio", 1.05, unit="ratio"),
+        record("dense_tok_s", 900.0, unit="tok_s"),
+        record("paged_tok_s", 300.0, unit="tok_s"),  # -70% > TOL_WALL
+    ], root=root, sha="s2")
+    emit_bench("train_step", [
+        record("fwd_weight_bytes_ratio", 0.20, unit="ratio"),
+        record("speedup", 1.5, unit="ratio"),
+    ], root=root, sha="s2")
+    assert check(root) == 1
+    assert check(root, waive=True) == 0
+
+
+def test_gate_wall_clock_jitter_tolerated(tmp_path):
+    root = str(tmp_path)
+    _seed_green(root, "s1")
+    emit_bench("serving", [
+        record("paged_vs_dense_tok_ratio", 1.02, unit="ratio"),
+        record("dense_tok_s", 700.0, unit="tok_s"),   # -22%: inside TOL_WALL
+        record("paged_tok_s", 730.0, unit="tok_s"),
+    ], root=root, sha="s2")
+    emit_bench("train_step", [
+        record("fwd_weight_bytes_ratio", 0.20, unit="ratio"),
+        record("speedup", 1.3, unit="ratio"),  # -13%: inside TOL_RATIO
+    ], root=root, sha="s2")
+    assert check(root) == 0

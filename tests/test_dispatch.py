@@ -108,6 +108,58 @@ def test_backend_resolution_env_override(monkeypatch):
         dispatch.resolve_backend(None)
 
 
+def test_configure_outranks_arg_and_env(monkeypatch):
+    """Layer 1 beats everything: configure() wins over the per-call arg
+    (the channel config fields use) and over the env var."""
+    monkeypatch.setenv(dispatch.ENV_BACKEND, "pallas")
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "0")
+    with dispatch.configured(backend="reference", interpret=True):
+        assert dispatch.resolve_backend("pallas") == "reference"
+        assert dispatch.resolve_interpret(False) is True
+    # restored on exit: arg > env > auto again
+    assert dispatch.resolve_backend("pallas") == "pallas"
+    assert dispatch.resolve_backend(None) == "pallas"  # env layer
+    assert dispatch.resolve_interpret(None) is False
+
+
+def test_configure_partial_fields_and_clear():
+    prev = dispatch.get_configured()
+    try:
+        dispatch.configure(backend="reference")
+        assert dispatch.get_configured().backend == "reference"
+        assert dispatch.get_configured().interpret is None  # untouched
+        dispatch.configure(interpret=True)
+        assert dispatch.get_configured().backend == "reference"  # untouched
+        dispatch.configure(backend=None)  # clear one field only
+        assert dispatch.get_configured().backend is None
+        assert dispatch.get_configured().interpret is True
+    finally:
+        dispatch.configure(backend=prev.backend, interpret=prev.interpret)
+
+
+def test_configure_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        dispatch.configure(backend="mosaic")
+    assert dispatch.get_configured().backend is None  # state unchanged
+
+
+def test_configured_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with dispatch.configured(backend="reference"):
+            assert dispatch.get_configured().backend == "reference"
+            raise RuntimeError("boom")
+    assert dispatch.get_configured().backend is None
+
+
+def test_configured_nests():
+    with dispatch.configured(backend="reference"):
+        with dispatch.configured(interpret=True):
+            st = dispatch.get_configured()
+            assert st.backend == "reference" and st.interpret is True
+        assert dispatch.get_configured().interpret is None
+    assert dispatch.get_configured().backend is None
+
+
 def test_interpret_resolution_env_override(monkeypatch):
     monkeypatch.delenv(dispatch.ENV_INTERPRET, raising=False)
     # compiled wherever pallas is the platform default (TPU/GPU)

@@ -260,3 +260,127 @@ def test_recycled_paged_slot_reproduces_fresh_output(smollm_setup):
                    page_size=4, prefix_cache=False)
     fresh.run([Request(rid=0, prompt=list(pb), max_new_tokens=5)])
     assert _by_rid(e)[1] == fresh.finished[0].generated
+
+# ---------------------------------------------------------------------------
+# on-demand allocation policy: decode-time growth + preemption by recompute
+
+
+def test_alloc_policy_validated(smollm_setup):
+    cfg, qcfg, mcfg, params = smollm_setup
+    with pytest.raises(ValueError, match="alloc_policy"):
+        Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=16,
+               page_size=4, alloc_policy="lazy")
+    dense = Engine(cfg, qcfg, mcfg, params, num_slots=1, max_len=16,
+                   alloc_policy="ondemand")
+    assert dense.alloc_policy is None  # policy is a paged-mode concept
+
+
+def test_ondemand_unpressured_matches_reserve_bitwise(smollm_setup):
+    """On a roomy pool both policies admit identically, so the page-by-
+    page growth path must reproduce the reserve streams token for token
+    — while actually exercising decode-time allocation."""
+    cfg, qcfg, mcfg, params = smollm_setup
+    kw = dict(num_slots=2, max_len=32, page_size=4, num_pages=16,
+              prefix_cache=False)
+    res = Engine(cfg, qcfg, mcfg, params, **kw)
+    res.run(_trace(cfg, 4))
+    ond = Engine(cfg, qcfg, mcfg, params, alloc_policy="ondemand", **kw)
+    ond.run(_trace(cfg, 4))
+    assert _by_rid(res) == _by_rid(ond)
+    assert ond.preemptions == 0
+    assert ond.decode_page_allocs > 0  # growth, not up-front reservation
+    assert ond.decode_compiles == 1   # growth never reshapes the step
+
+
+def test_ondemand_preempts_under_pressure_and_completes(smollm_setup):
+    """A pool too small for both requests' full contexts forces the
+    youngest request out mid-decode; it must resume by recompute and
+    finish with its delivered prefix intact (no token re-emitted)."""
+    cfg, qcfg, mcfg, params = smollm_setup
+    rng = np.random.default_rng(23)
+    # each request grows to ceil((8+8-1)/4) = 4 pages; 6 < 2*4 forces
+    # preemption once both slots cross into their third page
+    e = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=16,
+               page_size=4, num_pages=6, prefix_cache=False,
+               alloc_policy="ondemand")
+    emitted = {}
+    e.token_sink = lambda rid, tok: emitted.setdefault(rid, []).append(tok)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               (8,)).tolist(),
+                    max_new_tokens=8) for i in range(2)]
+    e.run(reqs)
+    assert e.preemptions > 0
+    by = _by_rid(e)
+    assert sorted(by) == [0, 1]
+    assert all(len(v) == 8 for v in by.values())
+    # the stream seen by the sink is exactly the final token list: a
+    # preempted request never re-emits or re-draws delivered tokens
+    assert emitted == by
+    assert e.allocator.available == e.num_pages  # nothing leaked
+    assert e.decode_compiles == 1
+
+
+def test_ondemand_admits_earlier_than_reserve(smollm_setup):
+    """The policy's point: reserve serializes the two requests (worst
+    case 4 pages each on a 6-page pool), ondemand co-runs them."""
+    cfg, qcfg, mcfg, params = smollm_setup
+    rng = np.random.default_rng(29)
+    reqs = lambda: [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, (8,)).tolist(), max_new_tokens=8)
+        for i in range(2)]
+    overlap = {}
+    for pol in ("reserve", "ondemand"):
+        e = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=16,
+                   page_size=4, num_pages=6, prefix_cache=False,
+                   alloc_policy=pol)
+        e.run(reqs())
+        by = {m.rid: m for m in e.completed}
+        overlap[pol] = by[1].t_admit < by[0].t_finish
+    assert not overlap["reserve"]  # second request waited for pages
+    assert overlap["ondemand"]     # both decoded concurrently
+
+
+def test_ondemand_abort_of_preempted_request(smollm_setup):
+    """Aborting a request while it waits out a preemption must drop it
+    cleanly: terminal event fires, the survivor finishes, and every
+    page returns to the pool."""
+    cfg, qcfg, mcfg, params = smollm_setup
+    rng = np.random.default_rng(31)
+    e = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=16,
+               page_size=4, num_pages=6, prefix_cache=False,
+               alloc_policy="ondemand")
+    fins = []
+    e.finish_sink = lambda rid, reason, rs: fins.append((rid, reason))
+    for i in range(2):
+        e.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, (8,)).tolist(), max_new_tokens=8))
+    while e.preemptions == 0:
+        assert e.step()
+    assert e.abort(1)  # rid 1 is the youngest, hence the victim
+    while e.step():
+        pass
+    assert (1, "aborted") in fins and (0, "length") in fins
+    assert [rs.request.rid for rs in e.aborted] == [1]
+    assert e.aborted[0].generated  # delivered prefix retained
+    assert sorted(_by_rid(e)) == [0]
+    assert e.allocator.available == e.num_pages
+
+
+def test_ondemand_deterministic_across_runs(smollm_setup):
+    """Same trace, same engine config: preemption timing and streams
+    must replay identically (reset clears all policy state)."""
+    cfg, qcfg, mcfg, params = smollm_setup
+    e = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=16,
+               page_size=4, num_pages=6, prefix_cache=False,
+               alloc_policy="ondemand")
+    rng = np.random.default_rng(37)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               (8,)).tolist(),
+                    max_new_tokens=8) for i in range(2)]
+    e.run(reqs)
+    first, pre = _by_rid(e), e.preemptions
+    e.reset()
+    e.run([Request(rid=r.rid, prompt=list(r.prompt),
+                   max_new_tokens=r.max_new_tokens) for r in reqs])
+    assert _by_rid(e) == first
+    assert e.preemptions == pre

@@ -6,7 +6,10 @@ current commit's entry:
 * **Invariants** — machine-independent claims that must hold in the
   freshest entry itself, whatever hardware produced it. Today:
   ``paged_vs_dense_tok_ratio >= 1.0`` (the paged serving path must not be
-  slower than dense on the same trace — the ISSUE-6 acceptance bar) and
+  slower than dense on the same trace — the ISSUE-6 acceptance bar),
+  ``spec_vs_paged_tok_ratio >= 1.3`` with ``spec_accept_rate_b8 >= 0.95``
+  (self-speculative decoding must beat the one-token-per-launch paged
+  engine, and the identity draft must accept essentially everything), and
   ``fwd_weight_bytes_ratio`` staying well under 1.0 (the dispatch path
   must never silently re-densify the weights).
 
@@ -45,6 +48,14 @@ TRACKED = {
     ("serving", "engine_speedup_vs_lockstep"): (TOL_RATIO, True),
     ("serving", "dense_tok_s"): (TOL_WALL, True),
     ("serving", "paged_tok_s"): (TOL_WALL, True),
+    ("serving", "spec_tok_s"): (TOL_WALL, True),
+    ("serving", "spec_vs_paged_tok_ratio"): (TOL_RATIO, True),
+    # accept rates are deterministic on the fixed bench trace (seeded
+    # weights, greedy decode) — a drift means the accept rule or the
+    # re-grid transform changed, so hold them tight
+    ("serving", "spec_accept_rate_b6"): (TOL_TIGHT, True),
+    ("serving", "spec_accept_rate_b7"): (TOL_TIGHT, True),
+    ("serving", "spec_accept_rate_b8"): (TOL_TIGHT, True),
     ("serving", "prefix_tok_s"): (TOL_WALL, True),
     ("serving", "prefix_prefill_tokens"): (TOL_TIGHT, False),
     ("serving", "prefix_reused_tokens"): (TOL_TIGHT, True),
@@ -56,6 +67,12 @@ TRACKED = {
 # (suite, name) -> (min_allowed, max_allowed)
 INVARIANTS = {
     ("serving", "paged_vs_dense_tok_ratio"): (1.0, None),
+    # speculating must beat the same paged engine decoding one token per
+    # launch (the ISSUE-7 acceptance bar: >= 1.3 on the bimodal trace)
+    ("serving", "spec_vs_paged_tok_ratio"): (1.3, None),
+    # the B=8 draft is the identity re-grid: every draft token must match
+    # the target sample modulo the bonus-token slot, so accept stays ~1
+    ("serving", "spec_accept_rate_b8"): (0.95, None),
     ("train_step", "fwd_weight_bytes_ratio"): (None, 0.9),
 }
 

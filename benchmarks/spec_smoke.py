@@ -1,0 +1,120 @@
+"""Speculative-decode CI smoke: equivalence and page accounting, asserted.
+
+The self-speculative engine's contract is that speculation is a pure
+throughput optimization — never a behavior change. This leg drives the
+smoke model through the paged ondemand engine twice (baseline and
+speculating) over one mixed greedy/seeded trace and hard-asserts:
+
+  * token-for-token equality per request (greedy AND seeded sampling:
+    accepted drafts are the target's own samples, the sampler fold
+    rewinds with the slot cursor),
+  * the KV page pool refcounts back to the baseline engine's after the
+    run (rollback trimmed every overshoot page) and back to *full* after
+    a mid-flight abort,
+  * spec counters actually moved (the run really speculated).
+
+Exit 0 on success; any assertion failing the contract exits non-zero.
+A summary record lands in ``BENCH_serving.json`` (``spec_smoke_*`` keys)
+so the trajectory shows the leg ran.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import csv_row, emit_bench, record  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.lns import LNSFormat  # noqa: E402
+from repro.core.quantizer import QuantConfig  # noqa: E402
+from repro.optim.madam import MadamConfig  # noqa: E402
+from repro.serving import Engine, Request  # noqa: E402
+from repro.server.sampling import SamplingParams  # noqa: E402
+from repro.training import init_train_state  # noqa: E402
+
+
+def _trace(vocab: int, n: int = 6, gen: int = 12):
+    """Greedy and seeded-sampled rows interleaved, varied lengths."""
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(n):
+        sp = None if i % 2 == 0 else SamplingParams(
+            temperature=0.8, top_k=0 if i % 4 == 1 else 16, seed=40 + i)
+        prompt = rng.integers(0, vocab, (5 + (i % 3) * 4,)).tolist()
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=gen - (i % 3), sampling=sp))
+    return reqs
+
+
+def run(k: int = 4, draft_bits: int = 7) -> list:
+    cfg = get_smoke_config("smollm-135m")
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    num_pages = 18
+    kw = dict(num_slots=3, max_len=48, page_size=8, num_pages=num_pages,
+              prefix_cache=False, alloc_policy="ondemand")
+    reqs = _trace(cfg.vocab_size)
+
+    base = Engine(cfg, qcfg, mcfg, params, **kw)
+    base.run(reqs)
+    want = {rs.request.rid: list(rs.generated) for rs in base.finished}
+
+    spec = Engine(cfg, qcfg, mcfg, params, **kw,
+                  speculate_k=k, draft_bitwidth=draft_bits)
+    spec.run(reqs)
+    got = {rs.request.rid: list(rs.generated) for rs in spec.finished}
+
+    mismatched = [rid for rid in want if got.get(rid) != want[rid]]
+    assert not mismatched, (
+        f"spec engine diverged from baseline on rids {mismatched}: "
+        f"speculation must be a pure perf optimization")
+    assert spec.spec_cycles > 0 and spec.spec_drafted > 0, \
+        "the spec engine never speculated — the smoke asserted nothing"
+    assert spec.allocator.available == base.allocator.available, (
+        f"page pool drifted: spec leaves {spec.allocator.available} free "
+        f"vs baseline {base.allocator.available} — rollback leaked pages")
+    accept = spec.spec_accept_rate
+    cycles, trimmed = spec.spec_cycles, spec.spec_pages_trimmed
+
+    # mid-flight abort: every page goes back, including lookahead pages
+    # grown for draft tokens that will now never be verified
+    spec.reset()
+    for r in _trace(cfg.vocab_size, n=3, gen=24):
+        spec.submit(r)
+    for _ in range(4):  # prefill + a spec cycle or two
+        spec.step()
+    assert spec.allocator.available < num_pages, "abort smoke never admitted"
+    for rid in range(3):
+        spec.abort(rid)
+    while spec.step():
+        pass
+    assert spec.allocator.available == num_pages, (
+        f"abort leaked pages: {spec.allocator.available}/{num_pages} free")
+
+    rows = [
+        csv_row("spec_smoke", 0.0,
+                f"requests={len(reqs)} k={k} draft_bits={draft_bits} "
+                f"accept_rate={accept:.3f} cycles={cycles} "
+                f"pages_trimmed={trimmed} equal=yes"),
+        record("spec_smoke_requests", len(reqs), unit="count"),
+        record("spec_smoke_accept_rate", accept, unit="ratio",
+               derived=f"k={k} draft_bits={draft_bits} seeded+greedy "
+                       f"token-equal to baseline"),
+    ]
+    emit_bench("serving", rows[1:])  # the csv row is terminal output only
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+    print("spec smoke: ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

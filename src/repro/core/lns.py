@@ -313,6 +313,24 @@ class LNSWeight:
         d.update(kw)
         return LNSWeight(**d)
 
+    def requant(self, bits: int) -> "LNSWeight":
+        """A *view* of this weight at another wire bitwidth: the packed
+        words are re-gridded with :func:`lns_requant_packed` (integer-only,
+        range-preserving — ``fmt.with_bits``) while the scale tensor is
+        shared by reference. This is how a low-bitwidth draft model falls
+        out of the number system for free (no second checkpoint): B=6/7
+        serving weights are the same 8-bit codes on a coarser exponent
+        grid. ``bits == fmt.bits`` returns ``self`` unchanged. The delta
+        carrier (training-only) is dropped — a requant view is a forward
+        datapath artifact."""
+        if self.fmt is None:
+            raise ValueError("LNSWeight.requant requires fmt")
+        dst = self.fmt.with_bits(bits)
+        if dst == self.fmt:
+            return self
+        return LNSWeight(lns_requant_packed(self.packed, self.fmt, dst),
+                         self.scale, None, dst)
+
     # -- conveniences -------------------------------------------------------
     @property
     def shape(self):

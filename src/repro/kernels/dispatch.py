@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lns import (LNSFormat, compute_scale, lns_decode_packed,
-                            lns_encode, lns_pack, lns_unpack, lns_word_dtype)
+                            lns_encode, lns_pack, lns_requant_packed,
+                            lns_unpack, lns_word_dtype)
 
 __all__ = [
     "BACKENDS",
@@ -52,6 +53,7 @@ __all__ = [
     "resolve_interpret",
     "qmatmul",
     "encode_pack",
+    "requant_pack",
     "madam_step",
     "paged_attend",
     "fused_sample",
@@ -210,6 +212,23 @@ def encode_pack(x: jax.Array, fmt: LNSFormat, scale_axis: Optional[int] = None,
     ).astype(jnp.float32)
     sign, code = lns_encode(x, fmt, srow)
     return lns_pack(sign, code, fmt), srow
+
+
+def requant_pack(packed: jax.Array, src: LNSFormat, dst: LNSFormat, *,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Re-grid packed wire words from ``src`` to ``dst`` bits (any rank).
+
+    The self-speculative draft transform (paper §6.1.1): a lower-bitwidth
+    *view* of the same weights on a coarser exponent grid — integer-only,
+    sign preserved, scales untouched. Both backends are bit-identical: the
+    Pallas kernel body traces :func:`lns_requant_packed` directly.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels.ops import requant_pack as requant_pack_op
+        return requant_pack_op(packed, src, dst,
+                               interpret=resolve_interpret(interpret))
+    return lns_requant_packed(packed, src, dst)
 
 
 def madam_step(packed: jax.Array, g: jax.Array, v: jax.Array,

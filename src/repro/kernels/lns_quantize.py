@@ -15,10 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.lns import LNSFormat
+from repro.core.lns import LNSFormat, lns_requant_packed
 from repro.kernels.dispatch import resolve_interpret
 
-__all__ = ["lns_quantize_pallas"]
+__all__ = ["lns_quantize_pallas", "lns_requant_pallas"]
 
 
 def _kernel(x_ref, s_ref, out_ref, *, bits: int, gamma: int):
@@ -30,6 +30,49 @@ def _kernel(x_ref, s_ref, out_ref, *, bits: int, gamma: int):
     e = -jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)) * gamma
     e = jnp.clip(jnp.floor(e + 0.5), 0, max_code).astype(jnp.uint32)
     out_ref[...] = ((neg << (bits - 1)) | e).astype(jnp.uint8)
+
+
+def _requant_kernel(w_ref, out_ref, *, src: LNSFormat, dst: LNSFormat):
+    # The kernel body IS the reference transform: lns_requant_packed is pure
+    # integer bit-slicing, so tracing it inside the Pallas block keeps the
+    # kernel and the jnp oracle one definition — they cannot drift.
+    out_ref[...] = lns_requant_packed(w_ref[...], src, dst)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("src", "dst", "block_r", "block_c", "interpret"))
+def lns_requant_pallas(
+    packed: jax.Array,
+    src: LNSFormat,
+    dst: LNSFormat,
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Re-grid packed wire words ``(R, C)`` from ``src`` to ``dst`` bits.
+
+    The draft-view transform of self-speculative decoding: integer-only
+    exponent re-grid (upscale multiplies by the γ ratio, downscale rounds
+    ties away from zero), sign bit repositioned to ``dst.bits - 1``. Scales
+    are untouched — callers share them with the source weight.
+    """
+    assert src.bits <= 8 and dst.bits <= 8, "packed-byte wire format"
+    R, C = packed.shape
+    assert R % block_r == 0 and C % block_c == 0, (
+        f"({R},{C}) must tile by ({block_r},{block_c})")
+
+    interpret = resolve_interpret(interpret)
+    grid = (R // block_r, C // block_c)
+    kernel = functools.partial(_requant_kernel, src=src, dst=dst)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.uint8),
+        interpret=interpret,
+    )(packed)
 
 
 @functools.partial(

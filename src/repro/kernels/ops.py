@@ -16,7 +16,7 @@ from repro.core.lns import LNSFormat, compute_scale, lns_encode, lns_pack
 from repro.kernels.dispatch import resolve_interpret
 from repro.kernels.lns_matmul import lns_matmul_pallas
 from repro.kernels.lns_qmatmul import lns_qmatmul_pallas
-from repro.kernels.lns_quantize import lns_quantize_pallas
+from repro.kernels.lns_quantize import lns_quantize_pallas, lns_requant_pallas
 from repro.kernels.madam_update import (madam_update_packed_pallas,
                                         madam_update_pallas)
 from repro.kernels.paged_attend import paged_attend_pallas
@@ -24,6 +24,7 @@ from repro.kernels.paged_attend import paged_attend_pallas
 __all__ = [
     "default_interpret",
     "quantize_pack",
+    "requant_pack",
     "lns_matmul",
     "lns_qmatmul",
     "madam_step",
@@ -73,6 +74,31 @@ def quantize_pack(
     packed = lns_quantize_pallas(xp, sp, fmt, block_r=block, block_c=block,
                                  interpret=interpret)
     return packed[:R0, :C0], srow
+
+
+def requant_pack(
+    packed: jax.Array,
+    src: LNSFormat,
+    dst: LNSFormat,
+    *,
+    block: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Re-grid a packed LNS tensor of any rank on the kernel path.
+
+    Flattens to 2-D, pads to tile multiples (pad words are ``src.max_code``
+    — smallest magnitude, positive sign — and are sliced off anyway), runs
+    :func:`lns_requant_pallas`, and restores the original shape. Bit-exact
+    against :func:`repro.core.lns.lns_requant_packed` by construction (the
+    kernel body traces the same definition).
+    """
+    interpret = resolve_interpret(interpret)
+    shape = packed.shape
+    flat = packed.reshape(-1, shape[-1]) if packed.ndim != 2 else packed
+    fp, R0, C0 = _pad2(flat, block, block, fill=src.max_code)
+    out = lns_requant_pallas(fp, src, dst, block_r=block, block_c=block,
+                             interpret=interpret)
+    return out[:R0, :C0].reshape(shape)
 
 
 def lns_matmul(

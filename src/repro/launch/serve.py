@@ -95,6 +95,15 @@ def main():
                          "worst case up front, 'ondemand' grows the block "
                          "table as decode proceeds and preempts by "
                          "recompute under pool pressure")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="self-speculative decoding: draft tokens per "
+                         "fused draft+verify cycle (0 = off)")
+    ap.add_argument("--draft-bitwidth", type=int, default=6,
+                    help="wire bitwidth of the draft re-grid view "
+                         "(8 = identity draft; 6/7 = coarser LNS grid)")
+    ap.add_argument("--spec-autotune", action="store_true",
+                    help="explore (draft bitwidth, k) arms from "
+                         "accept-rate/throughput feedback")
     ap.add_argument("--http", default=None, metavar="HOST:PORT",
                     help="serve online over HTTP/SSE instead of replaying "
                          "a synthetic trace (port 0 = ephemeral)")
@@ -127,7 +136,10 @@ def main():
                         num_slots=args.slots, max_len=max_len,
                         page_size=args.page_size, num_pages=args.num_pages,
                         prefix_cache=not args.no_prefix_cache,
-                        alloc_policy=args.alloc_policy)
+                        alloc_policy=args.alloc_policy,
+                        speculate_k=args.speculate_k,
+                        draft_bitwidth=args.draft_bitwidth,
+                        spec_autotune=args.spec_autotune)
         if args.http:
             _serve_http(engine, args.http, cfg.name, args.max_queue)
             return
@@ -148,6 +160,14 @@ def main():
                   f"preemptions={engine.preemptions} "
                   f"prefix_hits={engine.prefix_hits} "
                   f"reused_tokens={engine.prefix_reused_tokens}")
+        if engine.spec is not None:
+            print(f"speculative: cycles={engine.spec_cycles} "
+                  f"k={engine._spec_arm[1]} "
+                  f"draft_bits={engine._spec_arm[0]} "
+                  f"accept_rate={engine.spec_accept_rate:.3f} "
+                  f"emitted={engine.spec_emitted} "
+                  f"fallbacks={engine.spec_fallbacks} "
+                  f"pages_trimmed={engine.spec_pages_trimmed}")
         print(f"completed {int(agg['completed'])} requests in "
               f"{agg['wall_s']:.2f}s: {agg['tokens_per_s']:.1f} tok/s, "
               f"ttft mean {agg['ttft_mean_s']:.3f}s "

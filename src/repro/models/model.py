@@ -386,7 +386,8 @@ def _mtp_loss(params, hidden, tokens, labels, cfg: ArchConfig, qcfg):
 
 def init_caches(batch: int, max_len: int, cfg: ArchConfig, *,
                 page_size: Optional[int] = None,
-                num_pages: Optional[int] = None) -> Dict[str, Any]:
+                num_pages: Optional[int] = None,
+                window_slack: int = 0) -> Dict[str, Any]:
     """Allocate decode caches matching the trunk structure.
 
     With ``page_size`` the full-context attention layers allocate one
@@ -395,6 +396,15 @@ def init_caches(batch: int, max_len: int, cfg: ArchConfig, *,
     ``(batch, max_len)`` buffer; ``forward`` then needs ``block_tables``.
     Sliding-window rings, recurrent state, and MLA caches keep their dense
     per-slot layout (DESIGN.md §7.1).
+
+    ``window_slack`` over-allocates sliding-window rings by that many
+    positions beyond ``cfg.sliding_window`` (the attention *mask* still
+    uses the config window). Speculative decoding needs it: a cursor
+    rewind after a rejected draft must not have let the ring's write head
+    lap a position that is still inside the mask window — with ``slack >=
+    k`` draft writes land only on slots that are already outside the mask
+    for every attendable query, so stale words are overwritten before they
+    can ever be read (DESIGN.md §11).
     """
     prefix, n_periods, period = cfg.layer_pattern()
     if page_size is not None and num_pages is None:
@@ -410,8 +420,9 @@ def init_caches(batch: int, max_len: int, cfg: ArchConfig, *,
                                                     page_size, cfg)
             return attn_mod.init_kv_cache(batch, max_len, cfg)
         if kind == "local":
-            return attn_mod.init_kv_cache(batch, max_len, cfg,
-                                          window=cfg.sliding_window)
+            return attn_mod.init_kv_cache(
+                batch, max_len, cfg,
+                window=cfg.sliding_window + window_slack)
         if kind == "shared_attn":
             if paged:
                 return attn_mod.init_paged_kv_cache(batch, num_pages,

@@ -313,7 +313,7 @@ class Gateway:
 
     async def _unary(self, rid: int, creq, sink: _AsyncSink,
                      reader, writer) -> None:
-        tokens, reason = [], None
+        tokens, reason, spec = [], None, None
         async for event in self._events(rid, sink, reader):
             if event[0] == "token":
                 tokens.append(event[1])
@@ -321,11 +321,14 @@ class Gateway:
                 reason = event[1]
                 if event[2] is not None:
                     tokens = event[2]
+                # internal error paths still emit bare 3-tuples
+                spec = event[3] if len(event) > 3 else None
         if reason is None:
             return  # client disconnected; request aborted, nothing to say
         status = 500 if reason == "error" else 200
         payload = protocol.completion_body(
-            rid, self._model, len(creq.prompt), tokens, reason).encode()
+            rid, self._model, len(creq.prompt), tokens, reason,
+            spec=spec).encode()
         writer.write(_http_head(status, "application/json", len(payload)))
         writer.write(payload)
         await _drain(writer)

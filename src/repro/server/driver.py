@@ -22,8 +22,12 @@ thread and exposes a thread-safe surface:
   latency summary) refreshed once per loop iteration.
 
 Events a sink receives: ``("token", tok)`` per generated token and one
-terminal ``("finish", reason, token_list | None)`` with reason in
-``{"stop", "length", "capacity", "aborted", "error"}``.
+terminal ``("finish", reason, token_list | None[, spec_dict])`` with
+reason in ``{"stop", "length", "capacity", "aborted", "error"}``. The
+optional 4th element carries the request's speculative-decoding usage
+(cycles/drafted/accepted) when the engine speculated for it; consumers
+index it defensively (``event[3] if len(event) > 3 else None``) —
+internal error paths still emit bare 3-tuples.
 """
 from __future__ import annotations
 
@@ -187,7 +191,13 @@ class EngineDriver:
             elif reason == "error":
                 self._errors += 1
         if sink is not None:
-            sink(("finish", reason, list(rs.generated) if rs else None))
+            spec = None
+            if rs is not None and rs.spec_cycles:
+                spec = {"cycles": rs.spec_cycles,
+                        "drafted": rs.spec_drafted,
+                        "accepted": rs.spec_accepted}
+            sink(("finish", reason, list(rs.generated) if rs else None,
+                  spec))
 
     # ------------------------------------------------------------------
     # driver thread
@@ -275,5 +285,8 @@ class EngineDriver:
             snap["kv_pages_available"] = eng.allocator.available
             snap["kv_pages_total"] = eng.num_pages
             snap["prefix_hits"] = eng.prefix_hits
+        spec = eng.spec_snapshot()
+        if spec is not None:
+            snap.update(spec)
         with self._lock:
             self._stats = snap

@@ -117,13 +117,20 @@ def _choice(token_ids: List, finish_reason: Optional[str],
 
 
 def completion_body(rid: int, model: str, prompt_tokens: int,
-                    token_ids: List, finish_reason: str) -> str:
+                    token_ids: List, finish_reason: str,
+                    spec: Optional[dict] = None) -> str:
+    """Terminal unary body. ``spec`` (when the engine speculated for this
+    request) lands under ``usage.speculation`` — cycles the request rode,
+    draft tokens scored for it, and how many the verify pass accepted."""
+    usage = {"prompt_tokens": prompt_tokens,
+             "completion_tokens": len(token_ids),
+             "total_tokens": prompt_tokens + len(token_ids)}
+    if spec is not None:
+        usage["speculation"] = spec
     return json.dumps({
         "id": f"cmpl-{rid}", "object": "text_completion", "model": model,
         "choices": [_choice(token_ids, finish_reason, delta=False)],
-        "usage": {"prompt_tokens": prompt_tokens,
-                  "completion_tokens": len(token_ids),
-                  "total_tokens": prompt_tokens + len(token_ids)},
+        "usage": usage,
     })
 
 

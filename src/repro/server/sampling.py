@@ -158,7 +158,8 @@ def _batch_sample(lg, temp, top_k, top_p, seed, step, codebook,
 def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
                   num_codebooks: int = 0,
                   vocab_size: Optional[int] = None,
-                  backend: Optional[str] = None) -> jax.Array:
+                  backend: Optional[str] = None,
+                  step_offset=None) -> jax.Array:
     """Batch sampler: ``logits (B, V)`` (or ``(B, K*V)`` for codebook
     stacks) + per-slot parameter arrays -> token ids ``(B,)`` / ``(B, K)``.
 
@@ -167,9 +168,17 @@ def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
     ``kernels.dispatch``). Safe to run over idle slots (the engine resets
     them to greedy); only shapes are traced, so admissions never recompile
     the decode step.
+
+    ``step_offset`` (scalar or ``(B,)``) shifts the fold counter without
+    mutating ``rows``: the speculative verify pass scores position ``j`` of
+    its k-token suffix with ``step + j``, reproducing exactly the key the
+    baseline engine would fold for that token. Rollback is then free — the
+    host simply advances its step counter by the accepted count.
     """
     temp, top_k = rows["temp"], rows["top_k"]
     top_p, seed, step = rows["top_p"], rows["seed"], rows["step"]
+    if step_offset is not None:
+        step = step + step_offset
     if num_codebooks:
         b = logits.shape[0]
         lg = logits.reshape(b, num_codebooks, vocab_size)

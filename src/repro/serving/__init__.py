@@ -2,8 +2,12 @@ from repro.serving.engine import DEFAULT_BUCKETS, Engine
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
 from repro.serving.scheduler import BlockAllocator, Scheduler
+from repro.serving.spec import (SpecAutotuner, SpecConfig,
+                                build_draft_params, spec_supported)
 from repro.serving.trace import max_trace_len, synthetic_trace
 
 __all__ = ["BlockAllocator", "DEFAULT_BUCKETS", "Engine", "Request",
            "RequestMetrics", "RequestQueue", "RequestState", "Scheduler",
-           "max_trace_len", "summarize", "synthetic_trace"]
+           "SpecAutotuner", "SpecConfig", "build_draft_params",
+           "max_trace_len", "spec_supported", "summarize",
+           "synthetic_trace"]

@@ -77,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantizer import QuantConfig
+from repro.kernels import dispatch
 from repro.models.common import ArchConfig
 from repro.models.model import forward, init_caches
 from repro.optim.madam import MadamConfig
@@ -84,6 +85,8 @@ from repro.server.sampling import sample_logits, sampling_rows, set_row
 from repro.serving.metrics import RequestMetrics, summarize
 from repro.serving.request import Request, RequestQueue, RequestState
 from repro.serving.scheduler import BlockAllocator, Scheduler
+from repro.serving.spec import (SpecAutotuner, SpecConfig, build_draft_params,
+                                request_class, spec_supported)
 from repro.training.steps import build_decode_step
 
 __all__ = ["Engine", "DEFAULT_BUCKETS", "ADMIT_FAIL_TRIP"]
@@ -108,6 +111,17 @@ def _set_cursor(caches, n):
     def visit(path, leaf):
         if getattr(path[-1], "key", None) == "idx":
             return jnp.full_like(leaf, n)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def _set_cursor_rows(caches, n):
+    """Set every per-slot cache cursor to the per-row vector ``n`` (B,) —
+    the speculative rewind: cursor leaves are (B,) or period-stacked
+    (n_periods, B), both broadcast targets of a (B,) row vector."""
+    def visit(path, leaf):
+        if getattr(path[-1], "key", None) == "idx":
+            return jnp.broadcast_to(n.astype(leaf.dtype), leaf.shape)
         return leaf
     return jax.tree_util.tree_map_with_path(visit, caches)
 
@@ -141,6 +155,9 @@ class Engine:
         num_pages: Optional[int] = None,
         prefix_cache: bool = True,
         alloc_policy: str = "reserve",
+        speculate_k: int = 0,
+        draft_bitwidth: int = 6,
+        spec_autotune: bool = False,
     ):
         if alloc_policy not in ("reserve", "ondemand"):
             raise ValueError(f"alloc_policy must be 'reserve' or "
@@ -171,7 +188,29 @@ class Engine:
         self.alloc_policy = alloc_policy if self._paged else None
         self._ondemand = self._paged and alloc_policy == "ondemand"
 
+        # self-speculative decoding (DESIGN.md §11): the draft model is a
+        # low-bitwidth re-grid *view* of the serving weights, built lazily
+        # per bitwidth in _draft_params. Sliding-window rings over-allocate
+        # by k_max positions (window_slack) so a post-rejection rewind can
+        # never have let the write head lap a maskable position.
+        self.spec: Optional[SpecConfig] = None
+        self._spec_slack = 0
+        if speculate_k:
+            reason = spec_supported(cfg)
+            if reason is not None:
+                raise ValueError(
+                    f"speculative decoding unsupported here: {reason}")
+            self.spec = SpecConfig(k=int(speculate_k),
+                                   draft_bits=int(draft_bitwidth),
+                                   autotune=bool(spec_autotune))
+            self._spec_k_max = max(k for _, k in self.spec.arms()) \
+                if spec_autotune else self.spec.k
+            if self._window is not None:
+                self._spec_slack = self._spec_k_max
+
+        self._scan_unroll = scan_unroll
         decode = build_decode_step(cfg, qcfg, mcfg, scan_unroll=scan_unroll)
+        self._decode_step = decode
 
         def decode_sample(params, caches, batch, pos, samp):
             # sampling fused into the decode jit: logits never leave the
@@ -181,6 +220,15 @@ class Engine:
 
         self._decode_fn = jax.jit(decode_sample, donate_argnums=(1,))
         self._sample_fn = jax.jit(self._sample_impl)  # prefill logits
+        if self.spec is not None:
+            # one fused launch per cycle: k draft decodes + the S=k verify
+            # + accept/rewind. k is static (the draft loop unrolls in the
+            # trace) and the draft tree's LNSFormat is static aux data, so
+            # each (bits, k) arm compiles its own entry exactly once.
+            self._spec_fn = jax.jit(self._spec_cycle_impl,
+                                    static_argnames=("k",),
+                                    donate_argnums=(2,))
+            self._draft_views: Dict[int, Any] = {}
         # per-token / terminal event hooks (the gateway driver's taps);
         # called synchronously from step()/_admit() with (rid, token) and
         # (rid, reason, RequestState | None)
@@ -193,8 +241,10 @@ class Engine:
         self._prefill_fn = jax.jit(impl, donate_argnums=(1,))
         if not self._paged:
             # zero batch-1 cache reused by every dense admission's prefill
-            # (the jit body is functional, the template never mutates)
-            self._mini_template = init_caches(1, max_len, cfg)
+            # (the jit body is functional, the template never mutates);
+            # ring slack must match the engine cache or scatter shapes split
+            self._mini_template = init_caches(1, max_len, cfg,
+                                              window_slack=self._spec_slack)
 
         self._reset_state()
 
@@ -202,7 +252,8 @@ class Engine:
         cfg = self.cfg
         self.caches = init_caches(self.num_slots, self.max_len, cfg,
                                   page_size=self.page_size,
-                                  num_pages=self.num_pages or None)
+                                  num_pages=self.num_pages or None,
+                                  window_slack=self._spec_slack)
         allocator = None
         if self._paged:
             allocator = BlockAllocator(self.num_pages, self.page_size)
@@ -235,6 +286,21 @@ class Engine:
         self._preempted: Dict[int, RequestState] = {}
         self.preemptions = 0             # recompute evictions under pressure
         self.decode_page_allocs = 0      # pages mapped mid-decode (ondemand)
+        # speculative decoding counters (zeroed even when spec is off so
+        # stats consumers can read them unconditionally)
+        self.spec_cycles = 0             # fused draft+verify launches
+        self.spec_draft_steps = 0        # draft decodes (k per cycle)
+        self.spec_verify_steps = 0       # S=k verify passes (1 per cycle)
+        self.spec_drafted = 0            # draft tokens scored (live slots)
+        self.spec_accepted = 0           # drafts the target agreed with
+        self.spec_emitted = 0            # tokens delivered by spec cycles
+        self.spec_fallbacks = 0          # steps forced down the 1-token path
+        self.spec_pages_trimmed = 0      # overshoot pages returned (ondemand)
+        self._tuner: Optional[SpecAutotuner] = None
+        if self.spec is not None:
+            self._spec_arm = (self.spec.draft_bits, self.spec.k)
+            if self.spec.autotune:
+                self._tuner = SpecAutotuner(self.spec)
         # eager epoch: now() is read from other threads (online arrival
         # stamps) — lazy init would race the first step()'s _now()
         self._t0: Optional[float] = time.monotonic()
@@ -339,6 +405,74 @@ class Engine:
 
         return logits, zip_tree(big, filled)
 
+    def _spec_cycle_impl(self, dparams, params, caches, last_tok, pos, samp,
+                         block_tables, *, k):
+        """One fused speculative cycle (DESIGN.md §11), a single jit:
+
+        1. k greedy S=1 draft decodes with the re-grid view ``dparams``,
+           advancing the per-row cursors pos -> pos+k (draft KV written by
+           the *target-precision* cache path — the draft only changes the
+           weights the logits come from, never the cache contents, so an
+           accepted position's KV is exactly what the baseline engine
+           would have written for that token);
+        2. cursor rewind to ``pos`` and one S=k verify ``forward`` with
+           the full-precision weights over [last_tok, draft[:, :-1]] —
+           position j's logits condition on the same prefix the baseline
+           would see when sampling its (step+j)-th token;
+        3. per-position target sampling with the fold counter offset by j
+           (``sample_logits(step_offset=j)`` — seeded chains replay
+           token-for-token), the longest-agreeing-prefix accept rule, and
+           an in-graph rewind of every cursor to pos+m.
+
+        Returns ``(s, acc, m, caches)``: the target's samples (B, k), the
+        accepted-draft count (B,), and the emitted count ``m = min(acc+1,
+        k)`` — the bonus +1 is the target's own sample at the first
+        disagreement (or the run's end), which is always correct to emit.
+        Rejected writes at positions >= pos+m are dead: cursors moved
+        back, so they are masked everywhere and overwritten before those
+        positions ever become attendable again.
+        """
+        decode = self._decode_step
+        cur = last_tok
+        drafts = []
+        for j in range(k):  # static unroll: one launch, no host ping-pong
+            batch = {"tokens": cur[:, None]}
+            if block_tables is not None:
+                batch["block_tables"] = block_tables
+            logits, caches = decode(dparams, caches, batch, pos + j)
+            cur = dispatch.fused_sample(
+                logits.astype(jnp.float32), None, None,
+                backend=self.qcfg.backend if self.qcfg is not None else None)
+            drafts.append(cur)
+        draft = jnp.stack(drafts, axis=1)                       # (B, k)
+
+        caches = _set_cursor_rows(caches, pos)
+        x = jnp.concatenate([last_tok[:, None], draft[:, :-1]], axis=1)
+        out = forward(params, x, self.cfg, self.qcfg, caches=caches,
+                      pos_offset=pos, block_tables=block_tables,
+                      scan_unroll=self._scan_unroll)
+        caches = out.caches
+        s = jnp.stack([self._sample_impl(out.logits[:, j], samp,
+                                         step_offset=j)
+                       for j in range(k)], axis=1)              # (B, k)
+
+        eq = (draft == s).astype(jnp.int32)
+        acc = jnp.sum(jnp.cumprod(eq, axis=1), axis=1)          # (B,)
+        m = jnp.minimum(acc + 1, k)
+        caches = _set_cursor_rows(caches, pos + m)
+        return s, acc, m, caches
+
+    def _draft_params(self, bits: int):
+        """The (cached) draft view at ``bits`` wire bits — shared scales,
+        shared non-LNS leaves; bits == serving bits returns the target
+        tree itself (the identity arm: every draft accepts)."""
+        view = self._draft_views.get(bits)
+        if view is None:
+            backend = self.qcfg.backend if self.qcfg is not None else None
+            view = build_draft_params(self.params, bits, backend=backend)
+            self._draft_views[bits] = view
+        return view
+
     # ------------------------------------------------------------------
     # shape bucketing
 
@@ -432,14 +566,16 @@ class Engine:
         TTFT share the engine's timebase."""
         return self._now()
 
-    def _sample_impl(self, logits, samp):
+    def _sample_impl(self, logits, samp, step_offset=None):
         """On-device sampler body (jitted standalone for prefill logits,
-        inlined into the decode jit for the hot loop)."""
+        inlined into the decode jit for the hot loop; ``step_offset``
+        shifts the fold counter for the speculative verify positions)."""
         return sample_logits(logits, samp,
                              num_codebooks=self.cfg.num_codebooks,
                              vocab_size=self.cfg.vocab_size,
                              backend=self.qcfg.backend
-                             if self.qcfg is not None else None)
+                             if self.qcfg is not None else None,
+                             step_offset=step_offset)
 
     def _samp_row(self, slot: int) -> Dict[str, jax.Array]:
         """Batch-1 view of one slot's sampling params (prefill sample)."""
@@ -539,10 +675,24 @@ class Engine:
         self._release_slot(rs)
         self.queue.requeue(rs.request)
 
-    def _grow_decode_pages(self) -> None:
-        """Map one fresh page onto every running slot whose next decode
-        write crosses into unmapped territory (``ondemand`` policy: the
-        admission reservation covered only the prefill). Under pool
+    def _write_span(self, rs: RequestState, lookahead: int) -> tuple:
+        """The position span ``[n, last]`` the next ``lookahead`` decode
+        writes may touch for ``rs`` — clamped to the request's own page
+        demand (``_pages_for``'s formula: the final budgeted token is
+        returned but never cached) so speculative lookahead never maps
+        pages the request cannot use. The immediate next write position
+        is always in the span (the baseline single-token step)."""
+        n = int(self._slot_len[rs.slot])
+        req = rs.request
+        limit = min(req.prompt_len + max(req.max_new_tokens - 1, 0),
+                    self.max_len)
+        return n, min(n + lookahead, max(limit, n + 1)) - 1
+
+    def _grow_decode_pages(self, lookahead: int = 1) -> None:
+        """Map fresh pages onto every running slot whose next ``lookahead``
+        decode writes cross into unmapped territory (``ondemand`` policy:
+        the admission reservation covered only the prefill; a speculative
+        cycle asks for its whole k-token span up front). Under pool
         exhaustion the *youngest* running request yields (preemption by
         recompute) until the allocation succeeds — the oldest running
         request is never a victim, so FCFS progress is guaranteed."""
@@ -550,26 +700,48 @@ class Engine:
         for rs in sorted(self.scheduler.running.values(), key=self._age):
             if self.scheduler.running.get(rs.slot) is not rs:
                 continue  # evicted by an older slot's growth this step
-            pi = int(self._slot_len[rs.slot]) // page
+            n, last = self._write_span(rs, lookahead)
             bt = self._block_tables[rs.slot]
-            if pi >= self._max_pages or bt[pi] != self._null_page:
-                continue
-            got = self.allocator.alloc(1)
-            while got is None:
-                victim = max(
-                    (v for v in self.scheduler.running.values()
-                     if v is not rs), key=self._age, default=None)
-                if victim is None:
-                    victim = rs  # alone and still starved: yield fully
-                self._preempt(victim)
-                if victim is rs:
-                    break
+            for pi in range(n // page,
+                            min(last // page, self._max_pages - 1) + 1):
+                if bt[pi] != self._null_page:
+                    continue
                 got = self.allocator.alloc(1)
-            if got is None:
-                continue  # rs evicted itself; its row idles this step
-            bt[pi] = got[0]
-            self._slot_pages[rs.slot].append(got[0])
-            self.decode_page_allocs += 1
+                while got is None:
+                    victim = max(
+                        (v for v in self.scheduler.running.values()
+                         if v is not rs), key=self._age, default=None)
+                    if victim is None:
+                        victim = rs  # alone and still starved: yield fully
+                    self._preempt(victim)
+                    if victim is rs:
+                        break
+                    got = self.allocator.alloc(1)
+                if got is None:
+                    break  # rs evicted itself; its row idles this step
+                bt[pi] = got[0]
+                self._slot_pages[rs.slot].append(got[0])
+                self.decode_page_allocs += 1
+
+    def _trim_overshoot(self, rs: RequestState) -> None:
+        """Return a slot's overshoot pages after a speculative cycle: any
+        page wholly beyond the next write position was mapped for draft
+        tokens the verify rejected. Only decode-growth pages live out
+        there (prefix/prefill pages all sit at or below the cursor's
+        page), so the release can never touch a shared or registered
+        page."""
+        page = self.page_size
+        keep = int(self._slot_len[rs.slot]) // page  # next-write page
+        bt = self._block_tables[rs.slot]
+        pages = self._slot_pages[rs.slot]
+        for pi in range(keep + 1, self._max_pages):
+            pid = int(bt[pi])
+            if pid == self._null_page:
+                continue
+            self.allocator.release([pid])
+            pages.remove(pid)
+            bt[pi] = self._null_page
+            self.spec_pages_trimmed += 1
 
     # ------------------------------------------------------------------
     # admission / decode
@@ -766,6 +938,118 @@ class Engine:
                 return True
         return False
 
+    # ------------------------------------------------------------------
+    # speculative decoding (host side)
+
+    def _spec_ready(self, k: int) -> bool:
+        """Every running slot can host a k-token speculative span: the
+        dense row-insert must not clamp at capacity, and (paged) every
+        page a surviving write could land in must be mapped — a dropped
+        write is only safe past the request's own budget limit."""
+        for rs in self.scheduler.running.values():
+            n = int(self._slot_len[rs.slot])
+            if n + k > self.max_len:
+                return False
+            if self._paged:
+                page = self.page_size
+                _, last = self._write_span(rs, k)
+                bt = self._block_tables[rs.slot]
+                for pi in range(n // page, last // page + 1):
+                    if bt[pi] == self._null_page:
+                        return False
+        return True
+
+    def _spec_step(self, clock, k: int) -> None:
+        """Run one fused speculative cycle and apply its outcome on the
+        host: emit the accepted run (plus the verify's bonus token) per
+        live slot, advance the cursor/sampler mirrors by the emitted
+        count, finish any terminal transition inside the run, and return
+        overshoot pages. Every emitted token is the *target* model's own
+        sample at the correct fold counter, so the stream is
+        token-for-token the baseline engine's (see DESIGN.md §11 for the
+        per-tensor activation-scale ULP caveat)."""
+        bits, _ = self._spec_arm
+        t0 = time.monotonic()
+        pos0 = self._slot_len.copy()
+        batch_bt = jnp.asarray(self._block_tables) if self._paged else None
+        samp = {kk: jnp.asarray(v) for kk, v in self._samp.items()}
+        s_dev, acc_dev, m_dev, self.caches = self._spec_fn(
+            self._draft_params(bits), self.params, self.caches,
+            jnp.asarray(self._last_tok), jnp.asarray(pos0, jnp.int32),
+            samp, batch_bt, k=k)
+        s = np.array(s_dev)
+        acc = np.array(acc_dev)
+        m = np.array(m_dev).astype(np.int64)
+        self._admit_fail_streak = 0
+        self.spec_cycles += 1
+        self.spec_draft_steps += k
+        self.spec_verify_steps += 1
+        # per-row mirrors advance by the emitted count — idle rows too
+        # (they drafted greedily into dead rows, exactly as the baseline
+        # step advances every row by 1)
+        self._slot_len = pos0 + m
+        self._samp["step"] += m.astype(np.int32)
+        self._last_tok = s[np.arange(self.num_slots), m - 1].astype(np.int32)
+        emitted_total = 0
+        per_class: Dict[str, Any] = {}
+        for slot, rs in list(self.scheduler.running.items()):
+            a = int(acc[slot])
+            self.spec_drafted += k
+            self.spec_accepted += a
+            rs.spec_cycles += 1
+            rs.spec_drafted += k
+            rs.spec_accepted += a
+            if self._tuner is not None:
+                cls = request_class(rs.request)
+                ca, cd = per_class.get(cls, (0, 0))
+                per_class[cls] = (ca + a, cd + k)
+            for j in range(int(m[slot])):
+                rs.generated.append(int(s[slot, j]))
+                emitted_total += 1
+                if self.token_sink is not None:
+                    self.token_sink(rs.request.rid, rs.generated[-1])
+                if rs.done:
+                    # a stop/budget transition inside the accepted run is
+                    # terminal — the run's later tokens were never part of
+                    # the baseline stream and are dropped unemitted (the
+                    # cursor overshoot is moot: the slot releases below)
+                    break
+            self._maybe_finish(rs, clock)
+            if self._ondemand and self.scheduler.running.get(slot) is rs:
+                self._trim_overshoot(rs)
+        self.spec_emitted += emitted_total
+        if self._tuner is not None:
+            self._tuner.observe(self._spec_arm, emitted_total,
+                                time.monotonic() - t0, per_class)
+            self._spec_arm = self._tuner.propose()
+
+    @property
+    def spec_accept_rate(self) -> float:
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
+
+    def spec_snapshot(self) -> Optional[Dict[str, Any]]:
+        """Flat JSON-safe dict of speculative-decoding state for
+        ``/metrics`` (None when speculation is off)."""
+        if self.spec is None:
+            return None
+        snap: Dict[str, Any] = {
+            "spec_cycles": self.spec_cycles,
+            "spec_draft_steps": self.spec_draft_steps,
+            "spec_verify_steps": self.spec_verify_steps,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_fallbacks": self.spec_fallbacks,
+            "spec_pages_trimmed": self.spec_pages_trimmed,
+            "spec_accept_rate": round(self.spec_accept_rate, 4),
+            "spec_draft_bits": self._spec_arm[0],
+            "spec_k": self._spec_arm[1],
+        }
+        if self._tuner is not None:
+            snap.update(self._tuner.snapshot())
+        return snap
+
     def step(self, now: Optional[float] = None) -> bool:
         """Admit ready requests, then advance every occupied slot one
         token. Returns False when there was nothing to do.
@@ -844,10 +1128,19 @@ class Engine:
                 self._fail_admission(rs, resv, clock)
                 if self._admit_fail_streak >= ADMIT_FAIL_TRIP:
                     raise
+        spec_k = self._spec_arm[1] if self.spec is not None else 0
         if self._ondemand:
-            self._grow_decode_pages()
+            self._grow_decode_pages(lookahead=max(spec_k, 1))
         if not self.scheduler.running:
             return False
+
+        if spec_k:
+            if self._spec_ready(spec_k):
+                self._spec_step(clock, spec_k)
+                return True
+            # a slot too close to capacity / an unmapped page under pool
+            # pressure: advance everyone one plain token this step
+            self.spec_fallbacks += 1
 
         tokens = self._last_tok[:, None]  # (B, 1[, K])
         pos = jnp.asarray(self._slot_len, jnp.int32)

@@ -67,6 +67,12 @@ class RequestState:
     # terminal disposition: "stop" (stop token), "length" (budget),
     # "capacity" (cache full -> truncated), "aborted" (cancelled)
     finish_reason: Optional[str] = None
+    # speculative decoding accounting (engine fills these when a spec
+    # cycle covered this request's slot): cycles seen, draft tokens
+    # scored for it, and how many of those the verify pass accepted
+    spec_cycles: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     @property
     def aborted(self) -> bool:

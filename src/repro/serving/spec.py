@@ -1,0 +1,196 @@
+"""Self-speculative decoding support: draft views, support gating, autotuner.
+
+The draft model is *free* in LNS-Madam: bitwidth is a pure re-grid of the
+packed wire word (`lns_requant_packed`), so a B=6/7 draft is the same
+8-bit weights on a coarser exponent grid — shared scale tensors, zero
+extra checkpoints (paper §6.1.1; the per-bitwidth datapath argument of
+the Bitwidth-Specific Logarithmic Arithmetic paper in PAPERS.md). The
+engine re-grids the serving tree once at init via
+:func:`build_draft_params`, runs k greedy draft steps per slot, then
+scores all k tokens with the full-precision weights in a single S=k
+verify pass (see ``serving/engine.py`` and DESIGN.md §11).
+
+This module is engine-agnostic: it owns the parameter transform, the
+"can this architecture rewind?" predicate, and the accept-rate feedback
+autotuner over (draft bitwidth, k) arms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.lns import LNSWeight, is_lns_weight
+from repro.kernels import dispatch
+
+__all__ = ["SpecConfig", "spec_supported", "build_draft_params",
+           "request_class", "SpecAutotuner"]
+
+Arm = Tuple[int, int]  # (draft_bits, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative decoding settings.
+
+    k:            draft tokens per cycle (>= 1); the verify pass scores all
+                  k in one S=k suffix forward.
+    draft_bits:   wire bitwidth of the draft view (8 = identity view —
+                  drafts are the target model itself; every draft accepts).
+    autotune:     explore (bits, k) arms from accept-rate/throughput
+                  feedback instead of pinning the configured pair.
+    bits_choices/k_choices: the autotuner's arm grid (the configured
+                  (draft_bits, k) is always included).
+    decide_every: cycles between autotuner arm decisions.
+    min_visits:   decisions each arm gets before exploitation starts.
+    ema:          smoothing factor for reward / accept-rate EMAs.
+    """
+
+    k: int = 4
+    draft_bits: int = 6
+    autotune: bool = False
+    bits_choices: Tuple[int, ...] = (6, 7, 8)
+    k_choices: Tuple[int, ...] = (2, 4, 8)
+    decide_every: int = 8
+    min_visits: int = 1
+    ema: float = 0.25
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculate k must be >= 1, got {self.k}")
+        if not 2 <= self.draft_bits <= 8:
+            raise ValueError(
+                f"draft_bits must be in [2, 8], got {self.draft_bits}")
+
+    def arms(self) -> List[Arm]:
+        """The autotuner grid (configured arm first, then the rest)."""
+        base = (self.draft_bits, self.k)
+        grid = [base]
+        for b, k in itertools.product(self.bits_choices, self.k_choices):
+            if (b, k) != base:
+                grid.append((b, k))
+        return grid
+
+
+def spec_supported(cfg) -> Optional[str]:
+    """None when speculative decoding is sound for ``cfg``, else the reason.
+
+    Rewind works by resetting per-slot KV cursors — attention caches
+    (dense, ring, paged, MLA) are position-addressed, so rejected writes
+    are simply overwritten and never attendable. Recurrent layers fold
+    state irreversibly (no cursor to rewind) and multi-codebook heads
+    emit token *tuples* the accept math does not model.
+    """
+    prefix, _, period = cfg.layer_pattern()
+    kinds = set(prefix) | set(period)
+    if kinds & {"mamba", "rwkv"}:
+        return "recurrent layers cannot rewind rejected draft state"
+    if getattr(cfg, "num_codebooks", 0):
+        return "multi-codebook sampling is not modelled by the accept rule"
+    return None
+
+
+def build_draft_params(params, bits: int, *, backend: Optional[str] = None):
+    """Re-grid every ``LNSWeight`` leaf of ``params`` to ``bits`` wire bits.
+
+    Scale tensors (and every non-LNS leaf: embeddings kept in LNS too, so
+    in practice norms/biases) are shared **by reference** — the view costs
+    one uint8 tree, nothing else. ``bits == fmt.bits`` leaves are returned
+    unchanged, so the B=8 view *is* the target tree. The packed transform
+    goes through ``dispatch.requant_pack`` (Pallas on TPU/GPU, the
+    bit-identical jnp re-grid on CPU).
+    """
+    def one(leaf):
+        if not is_lns_weight(leaf):
+            return leaf
+        dst = leaf.fmt.with_bits(bits)
+        if dst == leaf.fmt:
+            return leaf
+        packed = dispatch.requant_pack(leaf.packed, leaf.fmt, dst,
+                                       backend=backend)
+        return LNSWeight(packed, leaf.scale, None, dst)
+
+    return jax.tree.map(one, params, is_leaf=is_lns_weight)
+
+
+def request_class(request) -> str:
+    """Autotuner request class: greedy requests accept far more drafts
+    than sampled ones (temperature noise breaks draft/target agreement),
+    so accept-rate feedback is tracked per class."""
+    sp = request.sampling
+    return "greedy" if sp is None or sp.is_greedy else "sampled"
+
+
+class SpecAutotuner:
+    """Deterministic bandit over (draft_bits, k) arms.
+
+    Reward is *measured emitted tokens per second per cycle* (EMA per
+    arm) — the only number that folds accept rate, draft cost, and verify
+    cost into one objective. Exploration is deterministic (no RNG, so a
+    replayed trace tunes identically): arms are first visited round-robin
+    ``min_visits`` times, then every fourth decision re-measures the
+    least-recently-decided arm while the rest exploit the best EMA.
+    Per-(bits, class) accept-rate EMAs ride along for observability
+    (``/metrics``) and are the raw feedback signal requested by DESIGN
+    §11.
+    """
+
+    def __init__(self, cfg: SpecConfig):
+        self.cfg = cfg
+        self.arms: List[Arm] = cfg.arms()
+        self.current: Arm = (cfg.draft_bits, cfg.k)
+        self.reward: Dict[Arm, float] = {}
+        self.visits: Dict[Arm, int] = {a: 0 for a in self.arms}
+        self.accept: Dict[Tuple[int, str], float] = {}
+        self.cycles = 0
+        self.decisions = 0
+
+    def observe(self, arm: Arm, emitted: int, wall_s: float,
+                class_accepts: Dict[str, Tuple[int, int]]) -> None:
+        """Record one cycle run under ``arm``: ``emitted`` tokens in
+        ``wall_s`` seconds, plus per-class (accepted, drafted) counts."""
+        self.cycles += 1
+        self.visits[arm] = self.visits.get(arm, 0) + 1
+        ema = self.cfg.ema
+        if wall_s > 0:
+            r = emitted / wall_s
+            prev = self.reward.get(arm)
+            self.reward[arm] = r if prev is None else (1 - ema) * prev + ema * r
+        for cls, (acc, drafted) in class_accepts.items():
+            if drafted <= 0:
+                continue
+            key = (arm[0], cls)
+            rate = acc / drafted
+            prev = self.accept.get(key)
+            self.accept[key] = (rate if prev is None
+                                else (1 - ema) * prev + ema * rate)
+
+    def propose(self) -> Arm:
+        """The arm for the next cycle (changes every ``decide_every``)."""
+        if self.cycles % self.cfg.decide_every:
+            return self.current
+        self.decisions += 1
+        cold = [a for a in self.arms if self.visits[a] < self.cfg.min_visits]
+        if cold:
+            self.current = cold[0]
+        elif self.decisions % 4 == 0:
+            self.current = min(self.arms, key=lambda a: self.visits[a])
+        else:
+            self.current = max(
+                self.arms, key=lambda a: self.reward.get(a, 0.0))
+        return self.current
+
+    def snapshot(self) -> Dict[str, object]:
+        """Flat dict for ``/metrics`` (JSON-safe keys only)."""
+        out: Dict[str, object] = {
+            "spec_arm_bits": self.current[0],
+            "spec_arm_k": self.current[1],
+            "spec_tuner_cycles": self.cycles,
+        }
+        for (bits, cls), rate in sorted(self.accept.items()):
+            out[f"spec_accept_rate_b{bits}_{cls}"] = round(rate, 4)
+        for (bits, k), r in sorted(self.reward.items()):
+            out[f"spec_reward_b{bits}_k{k}"] = round(r, 2)
+        return out

@@ -197,6 +197,22 @@ def test_encode_pack_backends_agree(key):
 
 
 @pytest.mark.interpret
+@pytest.mark.parametrize("bits", [6, 7, 8])
+def test_requant_pack_backends_bit_exact(key, bits):
+    """The draft re-grid dispatch op: pallas (interpret) == reference,
+    word for word, at every draft bitwidth (8 = identity) including
+    tile-padded odd shapes and 3-D stacked leaves."""
+    dst = FMT8.with_bits(bits)
+    for shape in ((64, 48), (33, 17), (3, 20, 11)):
+        packed, _, _ = _packed(jax.random.fold_in(key, sum(shape)), shape)
+        ref = dispatch.requant_pack(packed, FMT8, dst, backend="reference")
+        pal = dispatch.requant_pack(packed, FMT8, dst, backend="pallas",
+                                    interpret=True)
+        assert ref.dtype == jnp.uint8 and ref.shape == shape
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+@pytest.mark.interpret
 def test_madam_step_backends_bit_exact(key):
     """The fused packed update: pallas (interpret) == jnp reference, word
     for word, including 3-D leaves folded to 2-D."""

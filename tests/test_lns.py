@@ -6,8 +6,8 @@ import pytest
 
 from repro.testing import given, settings, st
 from repro.core.lns import (LNSFormat, compute_scale, lns_decode, lns_encode,
-                            lns_pack, lns_quantize, lns_unpack, pow2_scale,
-                            quantization_gap)
+                            lns_pack, lns_quantize, lns_requant_packed,
+                            lns_unpack, pow2_scale, quantization_gap)
 
 
 # gamma=1 at 8 bits reaches 2^-127 (f32 subnormal edge) — the paper's own
@@ -134,6 +134,73 @@ def test_zero_and_flush_zero():
     fz = LNSFormat(bits=8, gamma=8, flush_zero=True)
     dec = lns_decode(s, c, fz, jnp.ones(()))
     assert bool(jnp.all(dec == 0.0))
+
+
+# ---------------------------------------------------------------------------
+# narrowing re-grid: the self-speculative draft transform (DESIGN.md §11)
+
+
+def test_with_bits_narrowing_halves_gamma():
+    """Dropping wire bits halves the base factor per bit so the dynamic
+    range survives — a B=6/7 draft spans the same magnitudes as B=8, just
+    on a coarser exponent grid."""
+    fmt = LNSFormat(bits=8, gamma=8)
+    assert fmt.with_bits(7) == LNSFormat(bits=7, gamma=4)
+    assert fmt.with_bits(6) == LNSFormat(bits=6, gamma=2)
+    # range match is exact up to the max_code = 2^(B-1)-1 off-by-one,
+    # which costs one coarse step: 15.75 at B=7, 15.5 at B=6 (vs 15.875)
+    for bits in (6, 7):
+        assert fmt.with_bits(bits).dynamic_range == pytest.approx(
+            fmt.dynamic_range, rel=0.03)
+
+
+@pytest.mark.parametrize("bits", [6, 7])
+def test_requant_narrow_is_projection(key, bits):
+    """Narrow -> widen -> narrow lands on the same coarse words: the
+    draft view is a projection, so re-deriving it is lossless."""
+    fmt8 = LNSFormat(bits=8, gamma=8)
+    dst = fmt8.with_bits(bits)
+    codes = jax.random.randint(key, (4096,), 0, fmt8.max_code + 1, jnp.int32)
+    sign = jnp.where(jnp.arange(codes.size) % 2 == 0, 1, -1).astype(jnp.int8)
+    packed = lns_pack(sign, codes, fmt8)
+    down = lns_requant_packed(packed, fmt8, dst)
+    up = lns_requant_packed(down, dst, fmt8)
+    down2 = lns_requant_packed(up, fmt8, dst)
+    np.testing.assert_array_equal(np.asarray(down), np.asarray(down2))
+
+
+@pytest.mark.parametrize("bits", [6, 7])
+def test_requant_monotone_and_sign_preserved(bits):
+    """Exhaustive over the B=8 grid: the narrow code is monotone in the
+    source code and the sign bit rides across untouched."""
+    fmt8 = LNSFormat(bits=8, gamma=8)
+    dst = fmt8.with_bits(bits)
+    codes = jnp.arange(fmt8.max_code + 1, dtype=jnp.int32)
+    for sval in (1, -1):
+        sign = jnp.full(codes.shape, sval, jnp.int8)
+        out = np.asarray(lns_requant_packed(
+            lns_pack(sign, codes, fmt8), fmt8, dst))
+        np.testing.assert_array_equal(out >> (dst.bits - 1),
+                                      np.full(codes.shape, int(sval < 0)))
+        assert np.all(np.diff(out & dst.max_code) >= 0)
+
+
+@pytest.mark.parametrize("bits", [6, 7])
+def test_requant_draft_decode_error_bound(bits):
+    """Every un-clamped draft value sits within half a coarse grid step of
+    its source value (the re-grid rounds the exponent to nearest)."""
+    fmt8 = LNSFormat(bits=8, gamma=8)
+    dst = fmt8.with_bits(bits)
+    codes = jnp.arange(fmt8.max_code + 1, dtype=jnp.int32)
+    sign = jnp.ones(codes.shape, jnp.int8)
+    packed = lns_pack(sign, codes, fmt8)
+    out = lns_requant_packed(packed, fmt8, dst)
+    s, c = lns_unpack(out, dst)
+    got = np.asarray(lns_decode(s, c, dst, jnp.ones(())))
+    want = np.asarray(lns_decode(sign, codes, fmt8, jnp.ones(())))
+    unclamped = np.asarray(c) < dst.max_code
+    rel = np.abs(got - want) / want
+    assert rel[unclamped].max() <= 2.0 ** (1.0 / (2 * dst.gamma)) - 1 + 1e-6
 
 
 def test_format_validation():

@@ -1,0 +1,209 @@
+"""Self-speculative decoding (DESIGN.md §11): draft views, accept/rollback
+equivalence, page accounting, metrics, autotuning.
+
+The load-bearing claim is *equivalence*: with greedy and seeded sampled
+rows mixed in one batch, the speculating engine must emit token-for-token
+what the non-speculating engine emits — accepted drafts are by
+construction the target's own samples, rejected drafts' KV writes are
+overwritten before they are ever attendable, and the sampler fold rewinds
+with the slot cursor.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.lns import LNSFormat, is_lns_weight
+from repro.core.quantizer import QuantConfig
+from repro.optim.madam import MadamConfig
+from repro.serving import (Engine, Request, SpecAutotuner, SpecConfig,
+                           build_draft_params, spec_supported, summarize)
+from repro.server.sampling import SamplingParams
+from repro.training import init_train_state
+
+
+def _mixed_requests(vocab, n=6, gen=12, seed=3):
+    """Greedy and seeded-sampled rows interleaved, varied lengths."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        sp = None if i % 2 == 0 else SamplingParams(
+            temperature=0.9, top_k=0 if i % 4 == 1 else 8, seed=100 + i)
+        prompt = rng.integers(0, vocab, (4 + (i % 3) * 3,)).tolist()
+        out.append(Request(rid=i, prompt=prompt,
+                           max_new_tokens=gen - (i % 4), sampling=sp))
+    return out
+
+
+def _gen_map(engine):
+    return {rs.request.rid: list(rs.generated) for rs in engine.finished}
+
+
+# ---------------------------------------------------------------------------
+# the parameter transform
+
+
+def test_build_draft_params_shares_scales(smoke_serving_setup):
+    _, _, _, params = smoke_serving_setup
+    draft = build_draft_params(params, 6)
+    n = 0
+    for a, b in zip(jax.tree.leaves(params, is_leaf=is_lns_weight),
+                    jax.tree.leaves(draft, is_leaf=is_lns_weight)):
+        if is_lns_weight(a):
+            assert b.scale is a.scale          # shared by reference
+            assert b.fmt.bits == 6 and b.delta is None
+            assert b.packed.dtype == a.packed.dtype  # still 1 B wire words
+            n += 1
+        else:
+            assert b is a
+    assert n >= 5
+    # the B=8 view IS the target tree (identity draft, leaf for leaf)
+    same = build_draft_params(params, 8)
+    for a, b in zip(jax.tree.leaves(params, is_leaf=is_lns_weight),
+                    jax.tree.leaves(same, is_leaf=is_lns_weight)):
+        assert b is a
+
+
+def test_spec_supported_gates_architectures():
+    assert spec_supported(get_smoke_config("smollm-135m")) is None
+    assert spec_supported(get_smoke_config("gemma3-12b")) is None
+    assert "recurrent" in spec_supported(get_smoke_config("rwkv6-1.6b"))
+    assert "codebook" in spec_supported(get_smoke_config("musicgen-medium"))
+
+
+def test_engine_rejects_unsupported_arch():
+    cfg = get_smoke_config("rwkv6-1.6b")
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    with pytest.raises(ValueError, match="recurrent"):
+        Engine(cfg, QuantConfig.lns_madam(), mcfg, params, num_slots=2,
+               max_len=32, speculate_k=4)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(draft_bits=1)
+    arms = SpecConfig(draft_bits=7, k=4).arms()
+    assert arms[0] == (7, 4)
+    assert len(arms) == len(set(arms)) == 9  # configured arm not repeated
+
+
+# ---------------------------------------------------------------------------
+# equivalence: spec engine == baseline engine, token for token
+
+
+def test_spec_equals_baseline_dense(smoke_serving_setup):
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    reqs = _mixed_requests(cfg.vocab_size)
+    base = Engine(cfg, qcfg, mcfg, params, num_slots=3, max_len=48)
+    base.run(reqs)
+    spec = Engine(cfg, qcfg, mcfg, params, num_slots=3, max_len=48,
+                  speculate_k=3, draft_bitwidth=7)
+    spec.run(reqs)
+    assert _gen_map(spec) == _gen_map(base)
+    assert spec.spec_cycles > 0 and spec.spec_drafted > 0
+    assert base.spec_snapshot() is None  # spec off -> no phantom metrics
+
+
+def test_spec_equals_baseline_paged_and_returns_pages(smoke_serving_setup):
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    reqs = _mixed_requests(cfg.vocab_size)
+    kw = dict(num_slots=3, max_len=48, page_size=8, num_pages=18,
+              prefix_cache=False, alloc_policy="ondemand")
+    base = Engine(cfg, qcfg, mcfg, params, **kw)
+    base.run(reqs)
+    spec = Engine(cfg, qcfg, mcfg, params, **kw,
+                  speculate_k=3, draft_bitwidth=6)
+    spec.run(reqs)
+    assert _gen_map(spec) == _gen_map(base)
+    # rollback accounting: every page the lookahead grew beyond what the
+    # accepted tokens used went back to the allocator
+    assert spec.allocator.available == base.allocator.available == 18
+
+    # per-request counters surface in the metrics layer
+    summary = summarize(spec.completed, wall=1.0)
+    assert summary["spec_requests"] >= 1
+    assert summary["spec_drafted_tokens"] > 0
+    assert 0.0 <= summary["spec_accept_rate"] <= 1.0
+    assert 0.0 <= summary["spec_accept_rate_p95"] <= 1.0
+    base_summary = summarize(base.completed, wall=1.0)
+    assert base_summary["spec_drafted_tokens"] == 0
+
+
+def test_spec_equals_baseline_sliding_window(smoke_serving_setup):
+    """gemma3 mixes local (ring-cache) and global layers: the ring is
+    over-provisioned by k so a rewind never reads a wrapped-over slot."""
+    del smoke_serving_setup  # only to share session ordering
+    cfg = get_smoke_config("gemma3-12b")
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(update_format=LNSFormat(bits=8, gamma=8))
+    params = init_train_state(jax.random.PRNGKey(0), cfg, mcfg).params
+    reqs = _mixed_requests(cfg.vocab_size, n=4, gen=10)
+    kw = dict(num_slots=2, max_len=32, page_size=8, num_pages=8,
+              prefix_cache=False, alloc_policy="ondemand")
+    base = Engine(cfg, qcfg, mcfg, params, **kw)
+    base.run(reqs)
+    spec = Engine(cfg, qcfg, mcfg, params, **kw,
+                  speculate_k=3, draft_bitwidth=7)
+    spec.run(reqs)
+    assert _gen_map(spec) == _gen_map(base)
+    assert spec.allocator.available == base.allocator.available
+
+
+def test_abort_mid_flight_returns_pages(smoke_serving_setup):
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    spec = Engine(cfg, qcfg, mcfg, params, num_slots=3, max_len=48,
+                  page_size=8, num_pages=18, prefix_cache=False,
+                  alloc_policy="ondemand", speculate_k=3, draft_bitwidth=6)
+    for r in _mixed_requests(cfg.vocab_size, n=3, gen=24):
+        spec.submit(r)
+    for _ in range(4):  # prefill + a spec cycle or two
+        spec.step()
+    assert spec.allocator.available < 18
+    for rid in (0, 1, 2):
+        spec.abort(rid)
+    while spec.step():
+        pass
+    assert spec.allocator.available == 18  # pool back to baseline
+
+
+# ---------------------------------------------------------------------------
+# autotuning
+
+
+def test_autotuner_visits_all_arms_then_exploits():
+    cfg = SpecConfig(draft_bits=6, k=2, autotune=True, decide_every=1)
+    tuner = SpecAutotuner(cfg)
+    best = (8, 4)
+    history = []
+    for _ in range(60):
+        arm = tuner.propose()
+        history.append(arm)
+        tuner.observe(arm, emitted=8 if arm == best else 1, wall_s=0.01,
+                      class_accepts={"greedy": (1, 2)})
+    assert set(history) == set(tuner.arms)  # every arm got measured
+    # exploitation dominates: at most every 4th decision re-measures
+    assert history[-8:].count(best) >= 6
+    assert max(tuner.reward, key=tuner.reward.get) == best
+    snap = tuner.snapshot()
+    assert {"spec_arm_bits", "spec_arm_k", "spec_tuner_cycles"} <= set(snap)
+    assert any(k.startswith("spec_reward_b") for k in snap)
+    assert snap["spec_accept_rate_b8_greedy"] == pytest.approx(0.5)
+
+
+def test_engine_autotune_smoke(smoke_serving_setup):
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=10)
+            for i in range(4)]
+    base = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32)
+    base.run(reqs)
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32,
+                 speculate_k=2, draft_bitwidth=8, spec_autotune=True)
+    eng.run(reqs)
+    # arm switches never change semantics — outputs still match baseline
+    assert _gen_map(eng) == _gen_map(base)
+    snap = eng.spec_snapshot()
+    assert snap["spec_cycles"] > 0
+    assert "spec_arm_bits" in snap and "spec_tuner_cycles" in snap

@@ -57,6 +57,11 @@ TRACKED = {
     ("serving", "spec_accept_rate_b7"): (TOL_TIGHT, True),
     ("serving", "spec_accept_rate_b8"): (TOL_TIGHT, True),
     ("serving", "prefix_tok_s"): (TOL_WALL, True),
+    # mesh rows exist only when the bench ran with >= 4 devices (the CI
+    # mesh-smoke leg); trend-tracked for GSPMD-overhead drift, with no
+    # invariant until a real multi-chip baseline lands
+    ("serving", "mesh_tok_s"): (TOL_WALL, True),
+    ("serving", "mesh_vs_single_tok_ratio"): (TOL_RATIO, True),
     ("serving", "prefix_prefill_tokens"): (TOL_TIGHT, False),
     ("serving", "prefix_reused_tokens"): (TOL_TIGHT, True),
     ("train_step", "fwd_weight_bytes_ratio"): (TOL_TIGHT, False),

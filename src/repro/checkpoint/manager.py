@@ -13,9 +13,11 @@ Properties exercised by the tests:
     rename, pointer written after the payload)
   * async — ``save`` returns immediately; ``wait()`` joins the writer
   * keep-k garbage collection
-  * **elastic restore** — arrays are re-``device_put`` with whatever
-    shardings the *new* mesh prescribes, so a job restarted on a different
-    device count resumes from the same manifest (DESIGN.md §8)
+  * **elastic restore** — arrays are placed with whatever shardings the
+    *new* mesh prescribes, so a job restarted on a different device count
+    resumes from the same manifest (DESIGN.md §8); sharded leaves go
+    straight from the mmap'd file into their NamedSharding, one slice per
+    shard, with no host-gathered intermediate
 """
 from __future__ import annotations
 
@@ -138,11 +140,23 @@ class CheckpointManager:
             key = _SEP.join(
                 str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
                 for k in path).replace("/", "_")
-            arr = np.load(os.path.join(d, key + ".npy"))
-            arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+            fname = os.path.join(d, key + ".npy")
             if sh is not None:
-                out.append(jax.device_put(arr, sh))
+                # straight-to-shard placement: mmap the file and let each
+                # addressable shard slice (and cast) only its own window —
+                # the host-gathered full-size intermediate never exists, so
+                # a packed LNSWeight pool lands in its NamedSharding at
+                # shard-local memory cost even when the logical array is
+                # the whole flagship layer
+                arr = np.load(fname, mmap_mode="r")
+                dt = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+                out.append(jax.make_array_from_callback(
+                    arr.shape, sh,
+                    lambda idx, a=arr, t=dt: np.asarray(a[idx], t)))
             else:
+                arr = np.load(fname)
+                if hasattr(leaf, "dtype"):
+                    arr = arr.astype(leaf.dtype)
                 out.append(jax.numpy.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
 

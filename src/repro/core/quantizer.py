@@ -115,13 +115,17 @@ class QuantConfig:
     # Hybrid conversion-approximation simulation (paper App. B / Table 10):
     # number of LUT entries; None = exact accumulation.
     approx_lut: Optional[int] = None
-    # DEPRECATED: kernel backend for routed packed-LNS GEMMs
-    # ("pallas"/"reference"; None = resolve through the dispatch layers).
-    # Prefer ``repro.kernels.dispatch.configure()`` / ``configured()`` —
-    # one process-level knob instead of per-config duplicates. This field
-    # is kept as a per-call override (precedence layer 2) for existing
-    # configs and will be removed once callers migrate.
-    backend: Optional[str] = None
+
+    # The ``backend`` field (deprecated PR 6) is gone: kernel backend
+    # selection lives in ``repro.kernels.dispatch.configure()`` /
+    # ``configured()`` (one process-level knob) or the per-call
+    # ``backend=`` argument of the dispatched ops themselves.
+    @property
+    def backend(self):
+        raise AttributeError(
+            "QuantConfig.backend was removed: select the kernel backend "
+            "with repro.kernels.dispatch.configure(backend=...) or the "
+            "configured(...) context manager")
 
     @classmethod
     def lns_madam(cls, bits: int = 8, gamma: int = 8, update_bits: int = 16,
@@ -147,6 +151,26 @@ class QuantConfig:
     @property
     def is_quantized(self) -> bool:
         return any(f is not None for f in (self.weight, self.act, self.err, self.grad))
+
+
+def _reject_backend_kwarg(cls):
+    """Turn ``Config(backend=...)`` into an actionable error (the field was
+    removed; the generated TypeError would not say where the knob went)."""
+    orig = cls.__init__
+
+    def __init__(self, *args, **kwargs):
+        if "backend" in kwargs:
+            raise TypeError(
+                f"{cls.__name__}.backend was removed: select the kernel "
+                f"backend with repro.kernels.dispatch.configure"
+                f"(backend=...) or the configured(...) context manager")
+        orig(self, *args, **kwargs)
+
+    cls.__init__ = __init__
+    return cls
+
+
+_reject_backend_kwarg(QuantConfig)
 
 
 # ---------------------------------------------------------------------------
@@ -264,8 +288,8 @@ def _routed_qeinsum(eq: str, x: jax.Array, w: LNSWeight,
     ffmt = cfg.weight
     pw = _forward_packed(w, ffmt)
     if w.delta is None:  # inference: no tangent carrier, no vjp machinery
-        return _routed_impl(ffmt, cfg.backend, x, pw, w.scale)[0]
-    return _routed_matmul(ffmt, cfg.backend, x, w.delta, pw, w.scale)
+        return _routed_impl(ffmt, None, x, pw, w.scale)[0]
+    return _routed_matmul(ffmt, None, x, w.delta, pw, w.scale)
 
 
 def qeinsum(eq: str, x: jax.Array, w, cfg: Optional[QuantConfig],

@@ -66,6 +66,18 @@ _RWKV_NAMES = {
     "wo": ("ssm_inner", "embed"),
 }
 
+# serving-forward overrides: the second GEMM of each column-parallel pair
+# keeps its contraction dim replicated so the contraction never psums over a
+# shard (psum reorders accumulation and breaks token-for-token equality with
+# the single-device engine; the all-gather epilogue on the activation side is
+# the serving rules' job — see ``sharding.serving_rules``).
+_SERVING_NAMES = {
+    "wo": (None, "embed"),
+    "down": (None, "embed"),
+    "out_proj": (None, "embed"),
+    "cv": (None, "embed"),
+}
+
 
 def _path_names(path) -> Tuple[str, ...]:
     out = []
@@ -79,12 +91,15 @@ def _path_names(path) -> Tuple[str, ...]:
     return tuple(out)
 
 
-def _leaf_axes(path_names: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+def _leaf_axes(path_names: Tuple[str, ...], ndim: int,
+               serving: bool = False) -> Tuple[Optional[str], ...]:
     name = path_names[-1] if path_names else ""
     in_rwkv = "rwkv" in path_names
     table = dict(_BY_NAME)
     if in_rwkv:
         table.update(_RWKV_NAMES)
+    if serving:
+        table.update(_SERVING_NAMES)
     axes = table.get(name)
     if axes is None:
         axes = (None,) * ndim  # norms / scalars / unknown -> replicated
@@ -96,20 +111,23 @@ def _leaf_axes(path_names: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], .
     return tuple(axes)
 
 
-def params_logical_axes(params) -> Any:
-    """Tree of logical-axes tuples matching ``params`` (LNSWeight-aware)."""
+def params_logical_axes(params, serving: bool = False) -> Any:
+    """Tree of logical-axes tuples matching ``params`` (LNSWeight-aware).
+
+    ``serving=True`` applies the serving-forward per-leaf overrides (second
+    GEMMs keep their contraction dim replicated — see ``_SERVING_NAMES``)."""
 
     def visit(path, leaf):
         names = _path_names(path)
         if is_lns_weight(leaf):
-            axes = _leaf_axes(names, leaf.packed.ndim)
+            axes = _leaf_axes(names, leaf.packed.ndim, serving)
             scale_axes = tuple(a if leaf.scale.shape[i] != 1 else None
                                for i, a in enumerate(axes)) \
                 if leaf.scale.ndim == leaf.packed.ndim else (None,) * leaf.scale.ndim
             # keep the leaf's fmt aux so the axes/shardings tree structure
             # matches the params tree exactly (jit in_shardings prefix match)
             return LNSWeight(packed=axes, scale=scale_axes, fmt=leaf.fmt)
-        return _leaf_axes(names, getattr(leaf, "ndim", 0))
+        return _leaf_axes(names, getattr(leaf, "ndim", 0), serving)
 
     return jax.tree_util.tree_map_with_path(visit, params,
                                             is_leaf=is_lns_weight)
@@ -126,8 +144,8 @@ def tree_shardings(axes_tree, mesh: Mesh, rules=None):
     return jax.tree.map(one, axes_tree, is_leaf=is_axes_leaf)
 
 
-def params_shardings(params, mesh: Mesh, rules=None):
-    return tree_shardings(params_logical_axes(params), mesh, rules)
+def params_shardings(params, mesh: Mesh, rules=None, serving: bool = False):
+    return tree_shardings(params_logical_axes(params, serving), mesh, rules)
 
 
 def batch_shardings(batch, mesh: Mesh, rules=None):
@@ -160,10 +178,19 @@ def opt_logical_axes(params, opt_state):
     return type(opt_state)(g2=g2_axes, count=())
 
 
-# decode-cache leaves by name
+# decode-cache leaves by name. k/v carry both "kv_seq" and "kv_heads": under
+# the default (training) rules both map to "model" and spec_for's first-wins
+# dedup keeps the split-KV layout; serving rules set kv_seq -> None so the
+# same annotation becomes head-sharded (pools likewise, minus the batch dim).
 _CACHE_AXES = {
-    "k": ("batch", "kv_seq", None, None),
-    "v": ("batch", "kv_seq", None, None),
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "k_scale": ("batch", "kv_seq", "kv_heads", None),
+    "v_scale": ("batch", "kv_seq", "kv_heads", None),
+    "kp": (None, None, "kv_heads", None),
+    "vp": (None, None, "kv_heads", None),
+    "kp_scale": (None, None, "kv_heads", None),
+    "vp_scale": (None, None, "kv_heads", None),
     "c_kv": ("batch", "kv_seq", None),
     "k_rope": ("batch", "kv_seq", None),
     "ssm": ("batch", "act_heads", None, None),

@@ -20,7 +20,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["LOGICAL_RULES", "shard_ctx", "shard", "logical_sharding",
-           "current_mesh", "spec_for"]
+           "current_mesh", "spec_for", "serving_rules", "model_axis_size"]
 
 AxisVal = Union[None, str, Tuple[str, ...]]
 
@@ -36,6 +36,11 @@ LOGICAL_RULES: Dict[str, AxisVal] = {
     "seq_shard": "model",        # sequence-parallel attention (non-/16 heads)
     "kv_seq": "model",           # split-KV decode; batch-1 long-context
                                  # cells override to ("data","model")
+    "attn_out": "model",         # attention output entering wo: head-sharded
+                                 # (row-parallel) in training; serving rules
+                                 # override to None (all-gather epilogue) so
+                                 # the replicated wo contraction stays bitwise
+                                 # equal to single-device
     "embed": None,
     "act_ff": "model",
     "act_heads": "model",
@@ -97,11 +102,63 @@ def _resolve(name: Optional[str], mesh: Mesh, rules: Dict[str, AxisVal]):
     return axes if len(axes) > 1 else axes[0]
 
 
+def model_axis_size(mesh: Optional[Mesh] = None) -> int:
+    """Size of the ``model`` mesh axis (1 without a mesh / without the axis)."""
+    mesh = mesh or current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def serving_rules(cfg, mesh: Optional[Mesh] = None) -> Dict[str, AxisVal]:
+    """Logical-rule overrides for the mesh-native serving forward.
+
+    Training shards contraction dims and eats the psum reorderings; serving
+    must stay *token-for-token equal* to the single-device engine, so the
+    table only keeps layouts whose collectives are bitwise exact on the
+    host platform:
+
+    - activations replicate on batch (continuous-batching slots are small
+      and ``device_put`` rejects uneven batch shards) and on sequence;
+    - column-parallel weights (output dim sharded) are kept only where the
+      dim divides the ``model`` axis; the paired second GEMM contracts over
+      a replicated axis — ``attn_out``/``act_ff`` resolve to ``None`` so the
+      constraint *is* the explicit all-gather epilogue, and the per-leaf
+      serving overrides in ``params_sharding`` replicate wo/down rows;
+    - contraction over a sharded dim (psum) never appears on the forward.
+
+    ``cfg`` is duck-typed (any object with ``num_heads`` / ``num_kv_heads``
+    / ``d_ff`` / ``num_experts``), keeping this module import-light.
+    """
+    m = model_axis_size(mesh)
+    heads_ok = m > 1 and getattr(cfg, "num_heads", 0) % m == 0
+    kv_ok = heads_ok and getattr(cfg, "num_kv_heads", 0) % m == 0
+    mlp_ok = m > 1 and getattr(cfg, "d_ff", 0) % m == 0
+    moe_ok = m > 1 and getattr(cfg, "num_experts", 0) % m == 0
+    on = lambda ok: "model" if ok else None
+    return {
+        "batch": None, "batch_full": None, "seq": None, "seq_shard": None,
+        "kv_seq": None, "act_ff": None, "attn_out": None, "vocab": None,
+        "ff_fsdp": None, "ssm_inner": None, "moe_ff": None,
+        "heads": on(heads_ok),
+        "act_heads": on(kv_ok),
+        "kv_heads": on(kv_ok),
+        "qkv_out": on(kv_ok),
+        "mlp": on(mlp_ok),
+        "experts": on(moe_ok),
+    }
+
+
 def spec_for(names: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
              rules: Optional[Dict[str, AxisVal]] = None) -> P:
     """PartitionSpec for a tuple of logical axis names.
 
     ``rules`` (if given) are *overrides* merged over the defaults/context.
+    A mesh axis may appear in at most one PartitionSpec entry; when two
+    logical names resolve to the same mesh axis the earlier dimension wins
+    and the later one drops the duplicate (first-wins), so composite
+    annotations like ``("batch", "kv_seq", "kv_heads")`` stay valid under
+    rule tables that map several names onto ``model``.
     """
     mesh = mesh or current_mesh()
     if rules is not None:
@@ -110,7 +167,22 @@ def spec_for(names: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
         rules = _current_rules()
     if mesh is None:
         return P()
-    return P(*[_resolve(n, mesh, rules) for n in names])
+    used: set = set()
+    entries = []
+    for n in names:
+        axes = _resolve(n, mesh, rules)
+        if axes is None:
+            entries.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            entries.append(None)
+        else:
+            entries.append(axes if len(axes) > 1 else axes[0])
+    return P(*entries)
 
 
 def logical_sharding(names: Sequence[Optional[str]],

@@ -284,16 +284,65 @@ def paged_attend(q: jax.Array, kp: jax.Array, vp: jax.Array,
     tile-locally via scalar-prefetched block tables, double-buffered DMAs
     and in-kernel LNS decode (see ``kernels/paged_attend.py``). The
     reference backend is the jnp gather oracle below.
+
+    Under an active mesh whose ``model`` axis divides the KV head count,
+    either backend runs per-shard over its local head group via
+    ``shard_map`` (pools head-sharded, one replicated logical block table)
+    with an all-gather epilogue back to replicated heads — the collective
+    placement lives here, in the dispatch layer, so the jnp reference and
+    the Pallas kernel stay bit-comparable shard for shard.
     """
-    if resolve_backend(backend) == "pallas":
-        from repro.kernels.ops import paged_attend_blocktable
-        return paged_attend_blocktable(q, kp, vp, k_scale, v_scale,
-                                       block_table, lengths, fmt=fmt,
-                                       softcap=softcap, sm_scale=sm_scale,
-                                       interpret=resolve_interpret(interpret))
-    return _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
-                                   lengths, fmt=fmt, softcap=softcap,
-                                   sm_scale=sm_scale)
+    use_pallas = resolve_backend(backend) == "pallas"
+    interp = resolve_interpret(interpret) if use_pallas else None
+
+    def impl(q, kp, vp, ks, vs, bt, ln):
+        if use_pallas:
+            from repro.kernels.ops import paged_attend_blocktable
+            return paged_attend_blocktable(q, kp, vp, ks, vs, bt, ln,
+                                           fmt=fmt, softcap=softcap,
+                                           sm_scale=sm_scale,
+                                           interpret=interp)
+        return _paged_attend_reference(q, kp, vp, ks, vs, bt, ln, fmt=fmt,
+                                       softcap=softcap, sm_scale=sm_scale)
+
+    from repro.distributed.sharding import current_mesh, model_axis_size
+    mesh = current_mesh()
+    m = model_axis_size(mesh)
+    if mesh is not None and m > 1 and kp.shape[2] % m == 0:
+        return _paged_attend_sharded(impl, mesh, q, kp, vp, k_scale,
+                                     v_scale, block_table, lengths)
+    return impl(q, kp, vp, k_scale, v_scale, block_table, lengths)
+
+
+def _paged_attend_sharded(impl, mesh, q, kp, vp, k_scale, v_scale,
+                          block_table, lengths):
+    """Head-group-parallel paged attention over the mesh ``model`` axis.
+
+    Each shard attends its local KV head group (and the matching query
+    group — GQA groups are contiguous in the head axis, so an even head
+    split never severs a group) against its local slice of every pool
+    page; the block table and lengths are replicated, giving every shard
+    the same page-local view of the one logical table. Heads never mix
+    across shards inside attention, so per-shard results are bitwise what
+    a single device computes for those heads; the trailing constraint is
+    the explicit all-gather epilogue back to replicated heads.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    heads = P(None, None, "model", None)
+    if k_scale is not None:
+        body = lambda q, kp, vp, ks, vs, bt, ln: impl(q, kp, vp, ks, vs,
+                                                      bt, ln)
+        in_specs = (heads, heads, heads, heads, heads, P(None, None), P(None))
+        args = (q, kp, vp, k_scale, v_scale, block_table, lengths)
+    else:
+        body = lambda q, kp, vp, bt, ln: impl(q, kp, vp, None, None, bt, ln)
+        in_specs = (heads, heads, heads, P(None, None), P(None))
+        args = (q, kp, vp, block_table, lengths)
+    out = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=heads,
+                    check_rep=False)(*args)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
 
 
 def fused_sample(logits: jax.Array, gumbel: Optional[jax.Array],

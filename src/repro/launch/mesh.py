@@ -21,8 +21,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over whatever devices exist (CPU tests / smoke runs)."""
+    """Tiny mesh over whatever devices exist (CPU tests / smoke runs).
+
+    Raises when the requested ``(data, model)`` shape asks for more devices
+    than the platform exposes — a mesh test that silently collapsed to
+    ``(n, 1)`` would pass vacuously on one device, which is exactly what CI
+    mesh legs must not do. Start with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake devices.
+    """
     n = jax.device_count()
     if data * model > n:
-        data, model = n, 1
+        raise ValueError(
+            f"make_host_mesh: requested mesh (data={data}, model={model}) "
+            f"needs {data * model} devices but only {n} are available; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data * model} (before importing jax) or shrink the mesh")
     return jax.make_mesh((data, model), ("data", "model"))

@@ -113,6 +113,11 @@ def main():
     ap.add_argument("--max-queue", type=int, default=64,
                     help="admission-control watermark: live requests "
                          "beyond this are refused with 429")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serving mesh shape, e.g. '2,2': the model axis "
+                         "head-/column-shards weights, KV pools and the "
+                         "paged-attend kernel; default is a (devices, 1) "
+                         "mesh (single-device semantics on 1 device)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -120,7 +125,14 @@ def main():
     qcfg = QuantConfig.lns_madam()
     mcfg = MadamConfig(
         update_format=LNSFormat(bits=args.serve_bits, gamma=8))
-    mesh = make_host_mesh(data=jax.device_count())
+    if args.mesh:
+        try:
+            data, model = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh expects 'DATA,MODEL', got {args.mesh!r}")
+        mesh = make_host_mesh(data=data, model=model)
+    else:
+        mesh = make_host_mesh(data=jax.device_count())
 
     with shard_ctx(mesh, get_rules(args.arch)):
         state = init_train_state(jax.random.PRNGKey(args.seed), cfg, mcfg)
@@ -139,7 +151,8 @@ def main():
                         alloc_policy=args.alloc_policy,
                         speculate_k=args.speculate_k,
                         draft_bitwidth=args.draft_bitwidth,
-                        spec_autotune=args.spec_autotune)
+                        spec_autotune=args.spec_autotune,
+                        mesh=mesh if mesh.devices.size > 1 else None)
         if args.http:
             _serve_http(engine, args.http, cfg.name, args.max_queue)
             return

@@ -24,20 +24,13 @@ import jax.numpy as jnp
 
 from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig, cot_boundary, qeinsum, ste_quantize
-from repro.distributed.sharding import current_mesh, shard
+from repro.distributed.sharding import current_mesh, model_axis_size, shard
 from repro.models.common import ArchConfig, dense_init
 from repro.models.layers import apply_rope, decoded_of, dense_of, rope
 
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
            "init_kv_cache", "init_paged_kv_cache", "is_paged_cache",
            "flash_attention", "model_axis_size"]
-
-
-def model_axis_size() -> int:
-    mesh = current_mesh()
-    if mesh is None or "model" not in mesh.axis_names:
-        return 1
-    return mesh.shape["model"]
 
 
 def _full_mesh_size() -> int:
@@ -223,6 +216,10 @@ def attn_apply(
         new_cache = cache
 
     out = out.reshape(B, S, h * hd)
+    # row-parallel wo in training (attn_out -> model); serving rules resolve
+    # attn_out to None, making this constraint the all-gather epilogue that
+    # keeps the replicated wo contraction bitwise equal to single-device
+    out = shard(out, "batch", "seq", "attn_out")
     out = qeinsum("bse,ed->bsd", out, dense_of(p["wo"], cfg, qcfg), qcfg)
     return shard(out, "batch", "seq", "embed"), new_cache
 
@@ -356,6 +353,9 @@ def _paged_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
         flat = new.reshape((B * S,) + new.shape[2:])
         new_cache[key] = cache[key].at[fpg, foff].set(
             flat.astype(cache[key].dtype), mode="drop")
+        # pool pages stay head-sharded across the mesh model axis (pages and
+        # page offsets are shard-local views of one logical block table)
+        new_cache[key] = shard(new_cache[key], None, None, "kv_heads", None)
     new_cache["idx"] = idx + S
 
     out = dispatch.paged_attend(
@@ -364,8 +364,7 @@ def _paged_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
         block_table, idx + S,
         fmt=_kv_fmt(cfg) if quant else None,
         softcap=cfg.attn_logit_softcap,
-        sm_scale=1.0 / math.sqrt(hd),
-        backend=qcfg.backend if qcfg is not None else None)
+        sm_scale=1.0 / math.sqrt(hd))
     return out.astype(q.dtype), new_cache
 
 
@@ -444,8 +443,11 @@ def _decode_attend(q, k_new, v_new, cache, cfg: ArchConfig, *,
             k_att, v_att = new_cache["k"], new_cache["v"]
         abs_pos = jnp.broadcast_to(slot[None, :], (B, cap))
         valid = slot[None, :] < (idx[:, None] + S)
-    new_cache["k"] = shard(new_cache["k"], "batch", "kv_seq", None, None)
-    new_cache["v"] = shard(new_cache["v"], "batch", "kv_seq", None, None)
+    # kv_seq wins the model axis under training rules (split-KV decode);
+    # serving rules map kv_seq -> None so the same annotation head-shards
+    for key in (("k", "v", "k_scale", "v_scale") if quant else ("k", "v")):
+        new_cache[key] = shard(new_cache[key],
+                               "batch", "kv_seq", "kv_heads", None)
 
     rep = h // kv
     kf = jnp.repeat(k_att, rep, axis=2)

@@ -54,13 +54,6 @@ class MadamConfig:
     row/col factors for >=2-D leaves — a beyond-paper scaling feature that
     makes optimizer state O(R+C) instead of O(R·C) (used by the trillion-
     parameter MoE configs; DESIGN.md §8).
-
-    ``backend`` (DEPRECATED) overrides the kernel backend for the fused
-    update (``"pallas"`` / ``"reference"``; None = resolve through the
-    dispatch layers). Prefer ``repro.kernels.dispatch.configure()`` /
-    ``configured()`` — one process-level knob instead of per-config
-    duplicates; this field stays as a per-call override (precedence
-    layer 2) until callers migrate.
     """
 
     lr: float = 2.0 ** -7
@@ -71,11 +64,40 @@ class MadamConfig:
     fp_lr: Optional[float] = None     # lr for the fp (ndim<2) leaves
     fp_clip: float = 10.0             # Madam's p-clamp for fp leaves
     factored: bool = False            # Adafactor-style factored g2
-    backend: Optional[str] = None     # kernel backend override
 
     def __post_init__(self):
         if self.update_format.bits < 2:
             raise ValueError("update_format.bits must be >= 2")
+
+    # The ``backend`` field (deprecated PR 6) is gone: kernel backend
+    # selection lives in ``repro.kernels.dispatch.configure()`` /
+    # ``configured()`` or the per-call ``backend=`` op argument.
+    @property
+    def backend(self):
+        raise AttributeError(
+            "MadamConfig.backend was removed: select the kernel backend "
+            "with repro.kernels.dispatch.configure(backend=...) or the "
+            "configured(...) context manager")
+
+
+def _reject_backend_kwarg(cls):
+    """``MadamConfig(backend=...)`` gets an actionable error instead of the
+    generated "unexpected keyword argument" TypeError."""
+    orig = cls.__init__
+
+    def __init__(self, *args, **kwargs):
+        if "backend" in kwargs:
+            raise TypeError(
+                f"{cls.__name__}.backend was removed: select the kernel "
+                f"backend with repro.kernels.dispatch.configure"
+                f"(backend=...) or the configured(...) context manager")
+        orig(self, *args, **kwargs)
+
+    cls.__init__ = __init__
+    return cls
+
+
+_reject_backend_kwarg(MadamConfig)
 
 
 class MadamState(NamedTuple):
@@ -237,7 +259,7 @@ def madam_lns(cfg: MadamConfig):
                     # fused kernel: one HBM pass over (word, grad, v)
                     pk, nv = dispatch.madam_step(
                         p.packed, g, v, count, p.fmt or fmt, lr=cfg.lr,
-                        beta=cfg.beta, eps=cfg.eps, backend=cfg.backend)
+                        beta=cfg.beta, eps=cfg.eps)
                     np_ = p.replace(packed=pk)
                 new_p.append(np_)
                 new_v.append(nv)

@@ -285,6 +285,12 @@ class EngineDriver:
             snap["kv_pages_available"] = eng.allocator.available
             snap["kv_pages_total"] = eng.num_pages
             snap["prefix_hits"] = eng.prefix_hits
+        mesh = getattr(eng, "_mesh", None)
+        if mesh is not None:
+            # mesh-native engine: surface the shape so /metrics tells a
+            # sharded deployment from a single-device one at a glance
+            snap["mesh"] = dict(zip(mesh.axis_names,
+                                    (int(s) for s in mesh.devices.shape)))
         spec = eng.spec_snapshot()
         if spec is not None:
             snap.update(spec)

@@ -163,9 +163,9 @@ def sample_logits(logits: jax.Array, rows: Dict[str, jax.Array], *,
     """Batch sampler: ``logits (B, V)`` (or ``(B, K*V)`` for codebook
     stacks) + per-slot parameter arrays -> token ids ``(B,)`` / ``(B, K)``.
 
-    ``backend`` picks the fused-epilogue implementation (threaded from the
-    engine's ``QuantConfig.backend``; None resolves through
-    ``kernels.dispatch``). Safe to run over idle slots (the engine resets
+    ``backend`` picks the fused-epilogue implementation (None resolves
+    through ``kernels.dispatch`` — ``configure()``, env, then platform
+    auto). Safe to run over idle slots (the engine resets
     them to greedy); only shapes are traced, so admissions never recompile
     the decode step.
 

@@ -69,14 +69,20 @@ correctness first, one extra compile per distinct length second.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.quantizer import QuantConfig
+from repro.distributed.params_sharding import (cache_logical_axes,
+                                               params_shardings,
+                                               tree_shardings)
+from repro.distributed.sharding import serving_rules, shard_ctx
 from repro.kernels import dispatch
 from repro.models.common import ArchConfig
 from repro.models.model import forward, init_caches
@@ -158,12 +164,26 @@ class Engine:
         speculate_k: int = 0,
         draft_bitwidth: int = 6,
         spec_autotune: bool = False,
+        mesh=None,
     ):
         if alloc_policy not in ("reserve", "ondemand"):
             raise ValueError(f"alloc_policy must be 'reserve' or "
                              f"'ondemand', got {alloc_policy!r}")
         self.cfg, self.qcfg, self.mcfg = cfg, qcfg, mcfg
-        self.params = params
+        # Mesh-native serving: one jax Mesh threaded from launch/serve.py
+        # down to the kernels. Weights/KV shard per serving_rules (head- and
+        # column-parallel where divisible, every contraction over a
+        # replicated axis); activations and all host inputs replicate on the
+        # batch axis, so the token stream stays token-for-token equal to the
+        # single-device engine. The block allocator / prefix registry stay
+        # host-side and mesh-wide: one logical block table, each shard
+        # holding the page-local view of its own head group.
+        self._mesh = mesh
+        self._mesh_rules = serving_rules(cfg, mesh) if mesh is not None \
+            else None
+        self._repl = NamedSharding(mesh, PartitionSpec()) \
+            if mesh is not None else None
+        self.params = self._place_params(params)
         self.num_slots, self.max_len = num_slots, max_len
         self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
 
@@ -243,17 +263,58 @@ class Engine:
             # zero batch-1 cache reused by every dense admission's prefill
             # (the jit body is functional, the template never mutates);
             # ring slack must match the engine cache or scatter shapes split
-            self._mini_template = init_caches(1, max_len, cfg,
-                                              window_slack=self._spec_slack)
+            self._mini_template = self._place_caches(
+                init_caches(1, max_len, cfg, window_slack=self._spec_slack))
 
         self._reset_state()
 
+    # -- mesh plumbing ------------------------------------------------------
+
+    def _ctx(self):
+        """Activate the serving mesh + rules for the enclosed jit call.
+
+        Trace-time state (``shard()`` constraints, the dispatch layer's
+        shard_map gate) reads a thread-local, and the driver runs the
+        engine on its own thread — so every jit call site wraps itself
+        instead of relying on whoever constructed the engine."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return shard_ctx(self._mesh, self._mesh_rules)
+
+    def _put(self, x, dtype=None):
+        """Host input -> device, replicated across the mesh. Continuous
+        batching feeds (B,)/(B, S) host arrays every step; replication is
+        the layout ``device_put`` accepts for any B and the one the
+        equality guarantee needs (no batch-sharded GEMM rows)."""
+        if self._mesh is None:
+            return jnp.asarray(x, dtype)
+        return jax.device_put(np.asarray(x, dtype), self._repl)
+
+    def _place_params(self, params):
+        if self._mesh is None:
+            return params
+        with self._ctx():
+            shardings = params_shardings(params, self._mesh,
+                                         self._mesh_rules, serving=True)
+        return jax.device_put(params, shardings)
+
+    def _place_caches(self, caches):
+        if self._mesh is None:
+            return caches
+        with self._ctx():
+            shardings = tree_shardings(cache_logical_axes(caches),
+                                       self._mesh, self._mesh_rules)
+        return jax.device_put(caches, shardings)
+
+    # -----------------------------------------------------------------------
+
     def _reset_state(self) -> None:
         cfg = self.cfg
-        self.caches = init_caches(self.num_slots, self.max_len, cfg,
-                                  page_size=self.page_size,
-                                  num_pages=self.num_pages or None,
-                                  window_slack=self._spec_slack)
+        self.caches = self._place_caches(
+            init_caches(self.num_slots, self.max_len, cfg,
+                        page_size=self.page_size,
+                        num_pages=self.num_pages or None,
+                        window_slack=self._spec_slack))
         allocator = None
         if self._paged:
             allocator = BlockAllocator(self.num_pages, self.page_size)
@@ -440,9 +501,7 @@ class Engine:
             if block_tables is not None:
                 batch["block_tables"] = block_tables
             logits, caches = decode(dparams, caches, batch, pos + j)
-            cur = dispatch.fused_sample(
-                logits.astype(jnp.float32), None, None,
-                backend=self.qcfg.backend if self.qcfg is not None else None)
+            cur = dispatch.fused_sample(logits.astype(jnp.float32), None, None)
             drafts.append(cur)
         draft = jnp.stack(drafts, axis=1)                       # (B, k)
 
@@ -468,8 +527,7 @@ class Engine:
         tree itself (the identity arm: every draft accepts)."""
         view = self._draft_views.get(bits)
         if view is None:
-            backend = self.qcfg.backend if self.qcfg is not None else None
-            view = build_draft_params(self.params, bits, backend=backend)
+            view = build_draft_params(self.params, bits)
             self._draft_views[bits] = view
         return view
 
@@ -573,13 +631,11 @@ class Engine:
         return sample_logits(logits, samp,
                              num_codebooks=self.cfg.num_codebooks,
                              vocab_size=self.cfg.vocab_size,
-                             backend=self.qcfg.backend
-                             if self.qcfg is not None else None,
                              step_offset=step_offset)
 
     def _samp_row(self, slot: int) -> Dict[str, jax.Array]:
         """Batch-1 view of one slot's sampling params (prefill sample)."""
-        return {k: jnp.asarray(v[slot:slot + 1])
+        return {k: self._put(v[slot:slot + 1])
                 for k, v in self._samp.items()}
 
     # ------------------------------------------------------------------
@@ -779,14 +835,15 @@ class Engine:
             bucket = self._bucket(n_new)
             tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
             tokens[0, :n_new] = prompt[n_cached:]
-            logits, self.caches = self._prefill_fn(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(n_new, jnp.int32),
-                jnp.asarray(n_cached, jnp.int32),
-                jnp.asarray(plen, jnp.int32),
-                jnp.asarray(bt), jnp.asarray(cow_src, jnp.int32),
-                jnp.asarray(cow_dst, jnp.int32),
-                jnp.asarray(rs.slot, jnp.int32))
+            with self._ctx():
+                logits, self.caches = self._prefill_fn(
+                    self.params, self.caches, self._put(tokens),
+                    self._put(n_new, jnp.int32),
+                    self._put(n_cached, jnp.int32),
+                    self._put(plen, jnp.int32),
+                    self._put(bt), self._put(cow_src, jnp.int32),
+                    self._put(cow_dst, jnp.int32),
+                    self._put(rs.slot, jnp.int32))
             if resv["cow"] is not None:  # content copied; drop the hold
                 self.allocator.release([resv["cow"]])
                 resv["cow"] = None  # a later unwind must not re-release
@@ -804,10 +861,11 @@ class Engine:
             bucket = self._bucket(plen)
             tokens = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
             tokens[0, :plen] = prompt
-            logits, self.caches = self._prefill_fn(
-                self.params, self.caches, self._mini_template,
-                jnp.asarray(tokens), jnp.asarray(plen, jnp.int32),
-                jnp.asarray(rs.slot, jnp.int32))
+            with self._ctx():
+                logits, self.caches = self._prefill_fn(
+                    self.params, self.caches, self._mini_template,
+                    self._put(tokens), self._put(plen, jnp.int32),
+                    self._put(rs.slot, jnp.int32))
 
         set_row(self._samp, rs.slot, req.sampling)  # sample event 0
         if g:
@@ -819,8 +877,9 @@ class Engine:
             tok = np.asarray(rs.generated[-1], np.int32)
             self._samp["step"][rs.slot] = g
         else:
-            tok = np.asarray(
-                self._sample_fn(logits, self._samp_row(rs.slot)))[0]
+            with self._ctx():
+                tok = np.asarray(
+                    self._sample_fn(logits, self._samp_row(rs.slot)))[0]
             self._samp["step"][rs.slot] = 1
         self.prefills += 1
         self.prefill_tokens += bucket
@@ -971,12 +1030,13 @@ class Engine:
         bits, _ = self._spec_arm
         t0 = time.monotonic()
         pos0 = self._slot_len.copy()
-        batch_bt = jnp.asarray(self._block_tables) if self._paged else None
-        samp = {kk: jnp.asarray(v) for kk, v in self._samp.items()}
-        s_dev, acc_dev, m_dev, self.caches = self._spec_fn(
-            self._draft_params(bits), self.params, self.caches,
-            jnp.asarray(self._last_tok), jnp.asarray(pos0, jnp.int32),
-            samp, batch_bt, k=k)
+        batch_bt = self._put(self._block_tables) if self._paged else None
+        samp = {kk: self._put(v) for kk, v in self._samp.items()}
+        with self._ctx():
+            s_dev, acc_dev, m_dev, self.caches = self._spec_fn(
+                self._draft_params(bits), self.params, self.caches,
+                self._put(self._last_tok), self._put(pos0, jnp.int32),
+                samp, batch_bt, k=k)
         s = np.array(s_dev)
         acc = np.array(acc_dev)
         m = np.array(m_dev).astype(np.int64)
@@ -1143,13 +1203,14 @@ class Engine:
             self.spec_fallbacks += 1
 
         tokens = self._last_tok[:, None]  # (B, 1[, K])
-        pos = jnp.asarray(self._slot_len, jnp.int32)
-        batch = {"tokens": jnp.asarray(tokens)}
+        pos = self._put(self._slot_len, jnp.int32)
+        batch = {"tokens": self._put(tokens)}
         if self._paged:
-            batch["block_tables"] = jnp.asarray(self._block_tables)
-        samp = {k: jnp.asarray(v) for k, v in self._samp.items()}
-        toks_dev, self.caches = self._decode_fn(
-            self.params, self.caches, batch, pos, samp)
+            batch["block_tables"] = self._put(self._block_tables)
+        samp = {k: self._put(v) for k, v in self._samp.items()}
+        with self._ctx():
+            toks_dev, self.caches = self._decode_fn(
+                self.params, self.caches, batch, pos, samp)
         # a successful decode proves the engine itself is healthy, so
         # keep isolating whatever admissions are failing — the trip is
         # for a broken engine, not a kill switch one bad client can pull

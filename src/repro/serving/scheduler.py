@@ -14,6 +14,15 @@ refcount drops to zero but that still back a registered prefix move to an
 LRU of evictable cached pages; allocation prefers truly free pages and
 evicts the oldest unreferenced cached page only under pressure (the
 registry entry dies with it).
+
+Mesh-native serving (DESIGN.md §12) changes none of this bookkeeping: page
+ids are *logical* and mesh-wide. Each shard of the ``model`` axis holds the
+same pages of every per-layer pool, sliced to its local KV head group —
+one logical block table (replicated) indexes every shard's page-local
+view, so refcounts, the prefix registry, CoW holds, and on-demand growth
+run host-side exactly once regardless of mesh shape. Allocation decisions
+therefore never diverge between shards, which is what keeps preemption
+and rollback refcounts-to-baseline guarantees intact under GSPMD.
 """
 from __future__ import annotations
 

@@ -160,6 +160,22 @@ def test_configured_nests():
     assert dispatch.get_configured().backend is None
 
 
+def test_config_backend_fields_removed():
+    """The deprecated ``backend`` config fields are gone; both attribute
+    access and the ctor kwarg point at ``dispatch.configure()``."""
+    with pytest.raises(AttributeError, match="configure"):
+        QuantConfig.lns_madam().backend
+    with pytest.raises(AttributeError, match="configure"):
+        MadamConfig(update_format=FMT8).backend
+    with pytest.raises(TypeError, match="configure"):
+        QuantConfig(backend="pallas")
+    with pytest.raises(TypeError, match="configure"):
+        MadamConfig(update_format=FMT8, backend="pallas")
+    # replace() routes through __init__, so the old test idiom raises too
+    with pytest.raises(TypeError, match="configure"):
+        dataclasses.replace(SERVE_MCFG, backend="reference")
+
+
 def test_interpret_resolution_env_override(monkeypatch):
     monkeypatch.delenv(dispatch.ENV_INTERPRET, raising=False)
     # compiled wherever pallas is the platform default (TPU/GPU)
@@ -242,10 +258,10 @@ def test_qeinsum_routes_packed_weight(key):
     x = jax.random.normal(key, (4, 6, 32))
     w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
     lw = init_lns_params({"w": w}, SERVE_MCFG)["w"]
-    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
-                               backend="reference")
-    y_packed = qeinsum("bsd,df->bsf", x, lw, qcfg)
-    y_dense = qeinsum("bsd,df->bsf", x, w, qcfg)
+    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8)
+    with dispatch.configured(backend="reference"):
+        y_packed = qeinsum("bsd,df->bsf", x, lw, qcfg)
+        y_dense = qeinsum("bsd,df->bsf", x, w, qcfg)
     assert y_packed.shape == (4, 6, 16) and y_packed.dtype == x.dtype
     rel = float(jnp.max(jnp.abs(y_packed - y_dense))
                 / jnp.max(jnp.abs(y_dense)))
@@ -255,8 +271,7 @@ def test_qeinsum_routes_packed_weight(key):
 def test_routed_gradients_match_ste(key):
     """dL/dx and dL/dW of the routed path == the fake-quant STE path when
     weights are already on the forward grid (same scale)."""
-    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
-                               backend="reference")
+    qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8)
     x = jax.random.normal(key, (8, 32)).astype(jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
     lw = init_lns_params({"w": w}, SERVE_MCFG)["w"]
@@ -269,8 +284,9 @@ def test_routed_gradients_match_ste(key):
     def loss_dense(x, w):
         return jnp.sum(jnp.square(qeinsum("bd,df->bf", x, w, qcfg)))
 
-    gx_p, gd = jax.grad(loss_packed, (0, 1))(x, jnp.zeros_like(wq))
-    gx_d, gw = jax.grad(loss_dense, (0, 1))(x, wq)
+    with dispatch.configured(backend="reference"):
+        gx_p, gd = jax.grad(loss_packed, (0, 1))(x, jnp.zeros_like(wq))
+        gx_d, gw = jax.grad(loss_dense, (0, 1))(x, wq)
     np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_d),
                                rtol=2e-2, atol=2e-2)
     np.testing.assert_allclose(np.asarray(gd), np.asarray(gw),
@@ -353,16 +369,15 @@ def test_train_backends_equivalent():
     cfg = get_smoke_config("smollm-135m")
     losses, params = {}, {}
     for backend in ("reference", "pallas"):
-        mcfg = dataclasses.replace(SERVE_MCFG, backend=backend)
-        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
-                                   backend=backend)
-        state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
-        step = jax.jit(build_train_step(cfg, qcfg, mcfg))
-        data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
-        ls = []
-        for i, b in zip(range(3), data):
-            state, m = step(state, jax.tree.map(jnp.asarray, b))
-            ls.append(float(m["loss"]))
+        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8)
+        with dispatch.configured(backend=backend):
+            state = init_train_state(jax.random.PRNGKey(0), cfg, SERVE_MCFG)
+            step = jax.jit(build_train_step(cfg, qcfg, SERVE_MCFG))
+            data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
+            ls = []
+            for i, b in zip(range(3), data):
+                state, m = step(state, jax.tree.map(jnp.asarray, b))
+                ls.append(float(m["loss"]))
         losses[backend] = ls
         params[backend] = state.params
     np.testing.assert_allclose(losses["reference"], losses["pallas"],
@@ -384,13 +399,12 @@ def test_decode_backends_equivalent():
                               cfg.vocab_size)
     outs = {}
     for backend in ("reference", "pallas"):
-        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8,
-                                   backend=backend)
-        mcfg = dataclasses.replace(SERVE_MCFG, backend=backend)
-        decode = jax.jit(build_decode_step(cfg, qcfg, mcfg))
-        caches = init_caches(2, 16, cfg)
-        logits, _ = decode(state.params, caches, {"tokens": toks},
-                           jnp.asarray(0, jnp.int32))
-        outs[backend] = np.asarray(logits)
+        qcfg = dataclasses.replace(QuantConfig.lns_madam(), update=FMT8)
+        with dispatch.configured(backend=backend):
+            decode = jax.jit(build_decode_step(cfg, qcfg, SERVE_MCFG))
+            caches = init_caches(2, 16, cfg)
+            logits, _ = decode(state.params, caches, {"tokens": toks},
+                               jnp.asarray(0, jnp.int32))
+            outs[backend] = np.asarray(logits)
     np.testing.assert_allclose(outs["reference"], outs["pallas"],
                                rtol=1e-3, atol=1e-3)

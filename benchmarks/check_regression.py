@@ -17,6 +17,8 @@ current commit's entry:
   commit. Deterministic counters (prefill token counts, byte ratios) get
   a tight tolerance; wall-clock-derived metrics (tok/s, speedups) get a
   wide one, because trajectory entries may come from different machines.
+  Metrics whose healthy value sits near zero (``obs_overhead_pct``) are
+  tracked in absolute units instead — see ``TRACKED_ABS``.
 
 Waiving: an intentional baseline change passes ``--waive`` (or puts
 ``[bench-baseline]`` in the HEAD commit message) — the gate then reports
@@ -66,6 +68,15 @@ TRACKED = {
     ("serving", "prefix_reused_tokens"): (TOL_TIGHT, True),
     ("train_step", "fwd_weight_bytes_ratio"): (TOL_TIGHT, False),
     ("train_step", "speedup"): (TOL_RATIO, True),
+}
+
+# trend metrics compared in *absolute* units, not relative change:
+# (suite, name) -> (max_abs_worsening, higher_is_better). Used for
+# metrics whose healthy value sits near zero — obs_overhead_pct is the
+# percentage-point cost of running with the observability layer on, and
+# a relative tolerance around ~0 would reject any nonzero jitter.
+TRACKED_ABS = {
+    ("serving", "obs_overhead_pct"): (5.0, False),
 }
 
 # invariants evaluated on the freshest entry alone:
@@ -155,6 +166,19 @@ def check(root: Optional[str] = None, *, suites=("serving", "train_step"),
                     f"baseline sha {prev.get('sha', '?')[:10]})")
             else:
                 print(f"[gate] ok {suite}:{name} {old:.4f} -> {new:.4f}")
+        for (s, name), (tol, up) in TRACKED_ABS.items():
+            if s != suite or name not in vals or name not in base:
+                continue
+            new, old = vals[name], base[name]
+            worse = (old - new) if up else (new - old)
+            if worse > tol:
+                trend_fails.append(
+                    f"{suite}:{name} {old:.4f} -> {new:.4f} "
+                    f"(worsened {worse:.2f} abs vs tol {tol:g}, "
+                    f"baseline sha {prev.get('sha', '?')[:10]})")
+            else:
+                print(f"[gate] ok {suite}:{name} {old:.4f} -> {new:.4f} "
+                      f"(abs)")
 
     if missing:
         print(f"[gate] no trajectory entries for: {', '.join(missing)} — "

@@ -13,7 +13,10 @@ offline serving numbers, ``gateway_*`` keys).
 ``--smoke`` is the CI leg: a short trace, then hard assertions that SSE
 frames arrived *incrementally* (a stream that buffers until completion
 has first-frame == last-frame time), that sampled streams are
-seed-reproducible, that a mid-stream disconnect frees its KV pages, and
+seed-reproducible, that a mid-stream disconnect frees its KV pages, that
+``GET /metrics`` is valid Prometheus exposition text carrying the
+serving counters and latency histograms (``/metrics.json`` stays the
+JSON twin), that ``GET /health`` reports the node's serving context, and
 that shutdown is clean.
 """
 from __future__ import annotations
@@ -48,8 +51,9 @@ async def _read_head(reader) -> Tuple[int, Dict[str, str]]:
         headers[k.strip().lower()] = v.strip()
 
 
-async def request_json(host: str, port: int, method: str, path: str,
-                       body: Optional[dict] = None) -> Tuple[int, dict]:
+async def request_raw(host: str, port: int, method: str, path: str,
+                      body: Optional[dict] = None
+                      ) -> Tuple[int, Dict[str, str], bytes]:
     reader, writer = await asyncio.open_connection(host, port)
     try:
         payload = json.dumps(body).encode() if body is not None else b""
@@ -58,16 +62,21 @@ async def request_json(host: str, port: int, method: str, path: str,
                 f"Content-Length: {len(payload)}\r\n\r\n")
         writer.write(head.encode() + payload)
         await writer.drain()
-        status, _ = await _read_head(reader)
+        status, headers = await _read_head(reader)
         raw = await reader.read()
-        obj = json.loads(raw) if raw else {}
-        return status, obj
+        return status, headers, raw
     finally:
         writer.close()
         try:
             await writer.wait_closed()
         except (ConnectionError, OSError):
             pass
+
+
+async def request_json(host: str, port: int, method: str, path: str,
+                       body: Optional[dict] = None) -> Tuple[int, dict]:
+    status, _, raw = await request_raw(host, port, method, path, body)
+    return status, json.loads(raw) if raw else {}
 
 
 class StreamResult:
@@ -256,12 +265,14 @@ async def _amain(args) -> Dict[str, float]:
         out["gateway_wall_s"] = wall
         out["gateway_offered_rps"] = args.rate
 
-        # queue wait is a server-side number: admission timestamps live in
-        # the engine clock, so read it off /metrics. The gateway maps NaN
-        # percentiles (no completion yet) to JSON null — coerce back to
-        # NaN so arithmetic and the summary print stay number-safe.
-        status, stats = await request_json(host, port, "GET", "/metrics")
-        assert status == 200, f"/metrics failed: {status}"
+        # queue wait is a server-side number: admission timestamps live
+        # in the engine clock, so read it off /metrics.json (the
+        # machine-readable twin of the Prometheus /metrics text). The
+        # gateway maps NaN percentiles (no completion yet) to JSON null
+        # — coerce back to NaN so arithmetic and the print stay safe.
+        status, stats = await request_json(host, port, "GET",
+                                           "/metrics.json")
+        assert status == 200, f"/metrics.json failed: {status}"
         for key in ("queued_p50_s", "queued_p95_s"):
             v = stats.get(key)
             out[f"gateway_{key}"] = float("nan") if v is None else float(v)
@@ -311,8 +322,43 @@ async def _smoke_asserts(host, port, results, stats, engine) -> None:
             await asyncio.sleep(0.05)
         assert engine.allocator.available >= before, \
             "cancelled stream leaked KV pages"
+    # Prometheus scrape: /metrics must be valid exposition text carrying
+    # the serving counters and latency histograms a stock Prometheus
+    # server would ingest (parse_prometheus_text enforces TYPE-before-
+    # sample ordering, float values, and histogram completeness)
+    from repro.obs import parse_prometheus_text
+
+    status, headers, raw = await request_raw(host, port, "GET", "/metrics")
+    assert status == 200, f"/metrics failed: {status}"
+    ctype = headers.get("content-type", "")
+    assert ctype.startswith("text/plain"), f"/metrics content-type {ctype}"
+    metrics = parse_prometheus_text(raw.decode())
+    for want in ("repro_build_info", "repro_completed_total",
+                 "repro_ttft_seconds", "repro_tpot_seconds",
+                 "repro_queue_wait_seconds"):
+        assert want in metrics, f"/metrics missing series {want}"
+    assert metrics["repro_completed_total"]["type"] == "counter"
+    assert metrics["repro_ttft_seconds"]["type"] == "histogram"
+    completed = [v for s, v in metrics["repro_completed_total"]["samples"]
+                 if s["__name__"] == "repro_completed_total"]
+    assert completed and completed[0] >= len(results), \
+        f"completed_total {completed} below client count {len(results)}"
+    ttft_count = [v for s, v in metrics["repro_ttft_seconds"]["samples"]
+                  if s["__name__"] == "repro_ttft_seconds_count"]
+    assert ttft_count and ttft_count[0] > 0, "ttft histogram is empty"
+    # /health carries the readiness context operators page against
+    status, health = await request_json(host, port, "GET", "/health")
+    assert status == 200, f"/health failed: {status}"
+    for want in ("status", "backend", "arch", "checkpoint_id",
+                 "num_slots", "max_len", "max_inflight", "paged"):
+        assert want in health, f"/health missing field {want!r}"
+    assert health["status"] == "ok"
+    if health["paged"]:  # smoke boots a paged engine
+        assert health["alloc_policy"] in ("reserve", "ondemand")
+        assert health["num_pages"] > 0
     print("gateway smoke asserts passed: incremental SSE, seeded "
-          "reproducibility, cancellation frees pages")
+          "reproducibility, cancellation frees pages, Prometheus "
+          "/metrics + /health readiness")
 
 
 def main() -> None:

@@ -76,7 +76,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--mixed", action="store_true",
-                    help="vary prompt/gen lengths across the trace")
+                    help="vary prompt/gen lengths across the trace "
+                         "(alias for --lengths uniform)")
+    ap.add_argument("--lengths", default=None,
+                    choices=("fixed", "uniform", "bimodal"),
+                    help="trace length distribution (bimodal = the "
+                         "serving bench's short-chat/long-doc mix)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="offered load in requests/s (0 = all at t=0)")
     ap.add_argument("--serve-bits", type=int, default=8,
@@ -118,6 +123,17 @@ def main():
                          "head-/column-shards weights, KV pools and the "
                          "paged-attend kernel; default is a (devices, 1) "
                          "mesh (single-device semantics on 1 device)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="enable request span tracing + the step "
+                         "timeline; export Chrome trace-event JSON "
+                         "(opens in Perfetto / chrome://tracing) into "
+                         "DIR when the run ends")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace "
+                         "(TensorBoard format) written to DIR")
+    ap.add_argument("--kernel-stats", action="store_true",
+                    help="per-(op, backend, bitwidth) kernel-time "
+                         "attribution, printed after an offline run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -141,9 +157,16 @@ def main():
         print(f"arch={cfg.name} serve weights {bytes_w / 2**20:.1f} MiB "
               f"(packed {args.serve_bits}-bit LNS codes + scales)")
 
-        lengths = "uniform" if args.mixed else "fixed"
+        lengths = args.lengths or ("uniform" if args.mixed else "fixed")
         max_len = args.max_len or max_trace_len(args.prompt_len,
                                                 args.gen_len, lengths)
+        observer = None
+        if args.trace_dir:
+            from repro.obs import EngineObserver
+            observer = EngineObserver()
+        if args.kernel_stats:
+            from repro.obs import kernel_stats
+            kernel_stats.enable()
         engine = Engine(cfg, qcfg, mcfg, state.params,
                         num_slots=args.slots, max_len=max_len,
                         page_size=args.page_size, num_pages=args.num_pages,
@@ -152,15 +175,27 @@ def main():
                         speculate_k=args.speculate_k,
                         draft_bitwidth=args.draft_bitwidth,
                         spec_autotune=args.spec_autotune,
-                        mesh=mesh if mesh.devices.size > 1 else None)
+                        mesh=mesh if mesh.devices.size > 1 else None,
+                        observer=observer,
+                        checkpoint_id=f"{cfg.name}-seed{args.seed}-init")
         if args.http:
-            _serve_http(engine, args.http, cfg.name, args.max_queue)
+            try:
+                _serve_http(engine, args.http, cfg.name, args.max_queue)
+            finally:
+                if observer is not None:
+                    print("trace:", observer.export(args.trace_dir,
+                                                    tag=cfg.name))
             return
         trace = synthetic_trace(cfg, requests=args.requests,
                                 prompt_len=args.prompt_len,
                                 gen_len=args.gen_len, lengths=lengths,
                                 rate=args.rate, seed=args.seed)
-        agg = engine.run(trace)
+        if args.jax_profile:
+            from repro.obs.kernel_stats import profiler_trace
+            with profiler_trace(args.jax_profile):
+                agg = engine.run(trace)
+        else:
+            agg = engine.run(trace)
 
         print(f"slots={args.slots} requests={args.requests} "
               f"decode_steps={engine.decode_steps} "
@@ -191,6 +226,18 @@ def main():
             head = rs.generated[:8]
             print(f"  req {rs.request.rid}: prompt {rs.request.prompt_len} "
                   f"-> {len(rs.generated)} new tokens, sample {head}")
+        if observer is not None:
+            bd = observer.time_breakdown(agg["wall_s"])
+            print(f"time breakdown: prefill {bd.get('prefill_share', 0):.1%} "
+                  f"decode {bd.get('decode_share', 0):.1%} "
+                  f"spec {bd.get('spec_share', 0):.1%} "
+                  f"host {bd.get('host_share', 0):.1%}")
+            print("trace:", observer.export(args.trace_dir, tag=cfg.name))
+        if args.kernel_stats:
+            from repro.obs import kernel_stats
+            for name, row in kernel_stats.get().items():
+                print(f"  kernel {name}: calls={row['calls']} "
+                      f"traces={row['traces']} time={row['time_s']:.4f}s")
 
 
 if __name__ == "__main__":

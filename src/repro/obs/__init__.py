@@ -1,0 +1,22 @@
+"""Observability layer: request span tracing, engine step timeline,
+Prometheus exposition, and kernel-time attribution (DESIGN.md §13).
+
+Everything here is off by default and near-free when disabled: the
+engine's hot loop checks one attribute (``engine.observer is None``) and
+the kernel dispatch path checks one module global
+(``kernel_stats.active() is None``). The always-on pieces — the driver's
+latency histograms and the ``/metrics`` text renderer — run off the hot
+path entirely (per *finished request*, per scrape).
+"""
+from repro.obs import kernel_stats
+from repro.obs.observer import EngineObserver
+from repro.obs.prom import (Histogram, parse_prometheus_text,
+                            render_prometheus)
+from repro.obs.spans import SpanRing, validate_chrome_trace
+from repro.obs.timeline import StepTimeline
+
+__all__ = [
+    "EngineObserver", "SpanRing", "StepTimeline", "Histogram",
+    "render_prometheus", "parse_prometheus_text", "validate_chrome_trace",
+    "kernel_stats",
+]

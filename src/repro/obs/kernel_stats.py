@@ -1,0 +1,161 @@
+"""Kernel-time attribution for the dispatch layer.
+
+`kernels/dispatch.py` routes every op call through a module-level probe
+in this file. The disabled path — the default — is a single global
+``None`` check, so the serving hot loop pays nothing until someone calls
+:func:`enable`.
+
+When enabled, each call is classified:
+
+* **trace-time** (the probe value is a ``jax.core.Tracer``): the op is
+  being staged into a jit — bump the compile/trace counter for its
+  (op, backend, bitwidth) key. Walltime here would measure tracing, not
+  the kernel, so none is recorded.
+* **eager**: time the call with ``perf_counter``. JAX dispatch is async,
+  so by default this measures *launch* walltime; under the
+  ``block_every`` sampling knob every Nth call additionally runs
+  ``jax.block_until_ready`` on the result and records true device
+  walltime in the ``blocked`` column.
+
+:func:`profiler_trace` wraps ``jax.profiler`` start/stop for the cases
+where attribution needs XLA's own view (``--jax-profile`` on the serve
+CLI).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+__all__ = ["KernelStats", "enable", "disable", "get", "active",
+           "profiler_trace"]
+
+Key = Tuple[str, str, int]  # (op, backend, bitwidth; 0 = n/a)
+
+
+class KernelStats:
+    """Thread-safe per-(op, backend, bitwidth) accumulators."""
+
+    def __init__(self, *, block_every: int = 0):
+        # block_every=0 never blocks; N>0 blocks every Nth eager call
+        self.block_every = block_every
+        self._lock = threading.Lock()
+        self._calls: Dict[Key, int] = {}
+        self._traces: Dict[Key, int] = {}
+        self._time_s: Dict[Key, float] = {}
+        self._blocked_s: Dict[Key, float] = {}
+        self._blocked_n: Dict[Key, int] = {}
+
+    def record_trace(self, key: Key) -> None:
+        with self._lock:
+            self._traces[key] = self._traces.get(key, 0) + 1
+
+    def record_call(self, key: Key, dur_s: float,
+                    blocked_s: Optional[float] = None) -> None:
+        with self._lock:
+            self._calls[key] = self._calls.get(key, 0) + 1
+            self._time_s[key] = self._time_s.get(key, 0.0) + dur_s
+            if blocked_s is not None:
+                self._blocked_s[key] = (
+                    self._blocked_s.get(key, 0.0) + blocked_s)
+                self._blocked_n[key] = self._blocked_n.get(key, 0) + 1
+
+    def should_block(self, key: Key) -> bool:
+        if self.block_every <= 0:
+            return False
+        # the pre-increment count: block on calls 0, N, 2N, ...
+        return self._calls.get(key, 0) % self.block_every == 0
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """``{"op|backend|bits": {calls, traces, time_s, ...}}``."""
+        with self._lock:
+            keys = set(self._calls) | set(self._traces)
+            out: Dict[str, Dict[str, Any]] = {}
+            for key in sorted(keys):
+                op, backend, bits = key
+                row: Dict[str, Any] = {
+                    "op": op, "backend": backend, "bits": bits,
+                    "calls": self._calls.get(key, 0),
+                    "traces": self._traces.get(key, 0),
+                    "time_s": self._time_s.get(key, 0.0),
+                }
+                if key in self._blocked_n:
+                    row["blocked_calls"] = self._blocked_n[key]
+                    row["blocked_s"] = self._blocked_s[key]
+                out[f"{op}|{backend}|b{bits}"] = row
+            return out
+
+    def clear(self) -> None:
+        with self._lock:
+            for d in (self._calls, self._traces, self._time_s,
+                      self._blocked_s, self._blocked_n):
+                d.clear()
+
+
+# module-level singleton the dispatch hot path checks with one load
+_stats: Optional[KernelStats] = None
+
+
+def enable(*, block_every: int = 0) -> KernelStats:
+    """Turn attribution on; returns the live collector."""
+    global _stats
+    _stats = KernelStats(block_every=block_every)
+    return _stats
+
+
+def disable() -> None:
+    global _stats
+    _stats = None
+
+
+def active() -> Optional[KernelStats]:
+    return _stats
+
+
+def get() -> Dict[str, Dict[str, Any]]:
+    """Snapshot of the live collector ({} when disabled)."""
+    return _stats.snapshot() if _stats is not None else {}
+
+
+def observe(op: str, backend: str, bits: int, probe: Any,
+            fn, /, *args, **kwargs):
+    """Run ``fn(*args, **kwargs)`` under attribution.
+
+    ``probe`` is one of the op's array arguments; a ``jax.core.Tracer``
+    there means we are inside jit tracing. Only called when a collector
+    is enabled — dispatch inlines the ``None`` check. The leading
+    parameters are positional-only so forwarded op kwargs (``backend=``,
+    ``bits=``, ...) can never collide with them.
+    """
+    import jax
+
+    stats = _stats
+    if stats is None:  # raced a disable(); just run
+        return fn(*args, **kwargs)
+    key = (op, backend, bits)
+    if isinstance(probe, jax.core.Tracer):
+        stats.record_trace(key)
+        return fn(*args, **kwargs)
+    block = stats.should_block(key)
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    t1 = time.perf_counter()
+    blocked_s = None
+    if block:
+        jax.block_until_ready(out)
+        blocked_s = time.perf_counter() - t0
+    stats.record_call(key, t1 - t0, blocked_s)
+    return out
+
+
+@contextlib.contextmanager
+def profiler_trace(log_dir: str):
+    """``jax.profiler`` trace over the with-block (TensorBoard format)."""
+    import jax
+
+    jax.profiler.start_trace(log_dir)
+    try:
+        yield log_dir
+    finally:
+        jax.profiler.stop_trace()

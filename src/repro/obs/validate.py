@@ -1,0 +1,44 @@
+"""CLI: validate exported Chrome trace files against the span contract.
+
+    python -m repro.obs.validate /tmp/trace/*.trace.json [--require-spec]
+
+Exit 0 when every file parses as a trace-event document and every
+completed request carries its queue/prefill/decode (and, with
+``--require-spec``, spec) spans; exit 1 otherwise. CI round-trips the
+smoke trace through this after the serve CLI exports it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.spans import validate_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="exported *.trace.json files")
+    ap.add_argument("--require-spec", action="store_true",
+                    help="completed requests must also carry spec spans")
+    args = ap.parse_args(argv)
+    status = 0
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            per_request = validate_chrome_trace(
+                doc, require_spec=args.require_spec)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"[obs] FAIL {path}: {e}")
+            status = 1
+            continue
+        spans = sum(sum(v.values()) for v in per_request.values())
+        print(f"[obs] ok {path}: {len(per_request)} completed requests, "
+              f"{spans} request spans, "
+              f"{len(doc['traceEvents'])} events")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,8 +9,14 @@ parsing — the container bakes no web framework) exposing:
                              completion time) and a ``data: [DONE]``
                              terminator
   DELETE /v1/requests/{id}   cancel a live request mid-flight
-  GET    /health             liveness (503 once the driver stops)
-  GET    /metrics            driver snapshot + rolling latency summary
+  GET    /health             readiness + serving context (backend, mesh,
+                             alloc policy, spec config, checkpoint id;
+                             503 once the driver stops)
+  GET    /metrics            Prometheus text exposition (counters,
+                             gauges, TTFT/TPOT/queue-wait histograms) —
+                             scrapeable by stock Prometheus
+  GET    /metrics.json       the JSON snapshot + rolling latency summary
+                             (the pre-Prometheus /metrics payload)
 
 Backpressure: the driver's inflight watermark maps to **429**, a dead
 driver to **503**. A streaming client that disconnects (curl ^C, browser
@@ -209,8 +215,16 @@ class Gateway:
         if method == "GET" and path == "/health":
             ok = self._driver.alive
             await self._json(writer, 200 if ok else 503,
-                             {"status": "ok" if ok else "stopping"})
+                             self._driver.health())
         elif method == "GET" and path == "/metrics":
+            payload = self._driver.prom_text().encode()
+            writer.write(_http_head(
+                status=200,
+                content_type="text/plain; version=0.0.4; charset=utf-8",
+                length=len(payload)))
+            writer.write(payload)
+            await _drain(writer)
+        elif method == "GET" and path == "/metrics.json":
             await self._json(writer, 200, self._driver.stats())
         elif method == "DELETE" and path.startswith("/v1/requests/"):
             tail = path.rsplit("/", 1)[-1].removeprefix("cmpl-")

@@ -38,6 +38,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, Optional, Sequence
 
+from repro.kernels import dispatch
+from repro.obs.prom import Histogram, render_prometheus
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
@@ -65,6 +67,19 @@ class EngineDriver:
         self._completed_total = 0
         self._errors = 0
         self._metrics = deque(maxlen=metrics_window)
+        # lifetime latency histograms for the Prometheus exposition —
+        # fed per *finished request* (off the decode hot path), never
+        # windowed, so scrape deltas are monotone
+        self._hists = {
+            "ttft_seconds": Histogram(
+                "ttft_seconds", "Time to first token (arrival -> first "
+                "token, queueing included)."),
+            "tpot_seconds": Histogram(
+                "tpot_seconds", "Time per output token over the decode "
+                "phase."),
+            "queue_wait_seconds": Histogram(
+                "queue_wait_seconds", "Arrival -> slot admission."),
+        }
         self._stats: Dict[str, Any] = {}
         self._t_start = time.monotonic()
         self._stopping = threading.Event()
@@ -145,6 +160,52 @@ class EngineDriver:
             wall = time.monotonic() - self._t_start
         out.update(summarize(mets, wall))
         return out
+
+    def health(self) -> Dict[str, Any]:
+        """Readiness context for ``GET /health``: what this node is
+        actually serving with — kernel backend, mesh shape, KV layout
+        policy, spec config, and the loaded checkpoint identity."""
+        eng = self._engine
+        out: Dict[str, Any] = {
+            "status": "ok" if self.alive else "stopping",
+            "backend": dispatch.resolve_backend(None),
+            "interpret": dispatch.resolve_interpret(None),
+            "arch": getattr(eng.cfg, "name", None),
+            "checkpoint_id": eng.checkpoint_id,
+            "num_slots": eng.num_slots,
+            "max_len": eng.max_len,
+            "max_inflight": self._max_inflight,
+            "paged": bool(eng.page_size),
+        }
+        if eng.page_size:
+            out["page_size"] = eng.page_size
+            out["num_pages"] = eng.num_pages
+            out["alloc_policy"] = eng.alloc_policy
+            out["prefix_cache"] = eng._prefix_ok
+        mesh = getattr(eng, "_mesh", None)
+        if mesh is not None:
+            out["mesh"] = dict(zip(mesh.axis_names,
+                                   (int(s) for s in mesh.devices.shape)))
+        if eng.spec is not None:
+            out["spec"] = {"k": eng.spec.k,
+                           "draft_bits": eng.spec.draft_bits,
+                           "autotune": eng.spec.autotune}
+        return out
+
+    def prom_text(self) -> str:
+        """The Prometheus text exposition for ``GET /metrics``: the
+        stats snapshot flattened to counters/gauges plus the lifetime
+        latency histograms. Histograms render under the driver lock so
+        a scrape never sees a bucket row torn across an observe()."""
+        stats = self.stats()
+        health = self.health()
+        info = {"arch": health.get("arch"), "backend": health["backend"],
+                "checkpoint_id": health.get("checkpoint_id"),
+                "alloc_policy": health.get("alloc_policy"),
+                "mesh": ",".join(f"{k}={v}" for k, v in
+                                 health.get("mesh", {}).items()) or None}
+        with self._lock:
+            return render_prometheus(stats, self._hists.values(), info)
 
     def shutdown(self, timeout: float = 10.0) -> None:
         """Stop the loop: live requests are aborted (sinks get their
@@ -263,6 +324,12 @@ class EngineDriver:
                 with self._lock:
                     self._metrics.extend(eng.completed)
                     self._completed_total += len(eng.completed)
+                    for m in eng.completed:
+                        self._hists["ttft_seconds"].observe(m.ttft)
+                        self._hists["queue_wait_seconds"].observe(
+                            m.queued_s)
+                        if m.tpot is not None:
+                            self._hists["tpot_seconds"].observe(m.tpot)
             if eng.finished or eng.aborted:
                 eng.drain_finished()
             self._refresh_stats()

@@ -165,6 +165,8 @@ class Engine:
         draft_bitwidth: int = 6,
         spec_autotune: bool = False,
         mesh=None,
+        observer=None,
+        checkpoint_id: Optional[str] = None,
     ):
         if alloc_policy not in ("reserve", "ondemand"):
             raise ValueError(f"alloc_policy must be 'reserve' or "
@@ -255,6 +257,13 @@ class Engine:
         self.token_sink: Optional[Callable[[int, Any], None]] = None
         self.finish_sink: Optional[
             Callable[[int, str, Optional[RequestState]], None]] = None
+        # observability (repro.obs.EngineObserver, DESIGN.md §13): every
+        # hot-path hook site is a single `is not None` check, so the
+        # default costs one attribute load per step — no allocation
+        self.observer = observer
+        # identity of the loaded weights, surfaced by /health; serving
+        # launchers stamp it (checkpoint path / smoke-init tag)
+        self.checkpoint_id = checkpoint_id
         # one fused call per admission: batch-1 prefill through the decode
         # path + scatter of the produced rows into the engine cache
         impl = self._prefill_paged_impl if self._paged else self._prefill_impl
@@ -369,6 +378,26 @@ class Engine:
     @property
     def allocator(self) -> Optional[BlockAllocator]:
         return self.scheduler.allocator
+
+    # ------------------------------------------------------------------
+    # observability (only touched when an observer is attached)
+
+    def attach_observer(self, observer) -> None:
+        """Attach a ``repro.obs.EngineObserver`` (None detaches). Spans
+        and timeline rows are stamped with the engine clock, so attach
+        before (or at) the run whose events you want coherent."""
+        self.observer = observer
+
+    def _obs_gauges(self) -> Dict[str, int]:
+        """The step-timeline gauge row (allocator counts are O(1))."""
+        alloc = self.allocator
+        g = {"running": len(self.scheduler.running),
+             "queued": len(self.queue),
+             "preempts": self.preemptions}
+        if alloc is not None:
+            g["pages_free"] = alloc.free
+            g["pages_cached"] = alloc.cached
+        return g
 
     # ------------------------------------------------------------------
     # jitted bodies
@@ -730,6 +759,8 @@ class Engine:
         self._preempted[rs.request.rid] = rs
         self._release_slot(rs)
         self.queue.requeue(rs.request)
+        if self.observer is not None:
+            self.observer.preempted(rs, self._now())
 
     def _write_span(self, rs: RequestState, lookahead: int) -> tuple:
         """The position span ``[n, last]`` the next ``lookahead`` decode
@@ -933,6 +964,8 @@ class Engine:
                 self._run_sink.append(m)
         if self.finish_sink is not None:
             self.finish_sink(rs.request.rid, reason, rs)
+        if self.observer is not None:
+            self.observer.finished(rs, reason)
 
     def _cache_poisoned(self) -> bool:
         """True when a failed donated call consumed the cache buffers."""
@@ -990,6 +1023,8 @@ class Engine:
                 self.aborted.append(rs)
             if self.finish_sink is not None:
                 self.finish_sink(rid, "aborted", rs)
+            if self.observer is not None:
+                self.observer.aborted_queued(rid, clock())
             return True
         for rs in self.scheduler.running.values():
             if rs.request.rid == rid:
@@ -1028,7 +1063,9 @@ class Engine:
         token-for-token the baseline engine's (see DESIGN.md §11 for the
         per-tensor activation-scale ULP caveat)."""
         bits, _ = self._spec_arm
+        obs = self.observer
         t0 = time.monotonic()
+        t_s0 = self._now() if obs is not None else 0.0
         pos0 = self._slot_len.copy()
         batch_bt = self._put(self._block_tables) if self._paged else None
         samp = {kk: self._put(v) for kk, v in self._samp.items()}
@@ -1052,8 +1089,11 @@ class Engine:
         self._last_tok = s[np.arange(self.num_slots), m - 1].astype(np.int32)
         emitted_total = 0
         per_class: Dict[str, Any] = {}
+        obs_rows: Optional[List] = [] if obs is not None else None
         for slot, rs in list(self.scheduler.running.items()):
             a = int(acc[slot])
+            if obs_rows is not None:
+                obs_rows.append((rs.request.rid, a, int(m[slot])))
             self.spec_drafted += k
             self.spec_accepted += a
             rs.spec_cycles += 1
@@ -1078,6 +1118,10 @@ class Engine:
             if self._ondemand and self.scheduler.running.get(slot) is rs:
                 self._trim_overshoot(rs)
         self.spec_emitted += emitted_total
+        if obs is not None:
+            obs.spec_cycle(t_s0, self._now(), k=k, rows=obs_rows,
+                           emitted=emitted_total,
+                           gauges=self._obs_gauges())
         if self._tuner is not None:
             self._tuner.observe(self._spec_arm, emitted_total,
                                 time.monotonic() - t0, per_class)
@@ -1119,6 +1163,7 @@ class Engine:
         caller's clock; otherwise the engine's monotonic clock is read at
         each event."""
         clock = self._now if now is None else (lambda: now)
+        obs = self.observer
         while self.scheduler.has_free():
             req = self.queue.pop_ready(clock())
             if req is None:
@@ -1155,9 +1200,14 @@ class Engine:
                 rs.generated = resume.generated
                 rs.t_admit = resume.t_admit
                 rs.t_first_token = resume.t_first_token
+            t_p0 = self._now() if obs is not None else 0.0
             try:
                 self._admit(rs, clock, resv)
                 self._admit_fail_streak = 0
+                if obs is not None:
+                    obs.admitted(rs, resumed=resume is not None)
+                    obs.prefill(rs, t_p0, self._now(),
+                                gauges=self._obs_gauges())
             except Exception:
                 # a request that blows up inside admission (a shape that
                 # slipped past validate(), a prefill-time failure) must
@@ -1202,6 +1252,7 @@ class Engine:
             # pressure: advance everyone one plain token this step
             self.spec_fallbacks += 1
 
+        t_d0 = self._now() if obs is not None else 0.0
         tokens = self._last_tok[:, None]  # (B, 1[, K])
         pos = self._put(self._slot_len, jnp.int32)
         batch = {"tokens": self._put(tokens)}
@@ -1223,12 +1274,16 @@ class Engine:
         self._slot_len += 1  # every row's in-graph cursor advanced by 1
         self._samp["step"] += 1
         self._last_tok = toks
-        for slot, rs in list(self.scheduler.running.items()):
+        live = list(self.scheduler.running.items())
+        for slot, rs in live:
             t = toks[slot]
             rs.generated.append(t.tolist() if t.ndim else int(t))
             if self.token_sink is not None:
                 self.token_sink(rs.request.rid, rs.generated[-1])
             self._maybe_finish(rs, clock)
+        if obs is not None:
+            obs.decode_step(t_d0, self._now(), emitted=len(live),
+                            gauges=self._obs_gauges())
         return True
 
     def drain_finished(self) -> List[RequestState]:

@@ -80,9 +80,16 @@ class RequestMetrics:
 
 def percentile(vals: List[float], q: float) -> float:
     """Nearest-rank percentile (NaN when empty); sorts internally —
-    shared by summarize() and the gateway benchmark."""
+    shared by summarize() and the gateway benchmark.
+
+    ``q`` is clamped to [0, 1]: q=0 is the minimum, q=1.0 the maximum
+    (``int(1.0 * (n-1) + 0.5)`` lands exactly on the last rank). An
+    out-of-range q previously indexed from the wrong end of the sorted
+    list (negative index wrap) — clamping makes q<0 the min and q>1 the
+    max instead."""
     if not vals:
         return float("nan")
+    q = min(max(q, 0.0), 1.0)
     vals = sorted(vals)
     i = min(len(vals) - 1, int(q * (len(vals) - 1) + 0.5))
     return vals[i]

@@ -62,6 +62,16 @@ class BlockAllocator:
         """Unreferenced pages kept resident for prefix reuse."""
         return len(self._lru)
 
+    @property
+    def free(self) -> int:
+        """Truly free pages (no content, no registry entry)."""
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        """Pages currently referenced by at least one slot."""
+        return len(self._ref)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """Reserve ``n`` pages (ref=1 each) or None if the pool can't —
         the caller requeues the request; nothing is partially taken."""

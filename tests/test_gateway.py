@@ -127,6 +127,17 @@ async def _http(host, port, method, path, body=None):
     return status, json.loads(data) if data else {}
 
 
+async def _http_text(host, port, method, path):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: 0\r\n\r\n").encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    head, _, data = raw.partition(b"\r\n\r\n")
+    return int(head.split()[1]), data.decode()
+
+
 async def _stream(host, port, body, *, cancel_after=None, delete_via=None):
     """Returns (status, frames, frame_times, finish_reason)."""
     reader, writer = await asyncio.open_connection(host, port)
@@ -186,11 +197,23 @@ def test_health_and_metrics(live_gateway):
     _, _, host, port = live_gateway
     status, obj = _client(_http(host, port, "GET", "/health"))
     assert status == 200 and obj["status"] == "ok"
-    status, obj = _client(_http(host, port, "GET", "/metrics"))
+    # readiness context: what this node serves with
+    for key in ("backend", "arch", "num_slots", "max_len", "paged"):
+        assert key in obj
+    assert obj["paged"] and obj["page_size"] == PAGE
+    # the JSON stats snapshot moved to /metrics.json ...
+    status, obj = _client(_http(host, port, "GET", "/metrics.json"))
     assert status == 200
     for key in ("running", "queued", "inflight", "decode_steps",
                 "queued_p50_s", "tpot_p50_s", "kv_pages_available"):
         assert key in obj
+    # ... and /metrics is Prometheus exposition text
+    status, text = _client(_http_text(host, port, "GET", "/metrics"))
+    assert status == 200
+    from repro.obs import parse_prometheus_text
+    parsed = parse_prometheus_text(text)
+    assert parsed["repro_completed_total"]["type"] == "counter"
+    assert parsed["repro_ttft_seconds"]["type"] == "histogram"
 
 
 def test_unary_completion(live_gateway):

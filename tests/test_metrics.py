@@ -1,0 +1,70 @@
+"""serving.metrics edge cases: nearest-rank percentile bounds, empty and
+all-truncated summaries, and single-token TPOT."""
+import math
+
+import pytest
+
+from repro.serving.metrics import RequestMetrics, percentile, summarize
+
+
+def _metric(rid=0, *, arrival=0.0, t_admit=0.1, t_first=0.5, t_finish=1.5,
+            new_tokens=5, truncated=False):
+    return RequestMetrics(rid=rid, slot=0, arrival=arrival,
+                          t_admit=t_admit, t_first_token=t_first,
+                          t_finish=t_finish, prompt_len=4,
+                          new_tokens=new_tokens, truncated=truncated)
+
+
+def test_percentile_nearest_rank():
+    vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 0.5) == 3.0
+    # q=1.0 must land exactly on the last rank, not wrap to the front
+    assert percentile(vals, 1.0) == 5.0
+    assert percentile([7.0], 1.0) == 7.0
+    # out-of-range q clamps instead of indexing from the wrong end
+    assert percentile(vals, 1.7) == 5.0
+    assert percentile(vals, -0.3) == 1.0
+    assert math.isnan(percentile([], 0.5))
+
+
+def test_summarize_empty():
+    agg = summarize([], wall=2.0)
+    assert agg["completed"] == 0.0
+    assert agg["generated_tokens"] == 0.0
+    assert agg["tokens_per_s"] == 0.0
+    for key in ("ttft_mean_s", "ttft_p95_s", "latency_p50_s",
+                "tpot_p50_s", "spec_accept_rate"):
+        assert math.isnan(agg[key]), key
+    agg0 = summarize([], wall=0.0)
+    assert math.isnan(agg0["tokens_per_s"])
+
+
+def test_summarize_all_truncated():
+    ms = [_metric(i, truncated=True) for i in range(3)]
+    agg = summarize(ms, wall=2.0)
+    assert agg["completed"] == 3.0
+    assert agg["truncated"] == 3.0
+    assert agg["tokens_per_s"] == pytest.approx(15 / 2.0)
+    assert agg["ttft_p95_s"] == pytest.approx(0.5)
+
+
+def test_tpot_single_token_is_none():
+    m = _metric(new_tokens=1, t_first=0.5, t_finish=0.5)
+    assert m.tpot is None
+    assert m.decode_tps is None
+    # a single-token request contributes nothing to the tpot percentile
+    agg = summarize([m], wall=1.0)
+    assert math.isnan(agg["tpot_p50_s"])
+    multi = _metric(new_tokens=5, t_first=0.5, t_finish=1.5)
+    assert multi.tpot == pytest.approx(0.25)
+    assert summarize([m, multi], wall=1.0)["tpot_p50_s"] == \
+        pytest.approx(0.25)
+
+
+def test_spec_accept_rate_none_without_drafts():
+    m = _metric()
+    assert m.spec_accept_rate is None
+    agg = summarize([m], wall=1.0)
+    assert agg["spec_requests"] == 0.0
+    assert math.isnan(agg["spec_accept_rate"])

@@ -17,8 +17,9 @@ current commit's entry:
   commit. Deterministic counters (prefill token counts, byte ratios) get
   a tight tolerance; wall-clock-derived metrics (tok/s, speedups) get a
   wide one, because trajectory entries may come from different machines.
-  Metrics whose healthy value sits near zero (``obs_overhead_pct``) are
-  tracked in absolute units instead — see ``TRACKED_ABS``.
+  Metrics whose healthy value sits near zero (``obs_overhead_pct``, the
+  train step's ``numerics_overhead_pct`` and per-site saturation
+  fractions) are tracked in absolute units instead — see ``TRACKED_ABS``.
 
 Waiving: an intentional baseline change passes ``--waive`` (or puts
 ``[bench-baseline]`` in the HEAD commit message) — the gate then reports
@@ -77,6 +78,14 @@ TRACKED = {
 # a relative tolerance around ~0 would reject any nonzero jitter.
 TRACKED_ABS = {
     ("serving", "obs_overhead_pct"): (5.0, False),
+    # numerics telemetry in the train step: in-graph epilogue counters,
+    # budgeted at 5 abs pts over the plain dispatch step (ISSUE-10 bar)
+    ("train_step", "numerics_overhead_pct"): (5.0, False),
+    # the saturation fraction itself is a health trend: the tiny-LM first
+    # step is seeded/deterministic, so a jump past 5 abs pts means a clip
+    # site started railing codes (format, scale, or update-rule change)
+    ("train_step", "numerics_sat_hi_frac"): (0.05, False),
+    ("train_step", "numerics_sat_lo_frac"): (0.05, False),
 }
 
 # invariants evaluated on the freshest entry alone:

@@ -34,7 +34,8 @@ from repro.training.data import SyntheticLM
 
 __all__ = ["BenchRecord", "SCHEMA_VERSION", "record", "csv_row",
            "kernel_roofline", "timed", "train_tiny_lm",
-           "emit_bench", "read_bench", "write_bench_json"]
+           "train_tiny_lm_numerics", "emit_bench", "read_bench",
+           "write_bench_json"]
 
 # repo root — benchmark JSON artifacts land here so CI can glob them
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -166,6 +167,37 @@ def train_tiny_lm(qcfg: QuantConfig, *, optimizer="madam", steps=60,
         params, st, loss = step(params, st, jax.tree.map(jnp.asarray, b))
         losses.append(float(loss))
     return losses
+
+
+def train_tiny_lm_numerics(qcfg: QuantConfig, *, steps=8, lr=2.0 ** -6,
+                           seed=0, cfg=TINY_LM, batch=8, seq=32,
+                           update_fmt=None):
+    """Instrumented tiny-LM run: loss curve + per-layer update-site health.
+
+    Runs the same LNS-Madam step as :func:`train_tiny_lm` but with the
+    in-graph numerics counters on (``build_train_step(numerics=True)``)
+    and returns ``(losses, per_layer)`` where ``per_layer`` maps layer
+    path -> mean-over-steps of each update-site stat (``sat_hi``,
+    ``qerr_rel``, ``dead_frac``, ...). This is what the quant-error and
+    update-precision suites use to put per-layer trajectory records into
+    their BENCH JSONs.
+    """
+    mcfg = MadamConfig(lr=lr, update_format=update_fmt) if update_fmt \
+        else MadamConfig(lr=lr)
+    data = SyntheticLM(cfg, batch=batch, seq=seq, seed=seed)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, mcfg)
+    step = jax.jit(build_train_step(cfg, qcfg, mcfg, numerics=True))
+    losses: List[float] = []
+    acc: Dict[str, Dict[str, float]] = {}
+    for i, b in zip(range(steps), data):
+        state, m = step(state, jax.tree.map(jnp.asarray, b))
+        losses.append(float(m["loss"]))
+        upd = jax.device_get(m["numerics"]["update"])
+        for layer, stats in upd.items():
+            dst = acc.setdefault(layer, {})
+            for k, v in stats.items():
+                dst[k] = dst.get(k, 0.0) + float(v) / steps
+    return losses, acc
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,121 @@
+"""Numerics-telemetry smoke: the CI leg for DESIGN.md §14.
+
+Runs a few supervised smollm steps with the :class:`NumericsObserver`
+attached and asserts the whole telemetry contract end to end:
+
+* the instrumented train step returns the per-layer numerics aux tree
+  (update-site + grad-encode-site stats for every LNS layer);
+* the observer's Prometheus rendering round-trips through
+  ``parse_prometheus_text`` and carries per-layer *labeled* gauge samples
+  (``repro_numerics_update_sat_hi{layer="..."}``);
+* the exported Chrome trace passes ``validate_train_trace`` — i.e.
+  ``python -m repro.obs.validate <trace> --train`` would accept it —
+  with every REQUIRED_TRAIN_COUNTERS track present;
+* the jsonl step log parses line-per-step;
+* the serving side exposes a numerics block (weight-tree code-rail
+  occupancy + draft re-grid error) through ``Engine.numerics_snapshot``.
+
+Exits nonzero on the first violated assertion; prints a one-line summary
+per check so the CI log reads as a checklist.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.quantizer import QuantConfig
+from repro.obs.numerics import (NumericsObserver, REQUIRED_TRAIN_COUNTERS,
+                                validate_train_trace)
+from repro.obs.prom import parse_prometheus_text
+from repro.optim.madam import MadamConfig
+from repro.training import build_train_step, init_train_state
+from repro.training.data import SyntheticLM
+from repro.training.loop import SupervisorConfig, run_supervised
+
+STEPS = 4
+
+
+def main() -> None:
+    cfg = get_smoke_config("smollm-135m")
+    qcfg = QuantConfig.lns_madam()
+    mcfg = MadamConfig(lr=2.0 ** -7)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        log_path = os.path.join(tmp, "steps.jsonl")
+        obs = NumericsObserver(log_path=log_path, quiet=True)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
+        step = jax.jit(build_train_step(cfg, qcfg, mcfg, numerics=True))
+        data = SyntheticLM(cfg, batch=2, seq=16, seed=0)
+        ckpt = CheckpointManager(os.path.join(tmp, "ckpt"), keep=2)
+        report = run_supervised(
+            step, state, data, ckpt,
+            SupervisorConfig(max_steps=STEPS, save_every=100),
+            device_put_batch=lambda b: jax.tree.map(jnp.asarray, b),
+            observer=obs)
+        assert report.steps_done == STEPS
+        assert obs.n_steps == STEPS
+        print(f"[numerics-smoke] trained {STEPS} steps, observer saw "
+              f"{obs.n_steps}")
+
+        # ---- Prometheus round-trip with per-layer labels
+        text = obs.prom_text()
+        families = parse_prometheus_text(text)
+        assert "repro_numerics_update_sat_hi" in families, \
+            sorted(families)[:20]
+        fam = families["repro_numerics_update_sat_hi"]
+        labeled = [(lab, v) for lab, v in fam["samples"]
+                   if lab.get("layer")]
+        assert labeled, "per-layer labeled samples missing"
+        layers = {lab["layer"] for lab, _ in labeled}
+        assert len(layers) >= 2, layers
+        for lab, v in labeled:
+            assert 0.0 <= v <= 1.0, (lab, v)
+        print(f"[numerics-smoke] prometheus ok: {len(families)} families, "
+              f"{len(labeled)} per-layer saturation samples")
+
+        # ---- Chrome trace export + the --train validator contract
+        paths = obs.export(tmp, tag="smoke")
+        with open(paths["trace"]) as f:
+            doc = json.load(f)
+        stats = validate_train_trace(doc)
+        assert stats["steps"] == STEPS, stats
+        for track in REQUIRED_TRAIN_COUNTERS:
+            assert any(track in t for t in stats["tracks"]), \
+                (track, stats["tracks"])
+        print(f"[numerics-smoke] trace ok: {stats['counter_events']} "
+              f"counter events over {len(stats['tracks'])} tracks")
+
+        # ---- jsonl step log: one parseable row per step
+        obs.close()
+        with open(log_path) as f:
+            lines = [json.loads(x) for x in f if x.strip()]
+        assert len(lines) == STEPS
+        assert all("numerics" in row and "loss" in row for row in lines)
+        print(f"[numerics-smoke] jsonl ok: {len(lines)} rows")
+
+    # ---- serving-side numerics block
+    from repro.serving.engine import Engine
+    eng = Engine(cfg, qcfg, mcfg, state.params, num_slots=2, max_len=32,
+                 speculate_k=2, draft_bitwidth=6)
+    eng._draft_params(6)
+    snap = eng.numerics_snapshot()
+    assert snap["weights"]["elements"] > 0
+    assert 0.0 <= snap["weights"]["maxcode_frac"] <= 1.0
+    dr = snap["draft_requant"]["b6"]
+    assert dr["rel_err_mean"] >= 0.0 and dr["elements"] > 0
+    print(f"[numerics-smoke] serving ok: b6 draft rel_err="
+          f"{dr['rel_err_mean']:.4f} sat_hi={dr['sat_hi_frac']:.4f}")
+    print("[numerics-smoke] all checks passed")
+
+
+if __name__ == "__main__":
+    main()

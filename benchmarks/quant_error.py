@@ -1,5 +1,12 @@
 """Fig. 4 reproduction: weight-update quantization error r_t for GD vs
-multiplicative rules over learning rate and base factor sweeps."""
+multiplicative rules over learning rate and base factor sweeps.
+
+Also appends a *measured* per-layer trajectory to BENCH_quant_error.json:
+a short instrumented tiny-LM run whose in-graph update-site counters
+(DESIGN.md §14) report the realized Thm.-1 quantity ``qerr_rel`` per
+layer — the synthetic Fig.-4 sweep above is the closed-form view, the
+per-layer rows are the same quantity on a live training step.
+"""
 from __future__ import annotations
 
 import time
@@ -8,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, record, train_tiny_lm_numerics
 from repro.core import error_analysis as ea
+from repro.core.quantizer import QuantConfig
 
 
 def run(trials: int = 24, d: int = 2048) -> list[str]:
@@ -48,5 +56,20 @@ def run(trials: int = 24, d: int = 2048) -> list[str]:
     us = (time.monotonic() - t0) * 1e6 / max(len(rows), 1)
     for r in rows:  # backfill the shared per-row wall time
         r.value = us
+
+    # measured per-layer update error from a live instrumented run
+    steps = max(4, min(trials, 12))
+    _, per_layer = train_tiny_lm_numerics(QuantConfig.lns_madam(),
+                                          steps=steps)
+    for layer, stats in sorted(per_layer.items()):
+        rows.append(record(
+            f"layer_qerr_rel.{layer}", stats["qerr_rel"], unit="ratio",
+            derived=f"gap_ratio={stats['qerr_gap_ratio']:.3f} "
+                    f"sat_hi={stats['sat_hi']:.4f} over {steps} steps"))
+    if per_layer:
+        rows.append(record(
+            "layer_qerr_rel_mean",
+            sum(s["qerr_rel"] for s in per_layer.values()) / len(per_layer),
+            unit="ratio", derived=f"{len(per_layer)} layers"))
     # headline check: multiplicative << GD at every setting
     return rows

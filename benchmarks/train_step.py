@@ -69,9 +69,31 @@ def run(steps: int = 3) -> list[str]:
 
     unfused = jax.jit(_unfused_step(cfg, qcfg, mcfg))
     fused = jax.jit(build_train_step(cfg, qcfg, mcfg))
+    instrumented = jax.jit(build_train_step(cfg, qcfg, mcfg, numerics=True))
 
     us_a = timed(lambda: unfused(state0, batch), iters=steps)
     us_b = timed(lambda: fused(state0, batch), iters=steps)
+    # numerics telemetry must ride along for ~free: the counters are
+    # in-graph epilogue sums on tensors the step already touches (the
+    # encode-site stats CSE with the quantizer's own scale/log2 pass), so
+    # the instrumented step is gated in absolute percentage points — the
+    # same TRACKED_ABS mechanism as serving's obs_overhead_pct. Both
+    # sides of the subtraction use the same (larger) iter count: the
+    # overhead is a small difference of two wall times.
+    it = max(steps, 5)
+    us_b2 = timed(lambda: fused(state0, batch), warmup=2, iters=it)
+    us_c = timed(lambda: instrumented(state0, batch), warmup=2, iters=it)
+    overhead_pct = (us_c - us_b2) / us_b2 * 100.0
+
+    # one instrumented step's aggregate health, recorded so the gate can
+    # trend the saturation fraction itself (a jump means a clip site is
+    # suddenly railing codes, whatever the walltime says)
+    _, metrics = instrumented(state0, batch)
+    upd = jax.device_get(metrics["numerics"]["update"])
+    n_layers = max(len(upd), 1)
+    sat_hi = sum(float(s["sat_hi"]) for s in upd.values()) / n_layers
+    sat_lo = sum(float(s["sat_lo"]) for s in upd.values()) / n_layers
+    qerr = sum(float(s["qerr_rel"]) for s in upd.values()) / n_layers
 
     # per-step weight traffic on the forward side: the unfused path writes
     # + reads a dense copy of every packed leaf; dispatch reads the words
@@ -83,6 +105,10 @@ def run(steps: int = 3) -> list[str]:
         "train_step_dispatch", us_b,
         f"fwd_weight_bytes={packed_bytes} "
         f"ratio={packed_bytes / unfused_fwd:.2f} speedup={us_a / us_b:.2f}x"))
+    rows.append(csv_row(
+        "train_step_numerics", us_c,
+        f"overhead={overhead_pct:.1f}% sat_hi={sat_hi:.4f} "
+        f"qerr_rel={qerr:.2e} ({n_layers} layers)"))
     emit_bench("train_step", [
         record("unfused_us_per_step", us_a),
         record("dispatch_us_per_step", us_b),
@@ -93,6 +119,14 @@ def run(steps: int = 3) -> list[str]:
         # silently re-densify the weights (ratio would snap to ~1.0)
         record("fwd_weight_bytes_ratio", packed_bytes / unfused_fwd,
                unit="ratio"),
+        record("numerics_us_per_step", us_c),
+        record("numerics_overhead_pct", overhead_pct, unit="pct",
+               derived="instrumented vs plain dispatch step"),
+        record("numerics_sat_hi_frac", sat_hi, unit="ratio",
+               derived="mean over update-site layers, first step"),
+        record("numerics_sat_lo_frac", sat_lo, unit="ratio"),
+        record("numerics_qerr_rel", qerr, unit="ratio",
+               derived="mean per-layer Thm.-1 update quantization error"),
         record("steps", steps, unit="count"),
     ])
     return rows

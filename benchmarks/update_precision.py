@@ -3,12 +3,18 @@
 Table 5: LNS-Madam at 16-bit vs 32-bit Q_U — degradation should be small.
 Fig. 7: Madam vs SGD/AdamW under the Eq.-4 logarithmic quantized weight
 update as Q_U shrinks 16 -> 10 bits — Madam must degrade most gracefully.
+
+The BENCH trajectory additionally carries per-layer update-site health
+rows from instrumented runs at two Q_U widths, so a precision change
+shows up layer-by-layer (which clip site railed) rather than only as a
+final-loss delta.
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import csv_row, train_tiny_lm
+from benchmarks.common import csv_row, record, train_tiny_lm, \
+    train_tiny_lm_numerics
 from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig
 
@@ -37,4 +43,30 @@ def run(steps: int = 50) -> list[str]:
             rows.append(csv_row(
                 f"fig7_{opt}_u{bits}", us,
                 f"final_loss={sum(losses[-5:]) / 5:.4f}"))
+
+    # per-layer update-site health at a wide and a narrow Q_U: the narrow
+    # grid's qerr_rel should rise roughly with the coarser gap while the
+    # saturation fractions stay near zero (healthy clip sites)
+    nsteps = max(4, min(steps, 10))
+    for bits in (16, 10):
+        fmt = LNSFormat(bits=8, gamma=8).with_bits(bits)
+        _, per_layer = train_tiny_lm_numerics(base, steps=nsteps,
+                                              update_fmt=fmt)
+        for layer, stats in sorted(per_layer.items()):
+            rows.append(record(
+                f"u{bits}_layer_qerr_rel.{layer}", stats["qerr_rel"],
+                unit="ratio",
+                derived=f"sat_hi={stats['sat_hi']:.4f} "
+                        f"dead={stats['dead_frac']:.4f} "
+                        f"over {nsteps} steps"))
+        if per_layer:
+            n = len(per_layer)
+            rows.append(record(
+                f"u{bits}_layer_qerr_rel_mean",
+                sum(s["qerr_rel"] for s in per_layer.values()) / n,
+                unit="ratio", derived=f"{n} layers"))
+            rows.append(record(
+                f"u{bits}_layer_sat_hi_mean",
+                sum(s["sat_hi"] for s in per_layer.values()) / n,
+                unit="ratio"))
     return rows

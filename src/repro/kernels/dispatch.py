@@ -280,42 +280,70 @@ def _requant_pack(packed, src, dst, *, backend=None, interpret=None):
 def madam_step(packed: jax.Array, g: jax.Array, v: jax.Array,
                count: jax.Array, fmt: LNSFormat, *, lr: float,
                beta: float = 0.999, eps: float = 1e-30,
+               with_stats: bool = False,
+               requant_fmt: Optional[LNSFormat] = None,
                backend: Optional[str] = None,
                interpret: Optional[bool] = None):
     """Fused Algorithm-1 step on a packed >=2-D leaf. Returns
-    ``(new_packed, new_v)``.
+    ``(new_packed, new_v)``, or ``(new_packed, new_v, stats)`` with
+    ``with_stats=True``.
 
     One HBM pass over (packed, grad, v): the second-moment EMA, the
     bias-corrected normalization, and the integer exponent step all happen
     on the word in VMEM — the sign bit is carried through untouched
     (multiplicative updates never flip sign). Leaves of any rank fold to
     2-D (the update is elementwise).
+
+    ``with_stats`` folds the numerics-telemetry epilogue (DESIGN.md §14)
+    into the same pass: ``stats`` is a dict of scalar traces keyed by
+    ``MADAM_STAT_KEYS`` — rail saturation fractions, dead-update
+    fraction, realized-vs-ideal step error, code mean, and (when
+    ``requant_fmt`` names a coarser forward grid) the fraction of codes
+    the B_U -> B_W re-grid will clamp.
     """
     if kernel_stats.active() is not None:
         return kernel_stats.observe(
             "madam_step", resolve_backend(backend), fmt.bits, packed,
             _madam_step, packed, g, v, count, fmt, lr=lr, beta=beta,
-            eps=eps, backend=backend, interpret=interpret)
+            eps=eps, with_stats=with_stats, requant_fmt=requant_fmt,
+            backend=backend, interpret=interpret)
     return _madam_step(packed, g, v, count, fmt, lr=lr, beta=beta, eps=eps,
+                       with_stats=with_stats, requant_fmt=requant_fmt,
                        backend=backend, interpret=interpret)
 
 
 def _madam_step(packed, g, v, count, fmt, *, lr, beta=0.999, eps=1e-30,
-                backend=None, interpret=None):
+                with_stats=False, requant_fmt=None, backend=None,
+                interpret=None):
+    from repro.kernels.madam_update import madam_stats_dict, requant_spec
     shape = packed.shape
     if packed.ndim < 2:
         raise ValueError(f"madam_step needs a >=2-D leaf, got {shape}")
     p2 = packed.reshape(-1, shape[-1])
     g2 = g.reshape(p2.shape)
     v2 = v.reshape(p2.shape)
+    requant = requant_spec(fmt, requant_fmt) if with_stats else None
+    vec = None
     if resolve_backend(backend) == "pallas":
-        from repro.kernels.ops import madam_step_packed
-        np_, nv = madam_step_packed(p2, g2, v2, count, fmt, lr=lr, beta=beta,
-                                    eps=eps,
-                                    interpret=resolve_interpret(interpret))
+        from repro.kernels.ops import madam_step_packed, madam_step_packed_stats
+        if with_stats:
+            np_, nv, vec = madam_step_packed_stats(
+                p2, g2, v2, count, fmt, lr=lr, beta=beta, eps=eps,
+                requant=requant, interpret=resolve_interpret(interpret))
+        else:
+            np_, nv = madam_step_packed(
+                p2, g2, v2, count, fmt, lr=lr, beta=beta, eps=eps,
+                interpret=resolve_interpret(interpret))
+    elif with_stats:
+        np_, nv, vec = _madam_step_reference(p2, g2, v2, count, fmt, lr=lr,
+                                             beta=beta, eps=eps,
+                                             with_stats=True, requant=requant)
     else:
         np_, nv = _madam_step_reference(p2, g2, v2, count, fmt, lr=lr,
                                         beta=beta, eps=eps)
+    if with_stats:
+        stats = madam_stats_dict(vec, p2.size, fmt, requant_fmt)
+        return np_.reshape(shape), nv.reshape(shape), stats
     return np_.reshape(shape), nv.reshape(shape)
 
 
@@ -500,15 +528,22 @@ def _paged_attend_reference(q, kp, vp, k_scale, v_scale, block_table,
 
 
 def _madam_step_reference(packed, g, v, count, fmt: LNSFormat, *, lr, beta,
-                          eps):
+                          eps, with_stats=False, requant=None):
     """jnp oracle for the fused packed update — bit-exact to the kernel
-    because both call the one shared ``_step_math`` tile function."""
+    because both call the one shared ``_step_math`` tile function (and,
+    with ``with_stats``, the one shared ``madam_stats_vec`` epilogue)."""
     from repro.kernels.madam_update import _step_math  # cycle-free lazy
     sign_bit = ((packed.astype(jnp.int32) >> (fmt.bits - 1)) & 1)
     _, code = lns_unpack(packed, fmt)
     bc = 1.0 - beta ** count.astype(jnp.float32)
-    new_code, nv = _step_math(code, 1 - 2 * sign_bit, g, v, bc, lr=lr,
-                              beta=beta, eps=eps, gamma=fmt.gamma,
-                              max_code=fmt.max_code)
+    new_code, nv, target = _step_math(code, 1 - 2 * sign_bit, g, v, bc, lr=lr,
+                                      beta=beta, eps=eps, gamma=fmt.gamma,
+                                      max_code=fmt.max_code)
     word = (sign_bit << (fmt.bits - 1)) | new_code.astype(jnp.int32)
-    return word.astype(lns_word_dtype(fmt)), nv
+    word = word.astype(lns_word_dtype(fmt))
+    if not with_stats:
+        return word, nv
+    from repro.kernels.madam_update import madam_stats_vec
+    vec = madam_stats_vec(code, target, new_code, gamma=fmt.gamma,
+                          max_code=fmt.max_code, requant=requant)
+    return word, nv, vec

@@ -279,3 +279,36 @@ def madam_step_packed(
                                          beta=beta, eps=eps, block_r=block,
                                          block_c=block, interpret=interpret)
     return npk[:R, :C], nv[:R, :C]
+
+
+def madam_step_packed_stats(
+    packed: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    count: jax.Array,
+    fmt: LNSFormat,
+    *,
+    lr: float,
+    beta: float = 0.999,
+    eps: float = 1e-30,
+    requant=None,
+    interpret: Optional[bool] = None,
+):
+    """:func:`madam_step_packed` plus the fused numerics-stat epilogue.
+
+    Returns ``(new_packed, new_v, stats_vec)``. Padded elements are a
+    fixed point of the update (target == code == 0) and contribute zero
+    to every stat partial sum, so callers normalize the vector by the
+    *true* element count ``R*C``, never the padded one.
+    """
+    from repro.kernels.madam_update import madam_update_packed_stats_pallas
+    interpret = resolve_interpret(interpret)
+    R, C = packed.shape
+    block = 256
+    pp, _, _ = _pad2(packed, block, block)
+    gp, _, _ = _pad2(g, block, block)
+    vp, _, _ = _pad2(v, block, block, fill=1.0)
+    npk, nv, stats = madam_update_packed_stats_pallas(
+        pp, gp, vp, count, fmt, lr=lr, beta=beta, eps=eps, requant=requant,
+        block_r=block, block_c=block, interpret=interpret)
+    return npk[:R, :C], nv[:R, :C], stats

@@ -55,6 +55,26 @@ def main():
                     choices=["lns8", "fp8", "fp32"])
     ap.add_argument("--ckpt-dir", default="/tmp/lns_madam_ckpt")
     ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="collect per-layer numerics telemetry and export "
+                         "a Chrome trace (train_step spans + numerics "
+                         "counter tracks; opens in Perfetto) into DIR when "
+                         "the run ends")
+    ap.add_argument("--numerics-log", default=None, metavar="FILE",
+                    help="structured jsonl step log (one line per step: "
+                         "loss, wall time, per-layer LNS health)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace "
+                         "(TensorBoard format) written to DIR")
+    ap.add_argument("--kernel-stats", action="store_true",
+                    help="per-(op, backend, bitwidth) kernel-time "
+                         "attribution, printed after the run")
+    ap.add_argument("--quiet", default=True,
+                    type=lambda s: s.lower() not in ("0", "false", "no"),
+                    metavar="BOOL",
+                    help="--quiet=false prints a progress line every "
+                         "--progress-every steps through the observer")
+    ap.add_argument("--progress-every", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -64,34 +84,68 @@ def main():
     mesh = make_host_mesh(data=jax.device_count())
     rules = get_rules(args.arch)
 
+    observer = None
+    if args.trace_dir or args.numerics_log or not args.quiet:
+        from repro.obs import NumericsObserver
+        observer = NumericsObserver(log_path=args.numerics_log,
+                                    quiet=args.quiet,
+                                    progress_every=args.progress_every)
+    if args.kernel_stats:
+        from repro.obs import kernel_stats
+        kernel_stats.enable()
+
     with shard_ctx(mesh, rules):
         state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
         n = sum(x.size for x in jax.tree.leaves(state.params))
         print(f"arch={cfg.name} params={n:,} format={args.format} "
               f"mesh={dict(mesh.shape)}")
         step_fn = jax.jit(build_train_step(
-            cfg, qcfg, mcfg, accum_steps=args.accum_steps))
+            cfg, qcfg, mcfg, accum_steps=args.accum_steps,
+            numerics=observer is not None))
         data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
         ckpt = CheckpointManager(args.ckpt_dir, keep=3)
-        batch_sh = None
 
         def put(b):
             b = jax.tree.map(jnp.asarray, b)
             sh = batch_shardings(b, mesh, rules)
             return jax.device_put(b, sh)
 
+        def run():
+            return run_supervised(
+                step_fn, state, data, ckpt,
+                SupervisorConfig(max_steps=args.steps,
+                                 save_every=args.save_every),
+                device_put_batch=put, observer=observer)
+
         t0 = time.monotonic()
-        report = run_supervised(
-            step_fn, state, data, ckpt,
-            SupervisorConfig(max_steps=args.steps,
-                             save_every=args.save_every),
-            device_put_batch=put)
+        if args.jax_profile:
+            from repro.obs.kernel_stats import profiler_trace
+            with profiler_trace(args.jax_profile):
+                report = run()
+        else:
+            report = run()
         dt = time.monotonic() - t0
         tok = args.steps * args.batch * args.seq
         print(f"done: {report.steps_done} steps in {dt:.1f}s "
               f"({tok / dt:.0f} tok/s) loss {report.losses[0]:.4f} -> "
               f"{report.losses[-1]:.4f}; recovered={report.failures_recovered} "
               f"stragglers={report.straggler_events}")
+        if observer is not None:
+            summary = observer.summary()
+            worst = summary.get("worst_sat_frac")
+            if worst is not None:
+                print(f"numerics: worst saturation {worst:.4f} "
+                      f"({summary['worst_sat_site']}), update qerr mean "
+                      f"{summary.get('update.qerr_rel_mean', 0):.2e}")
+            if args.trace_dir:
+                print("trace:", observer.export(args.trace_dir,
+                                                tag=cfg.name))
+            observer.close()
+        if args.kernel_stats:
+            from repro.obs import kernel_stats
+            for name, row in kernel_stats.get().items():
+                print(f"  kernel {name}: calls={row['calls']} "
+                      f"traces={row['traces']} time={row['time_s']:.4f}s")
 
 
 if __name__ == "__main__":

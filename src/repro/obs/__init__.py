@@ -9,6 +9,7 @@ latency histograms and the ``/metrics`` text renderer — run off the hot
 path entirely (per *finished request*, per scrape).
 """
 from repro.obs import kernel_stats
+from repro.obs.numerics import NumericsObserver, validate_train_trace
 from repro.obs.observer import EngineObserver
 from repro.obs.prom import (Histogram, parse_prometheus_text,
                             render_prometheus)
@@ -16,7 +17,7 @@ from repro.obs.spans import SpanRing, validate_chrome_trace
 from repro.obs.timeline import StepTimeline
 
 __all__ = [
-    "EngineObserver", "SpanRing", "StepTimeline", "Histogram",
-    "render_prometheus", "parse_prometheus_text", "validate_chrome_trace",
-    "kernel_stats",
+    "EngineObserver", "NumericsObserver", "SpanRing", "StepTimeline",
+    "Histogram", "render_prometheus", "parse_prometheus_text",
+    "validate_chrome_trace", "validate_train_trace", "kernel_stats",
 ]

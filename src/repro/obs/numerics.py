@@ -1,0 +1,420 @@
+"""Per-layer LNS numerics health telemetry (DESIGN.md §14).
+
+The paper's central claim is numerical — Thm. 1 bounds the weight-update
+quantization error that LNS + Madam keeps small enough for stable 8-bit
+training — and this module is the repo's visibility into that quantity.
+Three clip sites can silently saturate: the gradient **encode**
+(``lns_encode`` clamps the rounded exponent into ``[0, max_code]``), the
+B_U -> B_W forward **requant** (``lns_requant_packed`` clamps the
+re-gridded code), and the Madam **update** itself (Algorithm 1 clamps the
+stepped exponent). Each is tracked per layer, per step, high and low rail
+separately, as cheap *in-graph* reductions:
+
+* the update-site stats ride the fused Madam kernel's epilogue
+  (``kernels/madam_update.py``) while (code, target, code') are live in
+  VMEM — no second HBM pass over the weights;
+* the encode-site stats (:func:`encode_sat_stats`) re-derive the
+  pre-clip exponent from the same gradient tensor the quantizer reads,
+  so XLA fuses them into the existing encode pass;
+* everything returns as one aux pytree of f32 scalars from the jitted
+  train step — the host syncs once per step (on the loss it already
+  blocks on), never per stat.
+
+:class:`NumericsObserver` is the host-side sink: structured jsonl step
+logs, Prometheus exposition through :func:`repro.obs.prom
+.render_prometheus` (per-layer ``{layer=...}`` gauge families), Chrome
+trace counter tracks next to the spans PR 9 introduced, and the
+aggregate summary the train CLI prints. :func:`validate_train_trace` is
+the CI round-trip contract for the exported training trace.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lns import LNSFormat, is_lns_weight, lns_unpack
+from repro.obs.prom import render_prometheus
+from repro.obs.spans import _check_event
+
+__all__ = ["NumericsObserver", "path_name", "encode_sat_stats",
+           "grad_encode_stats", "tree_code_stats", "validate_train_trace",
+           "REQUIRED_TRAIN_COUNTERS"]
+
+# counter tracks the exported training trace must carry (site/stat) —
+# the per-layer series live in each counter event's args
+REQUIRED_TRAIN_COUNTERS = ("update/sat_hi", "update/sat_lo",
+                           "update/qerr_rel", "update/dead_frac")
+
+
+def path_name(path) -> str:
+    """A pytree key path as a stable dotted layer name.
+
+    Handles the three jax key types (DictKey ``.key``, GetAttrKey
+    ``.name``, SequenceKey ``.idx``) without importing their classes, so
+    it tracks jax versions.
+    """
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return ".".join(parts) or "root"
+
+
+# ---------------------------------------------------------------------------
+# in-graph stat helpers (traced inside the jitted train step)
+
+
+def encode_sat_stats(x: jax.Array, fmt: LNSFormat, scale_axis=None
+                     ) -> Dict[str, jax.Array]:
+    """Rail-saturation fractions for encoding ``x`` into ``fmt``.
+
+    Re-derives the *pre-clip* rounded exponent exactly as
+    :func:`repro.core.lns.lns_encode` computes it (absmax pow2 scale,
+    ``-log2`` with the tiny-floor, round-to-nearest ties-away), then
+    counts what the clamp would cut: ``sat_lo`` is the overflow rail
+    (rounded exponent below code 0 — impossible under a whole-tensor
+    absmax scale, so nonzero means a per-channel scale undershot) and
+    ``sat_hi`` is the underflow rail (values too small for the grid,
+    including exact zeros). ``scale_log2`` tracks the pow2 scale drift.
+    Reads the same tensor the encode itself reads — XLA fuses the two.
+    """
+    from repro.core.lns import compute_scale
+    scale = compute_scale(x, axis=scale_axis)
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf) / scale
+    e = -jnp.log2(jnp.maximum(mag, jnp.finfo(jnp.float32).tiny)) * fmt.gamma
+    rounded = jnp.floor(e + 0.5)
+    inv = 1.0 / float(max(x.size, 1))
+    f32 = lambda m: m.astype(jnp.float32)
+    return {
+        "sat_lo": jnp.sum(f32(rounded < 0)) * inv,
+        "sat_hi": jnp.sum(f32(rounded > fmt.max_code)) * inv,
+        "scale_log2": jnp.mean(jnp.log2(scale)),
+    }
+
+
+def grad_encode_stats(grads, qcfg) -> Dict[str, Dict[str, jax.Array]]:
+    """Per-layer encode-site stats for the gradient quantizer Q_G.
+
+    Covers the >=2-D leaves ``quantize_grads`` actually pushes through
+    the LNS grid; returns ``{}`` when the config doesn't quantize grads.
+    """
+    fmt = getattr(qcfg, "grad", None)
+    if not isinstance(fmt, LNSFormat):
+        return {}
+    axis = getattr(qcfg, "grad_scale_axis", None)
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    out = {}
+    for path, g in flat:
+        if getattr(g, "ndim", 0) >= 2:
+            out[path_name(path)] = encode_sat_stats(g, fmt, axis)
+    return out
+
+
+def tree_code_stats(params) -> Dict[str, Any]:
+    """Host-side code-rail occupancy of every LNSWeight leaf.
+
+    Serving-side health: a tree whose codes pile up at either rail has
+    lost resolution (weights went out of the representable range, or
+    collapsed to the flush-to-zero rail) — the live-weights readiness
+    signal for the ROADMAP's train-while-serving item. One pass over the
+    packed words on device, four scalars back to the host.
+    """
+    tot = 0
+    lo = hi = code_sum = 0.0
+    for leaf in jax.tree.leaves(params, is_leaf=is_lns_weight):
+        if not is_lns_weight(leaf):
+            continue
+        fmt = leaf.fmt
+        _, code = lns_unpack(leaf.packed, fmt)
+        code = code.astype(jnp.int32)
+        lo += float(jnp.sum(code == 0))
+        hi += float(jnp.sum(code == fmt.max_code))
+        code_sum += float(jnp.sum(code))
+        tot += code.size
+    if tot == 0:
+        return {"elements": 0}
+    return {"elements": tot, "code0_frac": lo / tot,
+            "maxcode_frac": hi / tot, "code_mean": code_sum / tot}
+
+
+# ---------------------------------------------------------------------------
+# host-side observer
+
+
+def _to_float_tree(tree) -> Any:
+    """Device scalars -> plain floats (one batched transfer)."""
+    host = jax.device_get(tree)
+    return jax.tree.map(float, host)
+
+
+class NumericsObserver:
+    """Collects the per-step numerics pytree; renders jsonl / Prometheus
+    / Chrome counter tracks / aggregate summaries.
+
+    ``record_step`` is the only per-step call: one batched device->host
+    transfer of the aux scalars (the loop already blocked on the loss,
+    so this adds no extra sync), one jsonl line when ``log_path`` is
+    set, one optional progress print when ``quiet`` is off. Rows retain
+    in a bounded ring (``history``) for the trace export.
+    """
+
+    def __init__(self, *, log_path: Optional[str] = None,
+                 history: int = 4096, quiet: bool = True,
+                 progress_every: int = 10):
+        self.log_path = log_path
+        self.quiet = quiet
+        self.progress_every = max(1, progress_every)
+        self.started_at = time.time()
+        self._t0 = time.perf_counter()
+        self._rows: "deque[Dict[str, Any]]" = deque(maxlen=max(1, history))
+        self._recorded = 0
+        self._log_file = None
+        if log_path:
+            os.makedirs(os.path.dirname(os.path.abspath(log_path)),
+                        exist_ok=True)
+            self._log_file = open(log_path, "w")
+
+    # -- per-step sink ------------------------------------------------------
+
+    def record_step(self, step: int, metrics: Dict[str, Any],
+                    walltime_s: Optional[float] = None) -> Dict[str, Any]:
+        """Record one train step's metrics dict (with or without the
+        ``numerics`` aux pytree). Returns the recorded row."""
+        row: Dict[str, Any] = {
+            "step": int(step),
+            "t": time.perf_counter() - self._t0,
+        }
+        if walltime_s is not None:
+            row["dt_s"] = float(walltime_s)
+        for k in ("loss", "grad_norm"):
+            if k in metrics:
+                try:
+                    row[k] = float(metrics[k])
+                except (TypeError, ValueError):
+                    pass
+        num = metrics.get("numerics")
+        row["numerics"] = _to_float_tree(num) if num else {}
+        self._rows.append(row)
+        self._recorded += 1
+        if self._log_file is not None:
+            self._log_file.write(json.dumps(row) + "\n")
+            self._log_file.flush()
+        if not self.quiet and (step % self.progress_every == 0 or step == 1):
+            print(self._progress_line(row))
+        return row
+
+    def _progress_line(self, row: Dict[str, Any]) -> str:
+        bits = [f"[train] step {row['step']}"]
+        if "loss" in row:
+            bits.append(f"loss {row['loss']:.4f}")
+        if "dt_s" in row:
+            bits.append(f"dt {row['dt_s'] * 1e3:.1f}ms")
+        worst = self._worst_sat(row)
+        if worst is not None:
+            site, layer, frac = worst
+            bits.append(f"sat {frac:.3f} ({site}:{layer})")
+        return "  ".join(bits)
+
+    @staticmethod
+    def _worst_sat(row: Dict[str, Any]):
+        worst = None
+        for site, layers in (row.get("numerics") or {}).items():
+            for layer, stats in layers.items():
+                frac = stats.get("sat_lo", 0.0) + stats.get("sat_hi", 0.0)
+                if worst is None or frac > worst[2]:
+                    worst = (site, layer, frac)
+        return worst
+
+    @property
+    def n_steps(self) -> int:
+        return self._recorded
+
+    def latest(self) -> Optional[Dict[str, Any]]:
+        return self._rows[-1] if self._rows else None
+
+    def close(self) -> None:
+        if self._log_file is not None:
+            self._log_file.close()
+            self._log_file = None
+
+    # -- Prometheus ---------------------------------------------------------
+
+    def prom_stats(self):
+        """``(flat_stats, labeled)`` for ``render_prometheus``.
+
+        Flat stats are aggregates (worst rail saturation, mean update
+        error); ``labeled`` holds the per-layer gauge families keyed
+        ``numerics_<site>_<stat>`` with a ``{layer=...}`` label each.
+        """
+        row = self.latest()
+        if row is None:
+            return {"numerics_steps": 0}, {}
+        stats: Dict[str, Any] = {
+            "numerics_steps": self._recorded,
+            "numerics_last_step": row["step"],
+        }
+        for k in ("loss", "grad_norm", "dt_s"):
+            if k in row:
+                stats[f"numerics_{k}"] = row[k]
+        labeled: Dict[str, List] = {}
+        for site, layers in (row.get("numerics") or {}).items():
+            for layer, per in layers.items():
+                for stat, v in per.items():
+                    name = f"numerics_{site}_{stat}"
+                    labeled.setdefault(name, []).append(
+                        ({"layer": layer}, v))
+        for name, samples in labeled.items():
+            vals = [v for _, v in samples if not math.isnan(v)]
+            if vals:
+                stats[name + "_max"] = max(vals)
+        return stats, labeled
+
+    def prom_text(self, prefix: str = "repro_") -> str:
+        stats, labeled = self.prom_stats()
+        return render_prometheus(stats, info={"kind": "train"},
+                                 prefix=prefix, labeled=labeled)
+
+    # -- Chrome trace -------------------------------------------------------
+
+    def to_chrome_counters(self, stride: int = 1) -> List[Dict[str, Any]]:
+        """Counter tracks (``ph: "C"``): one event per recorded step per
+        (site, stat), with the per-layer series in ``args``."""
+        events: List[Dict[str, Any]] = []
+        for row in list(self._rows)[::max(1, stride)]:
+            ts = row["t"] * 1e6
+            per_track: Dict[str, Dict[str, float]] = {}
+            for site, layers in (row.get("numerics") or {}).items():
+                for layer, per in layers.items():
+                    for stat, v in per.items():
+                        if math.isnan(v):
+                            continue
+                        per_track.setdefault(f"{site}/{stat}", {})[layer] = \
+                            round(v, 6)
+            if "loss" in row:
+                per_track["loss"] = {"loss": row["loss"]}
+            for track, args in sorted(per_track.items()):
+                events.append({"ph": "C", "name": f"numerics/{track}",
+                               "cat": "numerics", "pid": 0, "tid": 0,
+                               "ts": ts, "args": args})
+        return events
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Full trace document: step spans + numerics counter tracks."""
+        events: List[Dict[str, Any]] = [
+            {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+             "args": {"name": "repro training"}},
+            {"ph": "M", "name": "thread_name", "pid": 0, "tid": 0,
+             "args": {"name": "train"}},
+        ]
+        for row in self._rows:
+            if "dt_s" not in row:
+                continue
+            dur = max(row["dt_s"], 0.0) * 1e6
+            args = {"step": row["step"]}
+            if "loss" in row:
+                args["loss"] = row["loss"]
+            events.append({"ph": "X", "name": "train_step", "cat": "train",
+                           "pid": 0, "tid": 0,
+                           "ts": max(row["t"] * 1e6 - dur, 0.0),
+                           "dur": dur, "args": args})
+        events.extend(self.to_chrome_counters())
+        return {"traceEvents": events, "displayTimeUnit": "ms",
+                "otherData": {"steps_recorded": self._recorded}}
+
+    def export(self, trace_dir: str, tag: str = "train") -> Dict[str, str]:
+        """Write ``{tag}-{stamp}.trace.json`` + ``.summary.json``."""
+        os.makedirs(trace_dir, exist_ok=True)
+        stamp = time.strftime("%Y%m%d-%H%M%S")
+        trace_path = os.path.join(trace_dir, f"{tag}-{stamp}.trace.json")
+        with open(trace_path, "w") as f:
+            json.dump(self.to_chrome(), f)
+            f.write("\n")
+        summary_path = os.path.join(trace_dir, f"{tag}-{stamp}.summary.json")
+        with open(summary_path, "w") as f:
+            json.dump(self.summary(), f, indent=2)
+            f.write("\n")
+        return {"trace": trace_path, "summary": summary_path}
+
+    # -- aggregates ---------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        """Worst-case / mean health over the retained window."""
+        out: Dict[str, Any] = {"steps": self._recorded,
+                               "retained": len(self._rows)}
+        agg: Dict[str, List[float]] = {}
+        for row in self._rows:
+            for site, layers in (row.get("numerics") or {}).items():
+                for per in layers.values():
+                    for stat, v in per.items():
+                        if not math.isnan(v):
+                            agg.setdefault(f"{site}.{stat}", []).append(v)
+        for key, vals in sorted(agg.items()):
+            out[key + "_max"] = max(vals)
+            out[key + "_mean"] = sum(vals) / len(vals)
+        worst = self._worst_sat(self.latest() or {})
+        if worst is not None:
+            out["worst_sat_site"] = f"{worst[0]}:{worst[1]}"
+            out["worst_sat_frac"] = worst[2]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# trace validation (the CI round-trip contract for training traces)
+
+
+def validate_train_trace(doc: Dict[str, Any],
+                         require: tuple = REQUIRED_TRAIN_COUNTERS
+                         ) -> Dict[str, Any]:
+    """Validate an exported *training* trace document.
+
+    Structural checks reuse the span-event schema; semantic checks
+    require at least one ``train_step`` complete span and a
+    ``numerics/<site>/<stat>`` counter track (with at least one layer
+    series) for every required (site, stat). Returns summary counts;
+    raises ``ValueError`` on violations.
+    """
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        raise ValueError("trace document must hold a traceEvents list")
+    steps = 0
+    counters: Dict[str, int] = {}
+    series: set = set()
+    for i, ev in enumerate(doc["traceEvents"]):
+        _check_event(ev, i)
+        if ev["ph"] == "X" and ev["name"] == "train_step":
+            steps += 1
+        elif ev["ph"] == "C" and str(ev["name"]).startswith("numerics/"):
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                raise ValueError(
+                    f"traceEvents[{i}] counter {ev['name']!r} has no series")
+            for v in args.values():
+                if not isinstance(v, (int, float)):
+                    raise ValueError(
+                        f"traceEvents[{i}] counter {ev['name']!r} holds a "
+                        f"non-numeric series value")
+            track = ev["name"][len("numerics/"):]
+            counters[track] = counters.get(track, 0) + 1
+            series.update(f"{track}:{k}" for k in args)
+    if steps == 0:
+        raise ValueError("trace holds no train_step span")
+    missing = [t for t in require if not counters.get(t)]
+    if missing:
+        raise ValueError(f"trace lacks numerics counter track(s) {missing}; "
+                         f"has {sorted(counters)}")
+    return {"steps": steps, "counter_events": sum(counters.values()),
+            "tracks": sorted(counters), "series": len(series)}

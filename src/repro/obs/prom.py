@@ -103,8 +103,15 @@ _COUNTERS = {
 def render_prometheus(stats: Dict[str, Any],
                       histograms: Iterable[Histogram] = (),
                       info: Optional[Dict[str, Any]] = None,
-                      prefix: str = "repro_") -> str:
-    """The driver stats snapshot + histograms as exposition text."""
+                      prefix: str = "repro_",
+                      labeled: Optional[Dict[str, List[Tuple[
+                          Dict[str, Any], float]]]] = None) -> str:
+    """The driver stats snapshot + histograms as exposition text.
+
+    ``labeled`` carries multi-sample gauge families —
+    ``{metric_name: [(labels, value), ...]}`` — used by the numerics
+    observer for per-layer series (one sample per ``{layer=...}``).
+    """
     lines: List[str] = []
 
     def emit(name: str, mtype: str, help_text: str,
@@ -128,6 +135,13 @@ def render_prometheus(stats: Dict[str, Any],
         mtype = "counter" if key in _COUNTERS else "gauge"
         emit(prefix + key, mtype, f"Engine stat {key!r}.",
              [("", None, float(value))])
+
+    for key in sorted(labeled or ()):
+        samples = [("", labels, float(v)) for labels, v in labeled[key]
+                   if isinstance(v, (int, float)) and not isinstance(v, bool)
+                   and not math.isnan(float(v))]
+        if samples:
+            emit(prefix + key, "gauge", f"Per-label series {key!r}.", samples)
 
     for hist in histograms:
         snap = hist.snapshot()

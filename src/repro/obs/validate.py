@@ -1,11 +1,14 @@
 """CLI: validate exported Chrome trace files against the span contract.
 
     python -m repro.obs.validate /tmp/trace/*.trace.json [--require-spec]
+    python -m repro.obs.validate /tmp/trace/*.trace.json --train
 
 Exit 0 when every file parses as a trace-event document and every
 completed request carries its queue/prefill/decode (and, with
-``--require-spec``, spec) spans; exit 1 otherwise. CI round-trips the
-smoke trace through this after the serve CLI exports it.
+``--require-spec``, spec) spans; exit 1 otherwise. ``--train`` switches
+to the training-trace contract instead: per-step ``train_step`` spans
+plus the required ``numerics/*`` counter tracks (DESIGN.md §14). CI
+round-trips both the serve and the train smoke exports through this.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import argparse
 import json
 import sys
 
+from repro.obs.numerics import validate_train_trace
 from repro.obs.spans import validate_chrome_trace
 
 
@@ -21,22 +25,33 @@ def main(argv=None) -> int:
     ap.add_argument("paths", nargs="+", help="exported *.trace.json files")
     ap.add_argument("--require-spec", action="store_true",
                     help="completed requests must also carry spec spans")
+    ap.add_argument("--train", action="store_true",
+                    help="validate against the training-trace contract "
+                         "(train_step spans + numerics counter tracks)")
     args = ap.parse_args(argv)
     status = 0
     for path in args.paths:
         try:
             with open(path) as f:
                 doc = json.load(f)
-            per_request = validate_chrome_trace(
-                doc, require_spec=args.require_spec)
+            if args.train:
+                info = validate_train_trace(doc)
+            else:
+                per_request = validate_chrome_trace(
+                    doc, require_spec=args.require_spec)
         except (OSError, ValueError, json.JSONDecodeError) as e:
             print(f"[obs] FAIL {path}: {e}")
             status = 1
             continue
-        spans = sum(sum(v.values()) for v in per_request.values())
-        print(f"[obs] ok {path}: {len(per_request)} completed requests, "
-              f"{spans} request spans, "
-              f"{len(doc['traceEvents'])} events")
+        if args.train:
+            print(f"[obs] ok {path}: {info['steps']} train steps, "
+                  f"{info['counter_events']} counter events over "
+                  f"{len(info['tracks'])} tracks ({info['series']} series)")
+        else:
+            spans = sum(sum(v.values()) for v in per_request.values())
+            print(f"[obs] ok {path}: {len(per_request)} completed requests, "
+                  f"{spans} request spans, "
+                  f"{len(doc['traceEvents'])} events")
     return status
 
 

@@ -40,6 +40,7 @@ from repro.core.lns import (LNSFormat, LNSWeight, is_lns_weight, lns_pack,
                             lns_unpack, lns_weight_encode)
 from repro.kernels import dispatch
 from repro.numerics.rounding import round_nearest, stochastic_round
+from repro.obs.numerics import path_name
 
 __all__ = ["LNSWeight", "MadamConfig", "MadamState", "init_lns_params",
            "is_lns_weight", "materialize", "grad_proxies", "attach_proxies",
@@ -217,7 +218,8 @@ def madam_lns(cfg: MadamConfig):
         nv = (1.0 - cfg.beta) * g * g + cfg.beta * v
         return nv, nv
 
-    def _lns_leaf_reference(p: LNSWeight, g, v, k, bc):
+    def _lns_leaf_reference(p: LNSWeight, g, v, k, bc, *, requant=None,
+                            with_stats=False):
         """jnp fallback: factored v-hat and/or stochastic exponent round."""
         leaf_fmt = p.fmt or fmt
         v, vhat = _v_update(g, v)
@@ -227,19 +229,30 @@ def madam_lns(cfg: MadamConfig):
         target = code.astype(jnp.float32) + step
         rounded = (stochastic_round(k, target) if cfg.stochastic
                    else round_nearest(target))
-        code = jnp.clip(rounded, 0, leaf_fmt.max_code)
-        return p.replace(packed=lns_pack(sign, code, leaf_fmt)), v
+        new_code = jnp.clip(rounded, 0, leaf_fmt.max_code)
+        np_ = p.replace(packed=lns_pack(sign, new_code, leaf_fmt))
+        if not with_stats:
+            return np_, v
+        from repro.kernels.madam_update import madam_stats_dict, madam_stats_vec
+        vec = madam_stats_vec(code, target, new_code, gamma=leaf_fmt.gamma,
+                              max_code=leaf_fmt.max_code, requant=requant)
+        return np_, v, madam_stats_dict(vec, code.size, leaf_fmt)
 
     def init(params) -> MadamState:
         g2 = jax.tree.map(_v_init, params, is_leaf=is_lns_weight)
         return MadamState(g2=g2, count=jnp.zeros((), jnp.int32))
 
-    def update(grads, state: MadamState, params, key: Optional[jax.Array] = None):
+    def update(grads, state: MadamState, params,
+               key: Optional[jax.Array] = None, *, with_stats: bool = False,
+               requant_fmt: Optional[LNSFormat] = None):
         count = state.count + 1
         # bias-corrected second-moment EMA (Algorithm 1 + init correction)
         bc = 1.0 - cfg.beta ** count.astype(jnp.float32)
 
-        leaves_p, treedef = jax.tree_util.tree_flatten(params, is_leaf=is_lns_weight)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=is_lns_weight)
+        paths = [pth for pth, _ in flat]
+        leaves_p = [leaf for _, leaf in flat]
         leaves_g = treedef.flatten_up_to(grads)
         leaves_v = treedef.flatten_up_to(state.g2)
         if cfg.stochastic:
@@ -249,18 +262,39 @@ def madam_lns(cfg: MadamConfig):
         else:
             keys = [None] * len(leaves_p)
 
+        stats = {} if with_stats else None
         new_p, new_v = [], []
-        for p, g, v, k in zip(leaves_p, leaves_g, leaves_v, keys):
+        for pth, p, g, v, k in zip(paths, leaves_p, leaves_g, leaves_v, keys):
             g = g.astype(jnp.float32)
             if is_lns_weight(p):
+                leaf_fmt = p.fmt or fmt
+                leaf_stats = None
                 if cfg.stochastic or isinstance(v, dict) or p.ndim < 2:
-                    np_, nv = _lns_leaf_reference(p, g, v, k, bc)
+                    if with_stats:
+                        from repro.kernels.madam_update import requant_spec
+                        np_, nv, leaf_stats = _lns_leaf_reference(
+                            p, g, v, k, bc,
+                            requant=requant_spec(leaf_fmt, requant_fmt),
+                            with_stats=True)
+                    else:
+                        np_, nv = _lns_leaf_reference(p, g, v, k, bc)
                 else:
-                    # fused kernel: one HBM pass over (word, grad, v)
-                    pk, nv = dispatch.madam_step(
-                        p.packed, g, v, count, p.fmt or fmt, lr=cfg.lr,
-                        beta=cfg.beta, eps=cfg.eps)
+                    # fused kernel: one HBM pass over (word, grad, v) —
+                    # with_stats folds the numerics epilogue into that pass
+                    if with_stats:
+                        pk, nv, leaf_stats = dispatch.madam_step(
+                            p.packed, g, v, count, leaf_fmt, lr=cfg.lr,
+                            beta=cfg.beta, eps=cfg.eps, with_stats=True,
+                            requant_fmt=requant_fmt)
+                    else:
+                        pk, nv = dispatch.madam_step(
+                            p.packed, g, v, count, leaf_fmt, lr=cfg.lr,
+                            beta=cfg.beta, eps=cfg.eps)
                     np_ = p.replace(packed=pk)
+                if with_stats:
+                    leaf_stats["scale_log2"] = jnp.mean(
+                        jnp.log2(p.scale.astype(jnp.float32)))
+                    stats[path_name(pth)] = leaf_stats
                 new_p.append(np_)
                 new_v.append(nv)
             else:
@@ -274,8 +308,10 @@ def madam_lns(cfg: MadamConfig):
                 new_p.append(jnp.clip(w, -cfg.fp_clip, cfg.fp_clip))
                 new_v.append(v)
 
-        return (jax.tree_util.tree_unflatten(treedef, new_p),
-                MadamState(g2=jax.tree_util.tree_unflatten(treedef, new_v), count=count))
+        out = (jax.tree_util.tree_unflatten(treedef, new_p),
+               MadamState(g2=jax.tree_util.tree_unflatten(treedef, new_v),
+                          count=count))
+        return out + (stats,) if with_stats else out
 
     return init, update
 

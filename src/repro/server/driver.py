@@ -190,6 +190,9 @@ class EngineDriver:
             out["spec"] = {"k": eng.spec.k,
                            "draft_bits": eng.spec.draft_bits,
                            "autotune": eng.spec.autotune}
+        # live-weights readiness (DESIGN.md §14): code-rail occupancy of
+        # the serving tree + re-grid error of every built draft view
+        out["numerics"] = eng.numerics_snapshot()
         return out
 
     def prom_text(self) -> str:
@@ -361,5 +364,15 @@ class EngineDriver:
         spec = eng.spec_snapshot()
         if spec is not None:
             snap.update(spec)
+        # flattened numerics gauges (cached inside the engine — this is a
+        # dict walk, not a tree reduction, per refresh)
+        for scope, stats in eng.numerics_snapshot().items():
+            for k, v in stats.items():
+                if isinstance(v, dict):
+                    for k2, v2 in v.items():
+                        if isinstance(v2, (int, float)):
+                            snap[f"numerics_{scope}_{k}_{k2}"] = v2
+                elif isinstance(v, (int, float)):
+                    snap[f"numerics_{scope}_{k}"] = v
         with self._lock:
             self._stats = snap

@@ -558,7 +558,34 @@ class Engine:
         if view is None:
             view = build_draft_params(self.params, bits)
             self._draft_views[bits] = view
+            self._numerics_cache = None  # new view -> re-derive health
         return view
+
+    def numerics_snapshot(self) -> Dict[str, Any]:
+        """Per-tree LNS numerics health for ``/health`` (DESIGN.md §14).
+
+        Weight-tree code-rail occupancy (the live-weights readiness
+        signal: codes piling at either rail mean the serving copy lost
+        resolution) plus the re-grid error of every built draft view.
+        Computed lazily and cached — invalidated when a new draft view is
+        built (and, later, when live-weight swaps land), so the driver's
+        stats refresh never re-reduces the tree.
+        """
+        cached = getattr(self, "_numerics_cache", None)
+        if cached is not None:
+            return cached
+        from repro.obs.numerics import tree_code_stats
+        from repro.serving.spec import draft_requant_error
+        snap: Dict[str, Any] = {"weights": tree_code_stats(self.params)}
+        drafts = {}
+        for bits, view in sorted(getattr(self, "_draft_views", {}).items()):
+            if view is self.params:
+                continue
+            drafts[f"b{bits}"] = draft_requant_error(self.params, view)
+        if drafts:
+            snap["draft_requant"] = drafts
+        self._numerics_cache = snap
+        return snap
 
     # ------------------------------------------------------------------
     # shape bucketing

@@ -26,7 +26,7 @@ from repro.core.lns import LNSWeight, is_lns_weight
 from repro.kernels import dispatch
 
 __all__ = ["SpecConfig", "spec_supported", "build_draft_params",
-           "request_class", "SpecAutotuner"]
+           "draft_requant_error", "request_class", "SpecAutotuner"]
 
 Arm = Tuple[int, int]  # (draft_bits, k)
 
@@ -113,6 +113,51 @@ def build_draft_params(params, bits: int, *, backend: Optional[str] = None):
         return LNSWeight(packed, leaf.scale, None, dst)
 
     return jax.tree.map(one, params, is_leaf=is_lns_weight)
+
+
+def draft_requant_error(params, draft_params) -> Dict[str, float]:
+    """Numerics health of a draft view vs. its target tree.
+
+    The re-grid is the same clamp-after-rescale as every other LNS clip
+    site, so two quantities capture its damage (DESIGN.md §14):
+    ``rel_err_mean`` — mean |decode(draft) - decode(target)| over mean
+    |decode(target)| (the realized re-grid error, the serving analogue of
+    the paper's Thm.-1 update error) — and ``sat_hi_frac`` — the fraction
+    of target codes the down-grid clamps at the coarse grid's underflow
+    rail. Host-side (a handful of reductions per leaf); the engine caches
+    the result per built bitwidth.
+    """
+    from repro.core.lns import lns_decode_packed
+    import jax.numpy as jnp
+    src_leaves = [x for x in jax.tree.leaves(params, is_leaf=is_lns_weight)
+                  if is_lns_weight(x)]
+    dst_leaves = [x for x in jax.tree.leaves(draft_params,
+                                             is_leaf=is_lns_weight)
+                  if is_lns_weight(x)]
+    err = ref = 0.0
+    sat = 0.0
+    n = 0
+    bits = None
+    for s, d in zip(src_leaves, dst_leaves):
+        bits = d.fmt.bits
+        if d is s:  # identity view (bits == fmt.bits): zero error
+            n += s.packed.size
+            continue
+        sv = lns_decode_packed(s.packed, s.fmt, jnp.float32)
+        dv = lns_decode_packed(d.packed, d.fmt, jnp.float32)
+        err += float(jnp.sum(jnp.abs(dv - sv)))
+        ref += float(jnp.sum(jnp.abs(sv)))
+        ratio = s.fmt.gamma // d.fmt.gamma
+        if ratio >= 1:
+            code = (s.packed.astype(jnp.int32)) & s.fmt.max_code
+            sat += float(jnp.sum((code + ratio // 2) // ratio
+                                 > d.fmt.max_code))
+        n += s.packed.size
+    if n == 0:
+        return {"elements": 0}
+    return {"bits": bits, "elements": n,
+            "rel_err_mean": err / ref if ref > 0 else 0.0,
+            "sat_hi_frac": sat / n}
 
 
 def request_class(request) -> str:

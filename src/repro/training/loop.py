@@ -12,6 +12,11 @@ Wraps the jitted step with:
   * an ``on_rebuild`` hook for elastic down-shift: on repeated failures the
     supervisor calls it to rebuild the step/state on a smaller mesh
     (exercised in tests with a host-device mesh swap)
+  * an ``observer`` hook (:class:`repro.obs.numerics.NumericsObserver`):
+    every committed step flows through ``observer.record_step`` —
+    structured jsonl step logging, numerics aux collection, trace export.
+    Progress printing is the observer's job too, behind ``quiet=False``;
+    the supervisor itself never prints.
 """
 from __future__ import annotations
 
@@ -57,6 +62,7 @@ def run_supervised(
     failure_injector: Optional[Callable[[int], None]] = None,
     on_rebuild: Optional[Callable[[Any], Any]] = None,
     device_put_batch: Optional[Callable] = None,
+    observer: Optional[Any] = None,
 ) -> TrainReport:
     report = TrainReport()
     step_times: List[float] = []
@@ -113,6 +119,8 @@ def run_supervised(
         step += 1
         report.steps_done += 1
         report.losses.append(loss)
+        if observer is not None:
+            observer.record_step(step, metrics, walltime_s=dt)
         if step % sup.save_every == 0:
             ckpt.save(step, state, data_cursor=data.cursor)
 

@@ -25,10 +25,12 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.lns import LNSFormat
 from repro.core.quantizer import QuantConfig, quantize_grads
 from repro.models.common import ArchConfig
 from repro.models.model import decode_step as model_decode_step
 from repro.models.model import forward, lm_loss
+from repro.obs.numerics import grad_encode_stats
 from repro.optim.madam import (MadamConfig, MadamState, attach_proxies,
                                grad_proxies, init_lns_params, madam_lns)
 
@@ -60,9 +62,22 @@ def build_train_step(
     accum_steps: int = 1,
     remat: bool = True,
     scan_unroll: int | bool = 1,
+    numerics: bool = False,
 ) -> Callable:
-    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``numerics=True`` adds a ``metrics["numerics"]`` aux pytree of
+    per-layer LNS health scalars (DESIGN.md §14): update-site stats ride
+    the fused Madam kernel's epilogue, encode-site rail stats fuse into
+    the gradient quantizer's pass — all in-graph, one host sync per step
+    (the loss the loop already blocks on).
+    """
     _, opt_update = madam_lns(mcfg)
+    # the forward re-grid target for the requant clip stat: the B_U-grid
+    # weights are re-gridded to the (coarser) B_W forward format each GEMM
+    fwd_fmt = getattr(qcfg, "weight", None) if numerics else None
+    if not isinstance(fwd_fmt, LNSFormat):
+        fwd_fmt = None
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]):
         params = state.params  # packed LNSWeight / fp leaves, never dense
@@ -75,14 +90,20 @@ def build_train_step(
 
         def one_microbatch(diff, mb):
             loss, grads = jax.value_and_grad(loss_fn)(diff, mb)
-            return loss, quantize_grads(grads, qcfg)
+            # encode-site stats read the RAW gradients — the same tensors
+            # quantize_grads is about to push through the LNS grid, so XLA
+            # CSEs the scale/log2 work with the encode itself (measuring
+            # the quantized output instead would double the reductions and
+            # see an already-clamped tensor)
+            enc = grad_encode_stats(grads, qcfg) if numerics else {}
+            return loss, quantize_grads(grads, qcfg), enc
 
         # zeros fold to a broadcast constant inside jit: the carriers cost
         # no HBM; only the gradient outputs are dense
         diff0 = grad_proxies(params, cfg.compute_dtype)
 
         if accum_steps == 1:
-            loss, grads = one_microbatch(diff0, batch)
+            loss, grads, enc_stats = one_microbatch(diff0, batch)
         else:
             def split(x):
                 return x.reshape((accum_steps, x.shape[0] // accum_steps)
@@ -91,23 +112,37 @@ def build_train_step(
 
             def body(carry, mb):
                 loss_acc, g_acc = carry
-                loss, g = one_microbatch(diff0, mb)
+                loss, g, enc = one_microbatch(diff0, mb)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (loss_acc + loss, g_acc), None
+                # enc rides as a scan output: stacked per microbatch,
+                # averaged below (no zero-init tree needed)
+                return (loss_acc + loss, g_acc), enc
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), diff0)
-            (loss, grads), _ = jax.lax.scan(
+            (loss, grads), enc_stack = jax.lax.scan(
                 body, (jnp.zeros((), jnp.float32), zeros), mbs)
             loss = loss / accum_steps
             grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            enc_stats = jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                     enc_stack)
 
-        new_params, new_opt = opt_update(grads, state.opt, state.params)
+        if numerics:
+            new_params, new_opt, upd_stats = opt_update(
+                grads, state.opt, state.params, with_stats=True,
+                requant_fmt=fwd_fmt)
+        else:
+            new_params, new_opt = opt_update(grads, state.opt, state.params)
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree.leaves(grads)))
         metrics = {"loss": loss, "grad_norm": gnorm,
                    "step": state.step.astype(jnp.float32)}
+        if numerics:
+            metrics["numerics"] = {
+                "update": upd_stats,
+                "grad_encode": enc_stats,
+            }
         return TrainState(new_params, new_opt, state.step + 1), metrics
 
     return train_step

@@ -208,3 +208,90 @@ def test_format_validation():
         LNSFormat(bits=8, gamma=3)
     with pytest.raises(ValueError):
         LNSFormat(bits=1, gamma=8)
+
+
+# ---------------------------------------------------------------------------
+# quantization_gap vs a brute-force nearest-code search (ISSUE-10: the
+# Thm.-1 normalizer behind qerr_gap_ratio must be exact, per format)
+
+
+@pytest.mark.parametrize("bits,gamma", [(4, 2), (5, 1), (6, 4), (8, 8),
+                                        (8, 2), (12, 128), (16, 2048)])
+def test_quantization_gap_bruteforce(bits, gamma):
+    """On every on-grid magnitude, the closed form |x|·(2^(1/γ)-1) equals
+    the distance to the next representable value found by brute-force
+    search over the whole code grid."""
+    fmt = LNSFormat(bits=bits, gamma=gamma)
+    grid = np.exp2(-np.arange(fmt.max_code + 1, dtype=np.float64) / gamma)
+    # e >= 1: code 0 is the top of the grid, nothing representable above
+    for e in range(1, min(fmt.max_code + 1, 64)):
+        v = grid[e]
+        above = grid[grid > v * (1 + 1e-12)]
+        brute = above.min() - v
+        got = float(quantization_gap(jnp.asarray(v, jnp.float32), fmt))
+        assert got == pytest.approx(brute, rel=1e-5), (e, got, brute)
+    # off-grid points: the gap is the local grid spacing at that magnitude
+    # (scales linearly — factor-of-2 shifts multiply it by exactly 2)
+    x = jnp.asarray([0.3, 0.6, 1.2], jnp.float32)
+    g = np.asarray(quantization_gap(x, fmt))
+    assert g[1] == pytest.approx(2 * g[0], rel=1e-6)
+    assert g[2] == pytest.approx(2 * g[1], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# with_bits keep_range semantics + the extreme 8 -> 4 re-grid drop
+
+
+def test_with_bits_keep_range_both_directions():
+    fmt = LNSFormat(bits=8, gamma=8)
+    # widening: gamma scales 2x per bit, range preserved (§6.1.1)
+    wide = fmt.with_bits(16)
+    assert wide == LNSFormat(bits=16, gamma=2048)
+    assert wide.dynamic_range == pytest.approx(fmt.dynamic_range, rel=0.01)
+    # narrowing: gamma halves per dropped bit until it floors at 1
+    assert fmt.with_bits(6) == LNSFormat(bits=6, gamma=2)
+    assert fmt.with_bits(6).dynamic_range == pytest.approx(
+        fmt.dynamic_range, rel=0.03)
+    # extreme drop 8 -> 4: gamma would need 16x shrink but only has 8x —
+    # it floors at 1 and the dynamic range shrinks (7.0 vs 15.875)
+    tiny = fmt.with_bits(4)
+    assert tiny == LNSFormat(bits=4, gamma=1)
+    assert tiny.dynamic_range == pytest.approx(7.0)
+    # keep_range=False pins gamma: same grid spacing, truncated range
+    assert fmt.with_bits(4, keep_range=False) == LNSFormat(bits=4, gamma=8)
+    assert fmt.with_bits(16, keep_range=False) == LNSFormat(bits=16, gamma=8)
+    # round-tripping the bitwidth restores the original format
+    assert fmt.with_bits(6).with_bits(8) == fmt
+
+
+def test_requant_extreme_drop_sign_preserved_at_rails():
+    """8 -> 4 bits (γ 8 -> 1, ratio 8): the sign bit must survive at BOTH
+    rails and every coarse code stays in [0, 7] with the hi rail clamped."""
+    fmt8 = LNSFormat(bits=8, gamma=8)
+    dst = fmt8.with_bits(4)
+    assert fmt8.gamma // dst.gamma == 8
+    codes = jnp.arange(fmt8.max_code + 1, dtype=jnp.int32)
+    for sval in (1, -1):
+        sign = jnp.full(codes.shape, sval, jnp.int8)
+        out = np.asarray(lns_requant_packed(
+            lns_pack(sign, codes, fmt8), fmt8, dst))
+        s, c = lns_unpack(jnp.asarray(out), dst)
+        c = np.asarray(c)
+        # sign rides across on every word, including both rail codes
+        np.testing.assert_array_equal(np.asarray(s),
+                                      np.full(codes.shape, sval))
+        # overflow rail (code 0, largest magnitude) maps to coarse code 0
+        assert c[0] == 0
+        # underflow rail (code 127, smallest magnitude) clamps to dst max
+        assert c[-1] == dst.max_code == 7
+        assert c.min() >= 0 and c.max() <= dst.max_code
+        assert np.all(np.diff(c) >= 0)  # monotone through the clamp
+        # round-to-nearest on the un-clamped body: code 20 -> (20+4)//8;
+        # code 60 re-grids past the rail and clamps
+        assert c[20] == 3 and c[60] == dst.max_code
+    # packed MSB check at the rails, directly on the wire word
+    neg = np.asarray(lns_requant_packed(
+        lns_pack(jnp.full((2,), -1, jnp.int8),
+                 jnp.asarray([0, fmt8.max_code], jnp.int32), fmt8),
+        fmt8, dst))
+    assert np.all((neg >> (dst.bits - 1)) & 1 == 1)

@@ -1,0 +1,363 @@
+"""Per-layer LNS numerics telemetry (DESIGN.md §14, ISSUE 10).
+
+Covers the in-graph stat epilogue (brute-force numpy oracle + pallas
+parity), the induced-saturation flag, the host-side NumericsObserver
+round-trips (jsonl / Prometheus with per-layer labels / Chrome trace
+counter tracks + validator), and the serving-side numerics block.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lns import (LNSFormat, compute_scale, lns_encode, lns_pack,
+                            lns_unpack, lns_weight_encode, quantization_gap)
+from repro.kernels import dispatch, ops
+from repro.kernels.madam_update import (MADAM_STAT_KEYS, MADAM_STAT_WIDTH,
+                                        madam_stats_dict, madam_stats_vec,
+                                        requant_spec)
+from repro.obs.numerics import (NumericsObserver, REQUIRED_TRAIN_COUNTERS,
+                                encode_sat_stats, grad_encode_stats,
+                                tree_code_stats, validate_train_trace)
+from repro.obs.prom import parse_prometheus_text
+from repro.optim.madam import MadamConfig, init_lns_params, madam_lns
+
+
+FMT = LNSFormat(bits=8, gamma=8)
+
+
+def _packed_inputs(key, shape=(32, 48)):
+    kx, kg = jax.random.split(key)
+    x = jax.random.normal(kx, shape) * 0.5
+    w = lns_weight_encode(x, FMT)
+    g = jax.random.normal(kg, shape) * 0.01
+    v = jnp.zeros(shape, jnp.float32)
+    return w, g, v
+
+
+# ---------------------------------------------------------------------------
+# stat vector: brute-force numpy oracle
+
+
+def _numpy_stats(packed, g, v, count, fmt, *, lr, beta, eps, requant=None):
+    """Independent float32 numpy re-derivation of the fused epilogue."""
+    w = np.asarray(packed).astype(np.int64)
+    code = (w & fmt.max_code).astype(np.float32)
+    sign = 1.0 - 2.0 * ((w >> (fmt.bits - 1)) & 1).astype(np.float32)
+    g = np.asarray(g, dtype=np.float32)
+    v = np.asarray(v, dtype=np.float32)
+    nv = np.float32(1.0 - beta) * g * g + np.float32(beta) * v
+    bc = np.float32(1.0 - beta ** float(count))
+    gstar = g / np.sqrt(nv / bc + np.float32(eps))
+    target = code + np.float32(lr * fmt.gamma) * gstar * sign
+    rounded = np.floor(target + 0.5)
+    new_code = np.clip(rounded, 0, fmt.max_code)
+    n = code.size
+    stats = {
+        "sat_lo": np.sum(rounded < 0) / n,
+        "sat_hi": np.sum(rounded > fmt.max_code) / n,
+        "dead_frac": np.sum((new_code == code) & (target != code)) / n,
+        "qerr_rel": np.mean(np.abs(
+            2.0 ** (-(new_code - target) / fmt.gamma) - 1.0)),
+        # drift signal: tracks the POST-update code (where weights head)
+        "code_mean": np.mean(new_code),
+    }
+    if requant is not None:
+        r, dst_max = requant
+        stats["requant_sat_hi"] = np.sum(
+            (new_code + r // 2) // r > dst_max) / n
+    else:
+        stats["requant_sat_hi"] = 0.0
+    return stats
+
+
+@pytest.mark.parametrize("requant_fmt", [None, LNSFormat(bits=8, gamma=8)])
+def test_update_stats_match_numpy_bruteforce(key, requant_fmt):
+    src = LNSFormat(bits=16, gamma=2048) if requant_fmt else FMT
+    kx, kg, kv = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (16, 24)) * 0.5
+    w = lns_weight_encode(x, src)
+    g = jax.random.normal(kg, (16, 24)) * 0.02
+    # v > 0 keeps gstar off the exact ±1 fixed point a cold second moment
+    # produces (lr·γ·gstar would land every element on a rounding tie)
+    v = jax.random.uniform(kv, (16, 24), jnp.float32, 1e-5, 1e-3)
+    lr, beta, eps = 2.0 ** -4, 0.999, 1e-30
+    pk, nv, stats = dispatch.madam_step(
+        w.packed, g, v, jnp.ones((), jnp.int32), src, lr=lr, beta=beta,
+        eps=eps, with_stats=True, requant_fmt=requant_fmt,
+        backend="reference")
+    want = _numpy_stats(w.packed, g, v, 1, src, lr=lr, beta=beta, eps=eps,
+                        requant=requant_spec(src, requant_fmt))
+    for k, expect in want.items():
+        got = float(stats[k])
+        assert got == pytest.approx(expect, rel=1e-4, abs=1e-6), \
+            (k, got, expect)
+    # the gap-normalized error references Thm. 1's quantization_gap
+    gap = float(quantization_gap(jnp.ones(()), src))
+    assert float(stats["qerr_gap_ratio"]) == pytest.approx(
+        float(stats["qerr_rel"]) / gap, rel=1e-5)
+    # stats never perturb the update itself
+    pk2, nv2 = dispatch.madam_step(
+        w.packed, g, v, jnp.ones((), jnp.int32), src, lr=lr, beta=beta,
+        eps=eps, backend="reference")
+    assert jnp.array_equal(pk, pk2) and jnp.allclose(nv, nv2)
+
+
+def test_zero_gradient_is_all_fixed_points(key):
+    w, _, v = _packed_inputs(key)
+    g = jnp.zeros(w.shape, jnp.float32)
+    _, _, stats = dispatch.madam_step(
+        w.packed, g, v, jnp.ones((), jnp.int32), FMT, lr=0.1,
+        with_stats=True, backend="reference")
+    for k in ("sat_lo", "sat_hi", "dead_frac", "qerr_rel"):
+        assert float(stats[k]) == 0.0, (k, float(stats[k]))
+
+
+@pytest.mark.interpret
+def test_pallas_stats_match_reference(key):
+    """The fused-kernel epilogue and the jnp reference agree exactly —
+    including the 256-block padding, which must contribute zero."""
+    w, g, v = _packed_inputs(key, shape=(40, 72))  # forces padding
+    count = jnp.ones((), jnp.int32)
+    requant = requant_spec(LNSFormat(bits=16, gamma=2048), FMT)
+    src = LNSFormat(bits=16, gamma=2048)
+    x = jax.random.normal(key, (40, 72)) * 0.5
+    w16 = lns_weight_encode(x, src)
+    with dispatch.configured(backend="reference"):
+        _, _, ref = dispatch.madam_step(
+            w16.packed, g, v, count, src, lr=2.0 ** -4, with_stats=True,
+            requant_fmt=FMT)
+    npk, nvv, vec = ops.madam_step_packed_stats(
+        w16.packed, g, v, count, src, lr=2.0 ** -4, requant=requant,
+        interpret=True)
+    got = madam_stats_dict(vec, w16.packed.size, src, requant_fmt=FMT)
+    assert vec.shape == (MADAM_STAT_WIDTH,)
+    for k in MADAM_STAT_KEYS:
+        assert float(got[k]) == pytest.approx(float(ref[k]), abs=1e-7), k
+
+
+# ---------------------------------------------------------------------------
+# induced saturation: the regime the telemetry exists to flag
+
+
+def test_induced_saturation_is_flagged(key):
+    """An oversized multiplicative LR rails exponent codes on step one
+    (v starts at 0, so gstar == sign(g) and the step is ±lr·γ codes);
+    a healthy LR shows ~zero saturation on the same tree."""
+    params = {"wq": lns_weight_encode(
+        jax.random.normal(key, (32, 32)) * 0.3, FMT)}
+    grads = {"wq": jax.random.normal(jax.random.fold_in(key, 1),
+                                     (32, 32)) * 0.01}
+
+    def run(lr):
+        init, update = madam_lns(MadamConfig(lr=lr))
+        _, _, stats = update(grads, init(params), params, with_stats=True)
+        s = stats["wq"]
+        return float(s["sat_lo"]) + float(s["sat_hi"])
+
+    assert run(2.0 ** -7) == pytest.approx(0.0, abs=1e-6)
+    assert run(8.0) > 0.25  # ±64-code jumps from mid-range hit a rail
+
+
+def test_encode_sat_stats_flags_tiny_bitwidth(key):
+    x = jnp.exp2(jax.random.normal(key, (64, 64)) * 4.0)
+    healthy = encode_sat_stats(x, LNSFormat(bits=8, gamma=8))
+    starved = encode_sat_stats(x, LNSFormat(bits=4, gamma=8))
+    # whole-tensor absmax scale: the overflow rail is unreachable
+    assert float(healthy["sat_lo"]) == 0.0
+    # 3 exponent bits at γ=8 cover <1 octave: most values underflow
+    assert float(starved["sat_hi"]) > float(healthy["sat_hi"])
+    assert float(starved["sat_hi"]) > 0.5
+    # scale_log2 tracks the pow2 scale the encode actually uses
+    assert float(healthy["scale_log2"]) == float(
+        jnp.log2(compute_scale(x)))
+
+
+def test_grad_encode_stats_layers(key):
+    from repro.core.quantizer import QuantConfig
+    qcfg = QuantConfig.lns_madam()
+    grads = {"a": jax.random.normal(key, (8, 8)),
+             "b": jax.random.normal(key, (4,)),  # 1-D: not quantized
+             "nest": {"c": jax.random.normal(key, (8, 4))}}
+    out = grad_encode_stats(grads, qcfg)
+    assert set(out) == {"a", "nest.c"}
+    assert set(out["a"]) == {"sat_lo", "sat_hi", "scale_log2"}
+    assert grad_encode_stats(grads, QuantConfig.full_precision()) == {}
+
+
+# ---------------------------------------------------------------------------
+# observer round-trips
+
+
+def _fake_metrics(step):
+    layers = {"embed.tok": 0.0, "blk0.attn.wq": 0.001 * step}
+    upd = {layer: {"sat_lo": 0.0, "sat_hi": v, "dead_frac": 0.1,
+                   "qerr_rel": 6e-5, "qerr_gap_ratio": 0.25,
+                   "code_mean": 60.0, "requant_sat_hi": 0.0,
+                   "scale_log2": 1.0}
+           for layer, v in layers.items()}
+    enc = {layer: {"sat_lo": 0.0, "sat_hi": 0.0001, "scale_log2": -3.0}
+           for layer in layers}
+    return {"loss": jnp.float32(3.0 - 0.1 * step),
+            "grad_norm": jnp.float32(1.0),
+            "numerics": {"update": upd, "grad_encode": enc}}
+
+
+def test_observer_jsonl_and_summary(tmp_path):
+    log = tmp_path / "steps.jsonl"
+    obs = NumericsObserver(log_path=str(log), quiet=True)
+    for s in range(1, 4):
+        obs.record_step(s, _fake_metrics(s), walltime_s=0.01)
+    obs.close()
+    rows = [json.loads(x) for x in log.read_text().splitlines()]
+    assert [r["step"] for r in rows] == [1, 2, 3]
+    assert all("numerics" in r and "loss" in r for r in rows)
+    summ = obs.summary()
+    assert summ["steps"] == 3
+    assert summ["update.sat_hi_max"] == pytest.approx(0.003)
+    assert summ["worst_sat_site"] == "update:blk0.attn.wq"
+
+
+def test_observer_prometheus_per_layer_labels():
+    obs = NumericsObserver(quiet=True)
+    obs.record_step(1, _fake_metrics(1), walltime_s=0.01)
+    parsed = parse_prometheus_text(obs.prom_text())
+    fam = parsed["repro_numerics_update_sat_hi"]
+    layers = {lab["layer"]: v for lab, v in fam["samples"]
+              if lab.get("layer")}
+    assert set(layers) == {"embed.tok", "blk0.attn.wq"}
+    assert layers["blk0.attn.wq"] == pytest.approx(0.001)
+    # the aggregate alongside the labeled family
+    agg = parsed["repro_numerics_update_sat_hi_max"]["samples"]
+    assert agg[0][1] == pytest.approx(0.001)
+
+
+def test_observer_chrome_trace_validates():
+    obs = NumericsObserver(quiet=True)
+    for s in range(1, 4):
+        obs.record_step(s, _fake_metrics(s), walltime_s=0.01)
+    doc = obs.to_chrome()
+    stats = validate_train_trace(doc)
+    assert stats["steps"] == 3
+    for track in REQUIRED_TRAIN_COUNTERS:
+        assert track in stats["tracks"]
+    # per-layer series ride in the counter args
+    assert stats["series"] >= 2 * len(REQUIRED_TRAIN_COUNTERS)
+
+
+def test_validate_train_trace_rejections():
+    obs = NumericsObserver(quiet=True)
+    obs.record_step(1, _fake_metrics(1), walltime_s=0.01)
+    doc = obs.to_chrome()
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_train_trace({"events": []})
+    no_steps = {"traceEvents": [e for e in doc["traceEvents"]
+                                if e.get("name") != "train_step"]}
+    with pytest.raises(ValueError, match="train_step"):
+        validate_train_trace(no_steps)
+    no_counters = {"traceEvents": [
+        e for e in doc["traceEvents"]
+        if not str(e.get("name", "")).startswith("numerics/update")]}
+    with pytest.raises(ValueError, match="counter track"):
+        validate_train_trace(no_counters)
+
+
+def test_observer_export_files(tmp_path):
+    obs = NumericsObserver(quiet=True)
+    obs.record_step(1, _fake_metrics(1), walltime_s=0.01)
+    paths = obs.export(str(tmp_path), tag="unit")
+    doc = json.loads(open(paths["trace"]).read())
+    assert validate_train_trace(doc)["steps"] == 1
+    summ = json.loads(open(paths["summary"]).read())
+    assert summ["steps"] == 1
+
+
+# ---------------------------------------------------------------------------
+# instrumented train step (real graph, tiny model)
+
+
+def test_train_step_numerics_aux(key):
+    from repro.configs.paper_models import TINY_LM
+    from repro.core.quantizer import QuantConfig
+    from repro.training import build_train_step, init_train_state
+    from repro.training.data import SyntheticLM
+
+    cfg, qcfg = TINY_LM, QuantConfig.lns_madam()
+    mcfg = MadamConfig(lr=2.0 ** -7)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, mcfg)
+    step = jax.jit(build_train_step(cfg, qcfg, mcfg, numerics=True))
+    data = SyntheticLM(cfg, batch=2, seq=8, seed=0)
+    batch = jax.tree.map(jnp.asarray, next(iter(data)))
+    new_state, metrics = step(state, batch)
+    num = metrics["numerics"]
+    assert set(num) == {"update", "grad_encode"}
+    assert len(num["update"]) >= 4  # every LNS layer reports
+    for layer, stats in num["update"].items():
+        for k in MADAM_STAT_KEYS + ("scale_log2",):
+            assert k in stats, (layer, k)
+        assert 0.0 <= float(stats["sat_hi"]) <= 1.0
+    # healthy config: nothing rails, update error near the RTN floor
+    worst = max(float(s["sat_lo"]) + float(s["sat_hi"])
+                for s in num["update"].values())
+    assert worst < 0.05
+    # plain step carries no numerics key (no silent overhead)
+    plain = jax.jit(build_train_step(cfg, qcfg, mcfg))
+    _, m2 = plain(state, batch)
+    assert "numerics" not in m2
+
+
+# ---------------------------------------------------------------------------
+# serving side
+
+
+def test_tree_code_stats(key):
+    params = {"a": lns_weight_encode(jax.random.normal(key, (8, 8)), FMT),
+              "b": jnp.ones((4,))}
+    out = tree_code_stats(params)
+    assert out["elements"] == 64
+    assert 0.0 <= out["code0_frac"] <= 1.0
+    assert 0.0 <= out["maxcode_frac"] <= 1.0
+    assert 0.0 < out["code_mean"] < FMT.max_code
+    assert tree_code_stats({"x": jnp.ones((2,))}) == {"elements": 0}
+
+
+def test_engine_numerics_snapshot_and_health(smoke_serving_setup):
+    from repro.serving import Engine
+    from repro.server.driver import EngineDriver
+
+    cfg, qcfg, mcfg, params = smoke_serving_setup
+    eng = Engine(cfg, qcfg, mcfg, params, num_slots=2, max_len=32,
+                 speculate_k=2, draft_bitwidth=6)
+    snap = eng.numerics_snapshot()
+    assert snap["weights"]["elements"] > 0
+    assert "draft_requant" not in snap  # no view built yet
+    assert eng.numerics_snapshot() is snap  # cached
+    eng._draft_params(6)
+    snap2 = eng.numerics_snapshot()
+    assert snap2 is not snap  # view build invalidates the cache
+    dr = snap2["draft_requant"]["b6"]
+    assert dr["bits"] == 6 and dr["elements"] > 0
+    assert dr["rel_err_mean"] > 0.0  # a 6-bit re-grid is lossy
+    assert 0.0 <= dr["sat_hi_frac"] <= 1.0
+
+    driver = EngineDriver(eng, max_inflight=4).start()
+    try:
+        h = driver.health()
+        assert h["numerics"]["weights"]["elements"] == \
+            snap["weights"]["elements"]
+    finally:
+        driver.shutdown()
+
+
+def test_draft_requant_error_identity_is_zero(smoke_serving_setup):
+    from repro.serving.spec import build_draft_params, draft_requant_error
+
+    _, _, _, params = smoke_serving_setup
+    view8 = build_draft_params(params, 8)
+    out = draft_requant_error(params, view8)
+    assert out["rel_err_mean"] == 0.0 and out["sat_hi_frac"] == 0.0
+    view6 = build_draft_params(params, 6)
+    lossy = draft_requant_error(params, view6)
+    assert lossy["rel_err_mean"] > 0.0
